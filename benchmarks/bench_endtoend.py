@@ -1,0 +1,45 @@
+"""Fig.6 — PLA vs vanilla + two partial ablations, RPS / mean / P90
+across concurrency 1..64, temporal (1 instance) and spatial (8
+instances).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import class_stats, routed_sim, shared_sim
+from repro.sim.workload import WorkloadConfig, closed_loop_clients
+
+UNTIL = 30.0
+VARIANTS = ("vanilla", "graph_only", "disagg_only", "pla_full")
+
+
+def _run_temporal(variant: str, conc: int):
+    sim = shared_sim(variant)
+    sim.add_clients(closed_loop_clients(conc, WorkloadConfig(), seed=6))
+    return sim.run(UNTIL)
+
+
+def _run_spatial(variant: str, conc: int):
+    router = "pool" if variant in ("pla_full", "disagg_only") else \
+        "least_loaded"
+    sim = routed_sim(variant, 8, router=router,
+                     control=(variant == "pla_full"))
+    sim.add_clients(closed_loop_clients(conc, WorkloadConfig(), seed=6))
+    return sim.run(UNTIL)
+
+
+def run() -> List[Dict]:
+    rows = []
+    for conc in (1, 4, 16, 64):
+        for variant in VARIANTS:
+            tr = _run_temporal(variant, conc)
+            rows.append({"bench": "fig6-temporal",
+                         "tag": f"{variant}/c{conc}",
+                         **class_stats(tr, None, UNTIL)})
+    for conc in (8, 32, 64, 128):
+        for variant in VARIANTS:
+            tr = _run_spatial(variant, conc)
+            rows.append({"bench": "fig6-spatial",
+                         "tag": f"{variant}/c{conc}",
+                         **class_stats(tr, None, UNTIL)})
+    return rows

@@ -1,0 +1,51 @@
+"""Fig.1 + Fig.3 — intra-prefill interference.
+
+P90 TTFT of long (Fig.1) / short (Fig.3) requests under varying
+concurrency of the other class, vanilla FCFS co-batching (the SGLang
+behaviour the paper measures) vs isolated (dashed lines) vs LAPS
+disaggregation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import class_stats, shared_sim
+from repro.sim.workload import WorkloadConfig, closed_loop_clients
+
+UNTIL = 30.0
+# SGLang-like prefill admission: max_prefill_tokens ≈ 8k — one long fills
+# a batch, shorts pack between them (the co-admission the paper studies)
+BUDGET = 8192
+
+
+def _run(variant: str, n_long: int, n_short: int, seed: int = 3):
+    sim = shared_sim(variant, mem_budget_tokens=BUDGET)
+    clients = []
+    if n_long:
+        clients += closed_loop_clients(n_long, WorkloadConfig(), seed,
+                                       long_only=True)
+    if n_short:
+        clients += closed_loop_clients(n_short, WorkloadConfig(), seed + 1,
+                                       short_only=True)
+    sim.add_clients(clients)
+    tracker = sim.run(UNTIL)
+    return tracker
+
+
+def run() -> List[Dict]:
+    rows = []
+    # Fig.1: long P90 vs rising short concurrency (fixed 4 long clients)
+    for n_short in (0, 8, 16, 32, 64):
+        for variant in ("vanilla", "pla_full"):
+            tr = _run(variant, n_long=4, n_short=n_short)
+            s = class_stats(tr, "long", UNTIL)
+            rows.append({"bench": "fig1", "tag": f"{variant}/short{n_short}",
+                         "class": "long", **s})
+    # Fig.3: short P90 vs rising long concurrency (fixed 16 short clients)
+    for n_long in (0, 2, 4, 8):
+        for variant in ("vanilla", "pla_full"):
+            tr = _run(variant, n_long=n_long, n_short=16)
+            s = class_stats(tr, "short", UNTIL)
+            rows.append({"bench": "fig3", "tag": f"{variant}/long{n_long}",
+                         "class": "short", **s})
+    return rows

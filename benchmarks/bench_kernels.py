@@ -1,0 +1,71 @@
+"""Per-kernel timing: Pallas (interpret on CPU — correctness-path cost)
+vs the jnp oracle (XLA-compiled), with derived bandwidth estimates.
+On TPU the same harness times the compiled kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attn
+from repro.kernels.flash_attn import flash_attn
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.key(0)
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)                                  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6   # µs
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    ks = jax.random.split(KEY, 8)
+
+    b, lq, s, hq, hkv, d = 1, 128, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, lq, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    offs = jnp.zeros((b,), jnp.int32)
+    bytes_moved = (q.size + 2 * k.size + q.size) * 4
+    t_pal = _time(lambda *a: flash_attn(*a, block_q=64, block_k=64), q, k, v, offs)
+    t_ref = _time(lambda *a: ref.ref_flash_attn(*a), q, k, v)
+    rows.append({"bench": "kernels", "tag": "flash_attn/interp",
+                 "mean_ms": t_pal / 1e3, "us": round(t_pal, 1),
+                 "gbps_ref": round(bytes_moved / (t_ref * 1e-6) / 1e9, 2)})
+    rows.append({"bench": "kernels", "tag": "flash_attn/ref",
+                 "mean_ms": t_ref / 1e3, "us": round(t_ref, 1)})
+
+    qd = jax.random.normal(ks[3], (4, hq, d))
+    kd = jax.random.normal(ks[4], (4, 512, hkv, d))
+    vd = jax.random.normal(ks[5], (4, 512, hkv, d))
+    lens = jnp.full((4,), 512, jnp.int32)
+    t_pal = _time(lambda *a: decode_attn(*a, block_k=128), qd, kd, vd, lens)
+    t_ref = _time(ref.ref_decode_attn, qd, kd, vd, lens)
+    rows.append({"bench": "kernels", "tag": "decode_attn/interp",
+                 "mean_ms": t_pal / 1e3, "us": round(t_pal, 1)})
+    rows.append({"bench": "kernels", "tag": "decode_attn/ref",
+                 "mean_ms": t_ref / 1e3, "us": round(t_ref, 1)})
+
+    bb, ll, nh, hd, ds = 1, 256, 4, 32, 32
+    x = jax.random.normal(ks[6], (bb, ll, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (bb, ll, nh)))
+    a = -jnp.exp(jax.random.normal(ks[0], (nh,)) * 0.3)
+    bm = jax.random.normal(ks[1], (bb, ll, nh, ds))
+    cm = jax.random.normal(ks[2], (bb, ll, nh, ds))
+    h0 = jnp.zeros((bb, nh, hd, ds))
+    t_pal = _time(lambda *a_: ssd_scan(*a_, chunk=64), x, dt, a, bm, cm, h0)
+    t_ref = _time(ref.ref_ssd_scan, x, dt, a, bm, cm)
+    rows.append({"bench": "kernels", "tag": "ssd_scan/interp",
+                 "mean_ms": t_pal / 1e3, "us": round(t_pal, 1)})
+    rows.append({"bench": "kernels", "tag": "ssd_scan/ref",
+                 "mean_ms": t_ref / 1e3, "us": round(t_ref, 1)})
+    return rows

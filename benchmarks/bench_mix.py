@@ -1,0 +1,33 @@
+"""Fig.8 — prefill throughput: PD disaggregation vs Mix-with-Decode,
+1 and 2 instances, across concurrency."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import shared_sim, routed_sim
+from repro.sim.workload import WorkloadConfig, closed_loop_clients
+
+UNTIL = 30.0
+
+
+def _run(mode: str, n_inst: int, conc: int) -> float:
+    if n_inst == 1:
+        sim = shared_sim("pla_full", mode=mode)
+    else:
+        sim = routed_sim("pla_full", n_inst, router="pool", mode=mode)
+    sim.add_clients(closed_loop_clients(conc, WorkloadConfig(), seed=8))
+    sim.run(UNTIL)
+    return sim.prefill_rps(UNTIL)
+
+
+def run() -> List[Dict]:
+    rows = []
+    for n_inst in (1, 2):
+        for conc in (8, 32, 64):
+            pd = _run("pd", n_inst, conc)
+            mix = _run("mix", n_inst, conc)
+            rows.append({"bench": "fig8", "tag": f"i{n_inst}/c{conc}",
+                         "pd_rps": round(pd, 2), "mix_rps": round(mix, 2),
+                         "mix_over_pd": round(mix / pd, 3) if pd else 0.0,
+                         "mean_ms": 0.0})
+    return rows

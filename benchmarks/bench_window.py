@@ -1,0 +1,46 @@
+"""Fig.5 — latency/throughput trade-off over the waiting window.
+
+64-way short-prefill concurrency (paper setting), window forced to fixed
+values by pinning [w_min, w_max]; AWD's adaptive point is run last.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import MODEL, COST, class_stats
+from repro.core import Variant, make_policy
+from repro.core.awd import AWDConfig
+from repro.sim import ClusterSim, SimConfig
+from repro.sim.workload import WorkloadConfig, lmsys_like_requests
+
+UNTIL = 40.0
+RATE = 170.0     # above single-request-batch capacity (~66 rps): tiny
+# windows saturate the instance, larger windows buy batching efficiency —
+# the paper's Fig.5 trade-off
+
+
+def _run(w_fixed=None):
+    kw = {}
+    if w_fixed is not None:
+        kw["awd_cfg"] = AWDConfig(w_min=w_fixed, w_max=w_fixed,
+                                  t_max=10.0, sigma=-1.0)   # pure window
+    pol = make_policy(Variant("pla_full"), MODEL, threshold=256, **kw)
+    sim = ClusterSim(1, lambda i: None, COST, SimConfig(router="shared"),
+                     shared_policy=pol)
+    wl = WorkloadConfig(first_mu=3.4, first_sigma=0.7, mean_turns=6.0,
+                        slo_ttft=None)
+    reqs = [r for r in lmsys_like_requests(int(RATE * UNTIL), RATE, wl,
+                                           seed=11)
+            if r.new_tokens < 256]
+    sim.add_requests(reqs)
+    tracker = sim.run(UNTIL + 30)
+    return class_stats(tracker, "short", UNTIL)
+
+
+def run() -> List[Dict]:
+    rows = []
+    for w_ms in (0.5, 2, 5, 10, 20, 50, 100):
+        s = _run(w_fixed=w_ms / 1e3)
+        rows.append({"bench": "fig5", "tag": f"W={w_ms}ms", **s})
+    rows.append({"bench": "fig5", "tag": "W=adaptive(AWD)", **_run(None)})
+    return rows

@@ -1,0 +1,80 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import H200_QWEN32B, Variant, make_policy  # noqa: E402
+from repro.core.controller import ControllerConfig, PressureController  # noqa: E402
+from repro.core.scheduler import PoolPolicy  # noqa: E402
+from repro.core.slo import SLOTracker, percentile  # noqa: E402
+from repro.sim import ClusterSim, H200_32B, SimConfig  # noqa: E402
+from repro.sim.workload import (WorkloadConfig, closed_loop_clients,  # noqa: E402
+                                lmsys_like_requests)
+
+MODEL = H200_QWEN32B
+COST = H200_32B
+THRESHOLD = 256.0          # operational long/short boundary (paper: <256 short)
+
+
+def shared_sim(variant: str, n_instances: int = 1, mode: str = "pd",
+               **policy_kw) -> ClusterSim:
+    pol = make_policy(Variant(variant), MODEL, threshold=THRESHOLD,
+                      **policy_kw)
+    return ClusterSim(n_instances, lambda i: None, COST,
+                      SimConfig(router="shared", mode=mode),
+                      shared_policy=pol)
+
+
+def routed_sim(variant: str, n_instances: int, router: str = "least_loaded",
+               mode: str = "pd", control: bool = False) -> ClusterSim:
+    if router == "pool":
+        half = n_instances // 2
+        def factory(i):
+            return PoolPolicy(MODEL, pool="short" if i < half else "long",
+                              threshold=THRESHOLD)
+        ctrl = PressureController(ControllerConfig(t_cool=2.0, period=1.0)) \
+            if control else None
+        return ClusterSim(n_instances, factory, COST,
+                          SimConfig(router="pool", mode=mode,
+                                    control_period=1.0 if control else 0.0),
+                          classifier=lambda r: "short"
+                          if r.new_tokens < THRESHOLD else "long",
+                          controller=ctrl)
+    def factory(i):
+        return make_policy(Variant(variant), MODEL, threshold=THRESHOLD)
+    return ClusterSim(n_instances, factory, COST,
+                      SimConfig(router=router, mode=mode))
+
+
+def class_stats(tracker: SLOTracker, cls: Optional[str] = None,
+                horizon: float = 1.0) -> Dict:
+    rs = tracker.finished
+    if cls == "short":
+        rs = [r for r in rs if r.new_tokens < THRESHOLD]
+    elif cls == "long":
+        rs = [r for r in rs if r.new_tokens >= THRESHOLD]
+    tt = [r.ttft() for r in rs if r.ttft() is not None]
+    den = [r for r in rs if r.deadline is not None]
+    viol = sum(1 for r in den
+               if r.finish_time is None or r.finish_time > r.deadline)
+    return {
+        "n": len(rs),
+        "rps": len(rs) / horizon,
+        "mean_ms": 1e3 * sum(tt) / len(tt) if tt else 0.0,
+        "p90_ms": 1e3 * percentile(tt, 0.9),
+        "p99_ms": 1e3 * percentile(tt, 0.99),
+        "viol": viol / len(den) if den else 0.0,
+    }
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """Print the `name,us_per_call,derived` CSV contract plus the table."""
+    for row in rows:
+        us = row.get("mean_ms", 0.0) * 1e3
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k not in ("bench",))
+        print(f"{name}/{row.get('tag', '')},{us:.1f},{derived}")

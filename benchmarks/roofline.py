@@ -1,0 +1,85 @@
+"""§Roofline — assemble the per-(arch × shape × mesh) three-term table
+from the dry-run artifacts and identify the hillclimb candidates.
+
+    compute term    = HLO_FLOPs / (chips × peak)        [per-chip cost_analysis]
+    memory term     = HLO_bytes / (chips × HBM bw)
+    collective term = collective_bytes / (chips × link bw)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(report_dir: str = "reports/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: List[Dict]) -> List[Dict]:
+    rows = []
+    for c in cells:
+        if c.get("skipped"):
+            continue
+        r = c["roofline"]
+        dominant = c["bottleneck"]
+        total = max(sum(r.values()), 1e-12)
+        frac = r[dominant] / total
+        rows.append({
+            "bench": "roofline",
+            "tag": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+            "compute_ms": round(r["compute_s"] * 1e3, 3),
+            "memory_ms": round(r["memory_s"] * 1e3, 3),
+            "collective_ms": round(r["collective_s"] * 1e3, 3),
+            "bottleneck": dominant,
+            "dominance": round(frac, 3),
+            "roofline_fraction": round(c.get("roofline_fraction", 0.0), 4),
+            "mem_gib": round(c["memory"]["peak_device_bytes"] / 2 ** 30, 2),
+            "tpu_est_gib": round(
+                c["memory"].get("tpu_estimate_bytes",
+                                c["memory"]["peak_device_bytes"]) / 2 ** 30, 2),
+            "mean_ms": round(sum(r.values()) * 1e3, 3),
+        })
+    return rows
+
+
+def hillclimb_candidates(cells: List[Dict]) -> List[Dict]:
+    """worst roofline fraction · most collective-bound · most
+    paper-representative (decode = the short-prefill serving regime)."""
+    live = [c for c in cells if not c.get("skipped")
+            and c["mesh"] == "16x16"]
+
+    def coll_frac(c):
+        r = c["roofline"]
+        return r["collective_s"] / max(sum(r.values()), 1e-12)
+
+    def frac(c):
+        return c.get("roofline_fraction", 0.0)
+
+    worst = min(live, key=frac)
+    most_coll = max(live, key=coll_frac)
+    decode = [c for c in live if c["shape"] == "decode_32k"]
+    rep = max(decode, key=lambda c: c["roofline"]["memory_s"])
+    out = []
+    for tag, c in (("worst-fraction", worst), ("most-collective", most_coll),
+                   ("paper-representative", rep)):
+        out.append({"bench": "hillclimb", "tag": tag,
+                    "cell": f"{c['arch']}/{c['shape']}",
+                    "roofline_fraction": round(frac(c), 4),
+                    "coll_frac": round(coll_frac(c), 3), "mean_ms": 0.0})
+    return out
+
+
+def run() -> List[Dict]:
+    cells = load_cells()
+    if not cells:
+        return [{"bench": "roofline", "tag": "missing",
+                 "note": "run launch/dryrun first", "mean_ms": 0.0}]
+    return table(cells) + hillclimb_candidates(cells)

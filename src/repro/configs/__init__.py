@@ -1,0 +1,43 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module defines ``FULL`` (the exact published config) and ``smoke()``
+(a reduced same-family config for CPU tests).  Select with
+``--arch <id>`` in launchers.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "qwen3-4b": "qwen3_4b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "minitron-8b": "minitron_8b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    # the paper's own serving model (Qwen2.5-32B, §4)
+    "qwen2.5-32b": "qwen2_5_32b",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "qwen2.5-32b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.FULL
+
+
+def get_smoke(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: get_config(k) for k in _MODULES}

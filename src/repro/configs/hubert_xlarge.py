@@ -1,0 +1,20 @@
+"""hubert-xlarge [audio] — encoder-only (w2v2 arch), frame-level head.
+[arXiv:2106.07447; unverified]
+
+Frontend (CNN feature extractor) is a stub per the assignment:
+``input_specs()`` supplies precomputed frame embeddings.  Encoder-only ⇒
+no decode shapes (DESIGN.md §5).
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504, head_dim=80,
+    causal=False, frontend="audio",
+)
+
+
+def smoke() -> ModelConfig:
+    return FULL.replace(num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                        d_ff=128, vocab_size=64, head_dim=16, dtype="float32")

@@ -1,0 +1,23 @@
+"""LAPS / PLA-Serve core: the paper's contribution.
+
+boundary — §2.1 compute/memory boundary latency model + runtime fitting
+queueing — §2.2 M/G/1 P-K interference analysis (HoL penalty)
+buckets  — §3.1 power-of-two (L,B) graph grid + NEARESTGRAPH
+awd      — Algorithm 1 Adaptive-Wait-Depth batching
+queues   — §3.2 dual-queue LP/SP classification
+scheduler— §3.2 temporal/spatial policies + serving modes + ablations
+controller — Algorithm 2 instance-pressure controller
+slo      — TTFT/violation metrics
+"""
+from repro.core.boundary import LatencyModel, fit, roofline_boundary, H200_QWEN32B  # noqa: F401
+from repro.core.buckets import Bucket, BucketGrid  # noqa: F401
+from repro.core.awd import AWDConfig, AWDScheduler  # noqa: F401
+from repro.core.queues import DualQueue  # noqa: F401
+from repro.core.controller import (ControllerConfig, InstanceStats, Migration,  # noqa: F401
+                                   PressureController)
+from repro.core.request import Batch, Request  # noqa: F401
+from repro.core.scheduler import (ServingMode, Variant, make_policy,  # noqa: F401
+                                  TemporalDisaggPolicy, FCFSPolicy, PoolPolicy,
+                                  ChunkWork)
+from repro.core.slo import SLOTracker, SLOReport  # noqa: F401
+from repro.core import queueing  # noqa: F401

@@ -1,0 +1,103 @@
+"""§3.1 — the power-of-two (L, B) bucket grid for graph capture.
+
+On GPU each bucket is a captured CUDA Graph; on TPU each bucket is an
+AOT-compiled fixed-shape XLA executable (serving/executor.py).  The grid
+and the NEARESTGRAPH matching logic are identical.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+DEFAULT_LENGTHS = (8, 16, 32, 64, 128, 256)
+DEFAULT_DEPTHS = (1, 2, 4, 8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    length: int   # padded per-request token length
+    depth: int    # padded batch size
+
+    @property
+    def tokens(self) -> int:
+        return self.length * self.depth
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.length, self.depth)
+
+
+class BucketGrid:
+    """The captured-shape grid H of Algorithm 1."""
+
+    def __init__(self, lengths: Sequence[int] = DEFAULT_LENGTHS,
+                 depths: Sequence[int] = DEFAULT_DEPTHS,
+                 mem_budget_tokens: int = 16_384):
+        self.lengths = tuple(sorted(lengths))
+        self.depths = tuple(sorted(depths))
+        self.mem_budget = mem_budget_tokens
+        self.buckets = [Bucket(l, d) for l in self.lengths for d in self.depths
+                        if l * d <= mem_budget_tokens]
+
+    # ------------------------------------------------------------- lookup
+    def nearest_length(self, l: int) -> Optional[int]:
+        """Smallest captured length ≥ l (None if l exceeds the grid)."""
+        i = bisect.bisect_left(self.lengths, l)
+        return self.lengths[i] if i < len(self.lengths) else None
+
+    def covers(self, l: int) -> bool:
+        return l <= self.lengths[-1]
+
+    def max_depth(self, length: int, mem_budget: Optional[int] = None) -> int:
+        """Largest captured depth whose (length, depth) fits the budget —
+        the target depth D of Algorithm 1."""
+        budget = mem_budget if mem_budget is not None else self.mem_budget
+        best = 0
+        for d in self.depths:
+            if length * d <= budget:
+                best = d
+        return best
+
+    def nearest_graph(self, lengths: Sequence[int],
+                      mem_budget: Optional[int] = None) -> Optional[Bucket]:
+        """NEARESTGRAPH(B, H, M): smallest captured (L, B) covering every
+        request with minimal padding; None if any request is off-grid or
+        the padded batch busts the memory budget."""
+        if not lengths:
+            return None
+        budget = mem_budget if mem_budget is not None else self.mem_budget
+        lmax = max(lengths)
+        bl = self.nearest_length(lmax)
+        if bl is None:
+            return None
+        i = bisect.bisect_left(self.depths, len(lengths))
+        if i >= len(self.depths):
+            return None
+        bd = self.depths[i]
+        if bl * bd > budget:
+            return None
+        return Bucket(bl, bd)
+
+    def padding_waste(self, lengths: Sequence[int]) -> float:
+        """Fraction of padded tokens wasted for this batch under the grid."""
+        b = self.nearest_graph(lengths)
+        if b is None:
+            return 0.0
+        real = sum(lengths)
+        return 1.0 - real / b.tokens
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+
+def greedy_length_groups(lengths: Sequence[int],
+                         grid: BucketGrid) -> List[List[int]]:
+    """Greedy bucket-first grouping (Algorithm 1 line 6): indices grouped
+    by their nearest captured length, minimizing intra-batch padding."""
+    groups: dict = {}
+    for idx, l in enumerate(lengths):
+        key = grid.nearest_length(l) or -1
+        groups.setdefault(key, []).append(idx)
+    return [groups[k] for k in sorted(groups)]

@@ -1,0 +1,83 @@
+"""Request model: the unit the LAPS scheduler reasons about.
+
+A request is one *prefill job*: either a first-turn prefill (H == 0) or a
+multi-turn re-prefill (H > 0 cached history tokens, L new tokens).
+Decode work is modelled separately (PD disaggregation) except in MIX
+mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    new_tokens: int                      # L — new prompt tokens this turn
+    history_tokens: int = 0              # H — cached KV history
+    arrival: float = 0.0
+    deadline: Optional[float] = None     # absolute TTFT deadline (None = offline)
+    session: int = -1
+    decode_tokens: int = 0               # expected output length (PD sims)
+    rid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    # runtime bookkeeping (filled by scheduler/engine/sim)
+    dispatch_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    instance: Optional[int] = None
+    padded_to: Optional[int] = None      # bucket length it was padded to
+    used_graph: bool = False
+
+    @property
+    def is_reprefill(self) -> bool:
+        return self.history_tokens > 0
+
+    @property
+    def total_context(self) -> int:
+        return self.new_tokens + self.history_tokens
+
+    def ttft(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    def violated(self) -> bool:
+        if self.deadline is None:
+            return False
+        return self.finish_time is None or self.finish_time > self.deadline
+
+    def slack(self, now: float, service_estimate: float) -> float:
+        """Time to spare if dispatched now (∞ when deadline-free)."""
+        if self.deadline is None:
+            return float("inf")
+        return self.deadline - now - service_estimate
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: list
+    bucket_len: Optional[int] = None     # padded per-request length (graph L)
+    bucket_depth: Optional[int] = None   # padded batch size (graph B)
+    uses_graph: bool = False
+    kind: str = "short"                  # short | long | decode | mixed
+
+    @property
+    def depth(self) -> int:
+        return len(self.requests)
+
+    @property
+    def tokens(self) -> int:
+        return sum(r.new_tokens for r in self.requests)
+
+    @property
+    def padded_tokens(self) -> int:
+        if self.bucket_len is None or self.bucket_depth is None:
+            return self.tokens
+        return self.bucket_len * self.bucket_depth
+
+    @property
+    def max_history(self) -> int:
+        return max((r.history_tokens for r in self.requests), default=0)

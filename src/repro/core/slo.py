@@ -1,0 +1,70 @@
+"""SLO accounting: TTFT percentiles, violation rates, RPS (§4 metrics)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.request import Request
+
+
+def percentile(vals: Sequence[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    idx = min(int(q * len(s)), len(s) - 1)
+    return s[idx]
+
+
+@dataclasses.dataclass
+class SLOReport:
+    n: int
+    rps: float
+    mean_ttft: float
+    p50_ttft: float
+    p90_ttft: float
+    p99_ttft: float
+    violation_rate: float
+    mean_queue_wait: float
+    graph_hit_rate: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class SLOTracker:
+    def __init__(self, slo_ttft: Optional[float] = None):
+        self.slo = slo_ttft
+        self.finished: List[Request] = []
+
+    def record(self, r: Request) -> None:
+        self.finished.append(r)
+
+    def report(self, horizon: Optional[float] = None) -> SLOReport:
+        rs = self.finished
+        ttfts = [r.ttft() for r in rs if r.ttft() is not None]
+        waits = [r.dispatch_time - r.arrival for r in rs
+                 if r.dispatch_time is not None]
+        if horizon is None:
+            horizon = max((r.finish_time or 0.0) for r in rs) if rs else 1.0
+        viol = 0
+        denom = 0
+        for r in rs:
+            ddl = r.deadline if r.deadline is not None else (
+                None if self.slo is None else r.arrival + self.slo)
+            if ddl is None:
+                continue
+            denom += 1
+            if r.finish_time is None or r.finish_time > ddl:
+                viol += 1
+        graphs = sum(1 for r in rs if r.used_graph)
+        return SLOReport(
+            n=len(rs),
+            rps=len(rs) / max(horizon, 1e-9),
+            mean_ttft=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            p50_ttft=percentile(ttfts, 0.50),
+            p90_ttft=percentile(ttfts, 0.90),
+            p99_ttft=percentile(ttfts, 0.99),
+            violation_rate=viol / denom if denom else 0.0,
+            mean_queue_wait=sum(waits) / len(waits) if waits else 0.0,
+            graph_hit_rate=graphs / len(rs) if rs else 0.0,
+        )

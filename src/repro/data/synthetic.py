@@ -1,0 +1,73 @@
+"""Synthetic LM data pipeline: deterministic, seekable, checkpointable.
+
+Sequences mix (a) Zipfian unigram noise with (b) learnable structure —
+fixed-length copy/repeat motifs — so a ~100M model's loss visibly drops
+within a few hundred steps (the end-to-end example's success criterion).
+The iterator state is a single integer (step), making data-restart after
+failure exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    vocab_size: int
+    seq_len: int
+    batch: int             # per-step global batch
+    accum: int = 1         # microbatch accumulation factor
+    motif_len: int = 8
+    motif_prob: float = 0.5
+    zipf_a: float = 1.3
+    seed: int = 0
+
+
+class SyntheticLM:
+    def __init__(self, cfg: SyntheticConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+
+    def state(self) -> Dict:
+        return {"step": self.step}
+
+    def restore(self, state: Dict) -> None:
+        self.step = int(state["step"])
+
+    def _sample(self, rng: np.random.Generator,
+                n: int) -> Tuple[np.ndarray, np.ndarray]:
+        c = self.cfg
+        v = c.vocab_size
+        toks = rng.zipf(c.zipf_a, size=(n, c.seq_len + 1)) % (v - 1) + 1
+        # inject copy motifs: x[t] = x[t - motif_len] within motif spans
+        total = c.seq_len + 1
+        for i in range(n):
+            if rng.random() < c.motif_prob:
+                start = int(rng.integers(0, total // 2))
+                span = int(rng.integers(c.motif_len,
+                                        max(total - start - c.motif_len, c.motif_len + 1)))
+                src = toks[i, start:start + c.motif_len]
+                for j in range(span):
+                    pos = start + c.motif_len + j
+                    if pos >= total:
+                        break
+                    toks[i, pos] = src[j % c.motif_len]
+        return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int64)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.default_rng(c.seed * 1_000_003 + self.step)
+        n = c.batch * c.accum
+        x, y = self._sample(rng, n)
+        self.step += 1
+        return {
+            "tokens": x.reshape(c.accum, c.batch, c.seq_len),
+            "labels": y.reshape(c.accum, c.batch, c.seq_len).astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    use_rules,
+    current_rules,
+    spec_for,
+    constrain,
+    tree_shardings,
+    TRAIN_RULES,
+    SERVE_RULES,
+)

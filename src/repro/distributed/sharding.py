@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"embed", "heads", ...).  A :class:`ShardingRules` context maps logical
+names to mesh axes; :func:`constrain` applies
+``jax.lax.with_sharding_constraint`` when a mesh is active and silently
+no-ops on a single host device (tests, smoke runs).
+
+Divisibility guard: a logical→mesh mapping is dropped per-tensor when the
+dimension size is not divisible by the mesh-axis size (e.g. 8 KV heads on
+a 16-way model axis), so one rule table serves every architecture.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+# Rule tables: logical axis -> mesh axis (or tuple). "pod" present only on
+# multi-pod meshes; mesh_axis_size() treats missing axes as 1.
+TRAIN_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",            # FSDP: weight in-dim sharded over data
+    "expert_embed": "data",     # MoE expert weight FSDP (hillclimb: None)
+    "embed_act": None,          # activations keep d_model unsharded
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv_ch": "model",
+    "cache_seq": None,
+    "opt_shard": "data",        # ZeRO-1 extra partition for optimizer state
+}
+
+SERVE_RULES: Dict[str, AxisVal] = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,              # weights TP-only, replicated over data
+    "expert_embed": None,
+    "embed_act": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv_ch": "model",
+    "cache_seq": "model",       # flash-decode: KV seq sharded over model
+    "opt_shard": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Optional[Mesh]
+    rules: Dict[str, AxisVal]
+
+    def axis_size(self, axis: AxisVal) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        names = (axis,) if isinstance(axis, str) else axis
+        n = 1
+        for a in names:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    def mesh_axes(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        val = self.rules.get(logical)
+        if val is None or self.mesh is None:
+            return None
+        names = (val,) if isinstance(val, str) else tuple(val)
+        names = tuple(a for a in names if a in self.mesh.shape)
+        if not names:
+            return None
+        return names[0] if len(names) == 1 else names
+
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def _dim_spec(rules: ShardingRules, dim: int, logical: Optional[str]) -> AxisVal:
+    axes = rules.mesh_axes(logical)
+    if axes is None:
+        return None
+    if dim % rules.axis_size(axes) != 0:
+        return None  # divisibility guard: drop mapping
+    return axes
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             rules: Optional[ShardingRules] = None) -> P:
+    rules = rules or current_rules()
+    if rules is None or rules.mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        ax = _dim_spec(rules, dim, name)
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else ax
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+        parts.append(ax)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active rules; no-op without mesh."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def tree_shardings(params: Any, axes_tree: Any,
+                   rules: ShardingRules) -> Any:
+    """NamedSharding tree for a param tree + parallel logical-axes tree."""
+    if rules.mesh is None:
+        return jax.tree.map(lambda _: None, params)
+
+    def one(leaf, axes):
+        if axes is None:
+            return NamedSharding(rules.mesh, P())
+        return NamedSharding(rules.mesh, spec_for(leaf.shape, axes, rules))
+
+    return jax.tree.map(one, params, axes_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def constrain_tree(tree: Any, axes_tree: Any) -> Any:
+    """Apply ``constrain`` leaf-wise (axes_tree: tuples of logical names).
+
+    Used on scan/loop carries (gradient accumulators, KV-cache carries):
+    XLA's sharding propagation can lose loop-carried shardings and fall
+    back to replication — re-constraining each iteration pins them.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return tree
+
+    def one(leaf, axes):
+        if axes is None or not hasattr(leaf, "shape"):
+            return leaf
+        return constrain(leaf, *axes)
+
+    return jax.tree.map(one, tree, axes_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def logical_sharding(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+                     rules: ShardingRules) -> Optional[NamedSharding]:
+    if rules.mesh is None:
+        return None
+    return NamedSharding(rules.mesh, spec_for(shape, logical_axes, rules))
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return int(math.ceil(n / m) * m)

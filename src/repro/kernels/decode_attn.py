@@ -1,0 +1,114 @@
+"""Flash-decode Pallas kernel: one new token attending to a KV cache.
+
+The decode step is memory-bound (the paper's short-request regime): the
+whole KV cache is streamed HBM→VMEM once; arithmetic is a (rep × D) ·
+(D × block_k) GEMV-like matmul per block.  Grid = (B, Hkv, n_kv_blocks)
+with the kv axis sequential; the online-softmax state for the ``rep``
+query heads of one KV group sits in VMEM scratch.
+
+Layout note: q rows per program = rep (GQA group fan-out, 1–8).  On real
+TPUs rows < 8 under-fill sublanes; production layout would fold multiple
+KV heads per program — kept simple here and validated in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_k: int, n_kv_blocks: int):
+    ki = pl.program_id(2)
+    kv_len = len_ref[0, 0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0]                                        # (rep, D)
+        k = k_ref[0, 0]                                        # (bk, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (rep, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                lengths: jax.Array, *, block_k: int = 512,
+                interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,).
+
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    block_k = min(block_k, s)
+    s_pad = -(-s // block_k) * block_k
+    kt = jnp.moveaxis(k, 2, 1)                                 # (B, Hkv, S, D)
+    vt = jnp.moveaxis(v, 2, 1)
+    if s_pad != s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    qg = q.reshape(b, hkv, rep, d)
+    nk = s_pad // block_k
+
+    kern = functools.partial(_kernel, scale=d ** -0.5, block_k=block_k,
+                             n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, g, ki: (bb, 0)),
+            pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki: (bb, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, g, ki: (bb, g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, g, ki: (bb, g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki: (bb, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.reshape(b, 1).astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,69 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas()`` decides the execution path:
+  * TPU backend → compiled Pallas kernels (the production path);
+  * CPU/GPU → interpret-mode Pallas (tests) or the jnp oracle (fast path).
+
+The serving engine and model layers call these wrappers, never the
+kernels directly, so the whole system runs identically on this CPU
+container and on a real pod.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.decode_attn import decode_attn as _decode_pallas
+from repro.kernels.flash_attn import flash_attn as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+_FORCE: Optional[str] = None  # None=auto, "pallas", "ref"
+
+
+def set_backend(mode: Optional[str]) -> None:
+    """mode: None (auto), 'pallas' (interpret off-TPU), or 'ref'."""
+    global _FORCE
+    _FORCE = mode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    if _FORCE == "pallas":
+        return True
+    if _FORCE == "ref":
+        return False
+    return _on_tpu()
+
+
+def mha(q, k, v, q_offsets=None, kv_lengths=None, *, causal=True,
+        window=None, block_q=128, block_k=128):
+    """Prefill / re-prefill attention.  See kernels.flash_attn."""
+    if _use_pallas():
+        return _flash_pallas(q, k, v, q_offsets, kv_lengths, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k,
+                             interpret=not _on_tpu())
+    return ref_mod.ref_flash_attn(q, k, v, q_offsets=q_offsets,
+                                  kv_lengths=kv_lengths, window=window,
+                                  causal=causal)
+
+
+def decode(q, k, v, lengths, *, block_k=512):
+    """Single-token flash decode.  q: (B, Hq, D)."""
+    if _use_pallas():
+        return _decode_pallas(q, k, v, lengths, block_k=block_k,
+                              interpret=not _on_tpu())
+    return ref_mod.ref_decode_attn(q, k, v, lengths)
+
+
+def ssd(x, dt, a, bmat, cmat, init_state, *, chunk=128):
+    """Chunked SSD scan.  See kernels.ssd_scan."""
+    if _use_pallas():
+        return _ssd_pallas(x, dt, a, bmat, cmat, init_state, chunk=chunk,
+                           interpret=not _on_tpu())
+    return ref_mod.ref_ssd_scan(x, dt, a, bmat, cmat, init_state=init_state)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` function computes the same math as its kernel with plain
+jnp ops in fp32, used by tests (`assert_allclose`) and as the XLA
+fallback path on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attn(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   q_offsets: Optional[jax.Array] = None,
+                   kv_lengths: Optional[jax.Array] = None,
+                   window: Optional[int] = None,
+                   causal: bool = True) -> jax.Array:
+    """Oracle for kernels.flash_attn (prefill and re-prefill attention).
+
+    q: (B, Lq, Hq, D); k, v: (B, S, Hkv, D) — S may exceed Lq (KV cache).
+    q_offsets: (B,) absolute position of each batch row's first query
+    token (re-prefill history length); None = 0.
+    kv_lengths: (B,) valid KV entries (None = all S valid).
+    """
+    b, lq, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if q_offsets is None:
+        q_offsets = jnp.zeros((b,), jnp.int32)
+    qpos = q_offsets[:, None] + jnp.arange(lq)[None, :]          # (B, Lq)
+    kpos = jnp.arange(s)[None, None, :]                          # (1, 1, S)
+    mask = jnp.ones((b, lq, s), bool)
+    if causal:
+        mask = mask & (kpos <= qpos[:, :, None])
+    if window is not None:
+        mask = mask & (kpos > qpos[:, :, None] - window)
+    if kv_lengths is not None:
+        mask = mask & (kpos < kv_lengths[:, None, None])
+    qg = q.reshape(b, lq, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("blgrd,bsgd->bglrs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bglrs,bsgd->blgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, lq, hq, d).astype(q.dtype)
+
+
+def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: jax.Array) -> jax.Array:
+    """Oracle for kernels.decode_attn (single-token flash decode).
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,) valid KV entries.
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    valid = jnp.arange(s)[None, :] < lengths[:, None]            # (B, S)
+    qg = q.reshape(b, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ref_ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array,
+                 init_state: Optional[jax.Array] = None):
+    """Oracle for kernels.ssd_scan: sequential SSD recurrence.
+
+    x: (B, L, NH, HD); dt: (B, L, NH); a: (NH,) negative;
+    bmat, cmat: (B, L, NH, DS).  Returns (y, final_state (B,NH,HD,DS)).
+    """
+    b, l, nh, hd = x.shape
+    ds = bmat.shape[-1]
+    f32 = jnp.float32
+    if init_state is None:
+        init_state = jnp.zeros((b, nh, hd, ds), f32)
+
+    def step(h, ins):
+        xt, dtt, bt, ct = ins                                    # (B,NH,HD) etc
+        da = jnp.exp(dtt * a[None, :])                           # (B,NH)
+        h = da[..., None, None] * h + jnp.einsum(
+            "bh,bhp,bhd->bhpd", dtt, xt, bt)
+        y = jnp.einsum("bhpd,bhd->bhp", h, ct)
+        return h, y
+
+    ins = tuple(jnp.moveaxis(t.astype(f32), 1, 0) for t in (x, dt, bmat, cmat))
+    state, ys = jax.lax.scan(step, init_state, ins)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

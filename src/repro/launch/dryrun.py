@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count at first backend init.  Everything else follows.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ASSIGNED, get_config  # noqa: E402
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,  # noqa: E402
+                                        ShardingRules, tree_shardings, use_rules)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs, train_accum  # noqa: E402
+from repro.models import transformer as tr  # noqa: E402
+from repro.models.config import SHAPES, cell_supported, shape_by_name  # noqa: E402
+from repro.optim.adamw import AdamWConfig, adamw_init  # noqa: E402
+from repro.training.train_step import make_train_step  # noqa: E402
+
+# TPU v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (≈ per-chip usable)
+
+# HLO line shape: `%name = f32[8,1,128]{2,1,0} all-gather(...)`
+COLLECTIVE_RE = re.compile(
+    r"= (\w+)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+               "f64": 8, "s64": 8, "u8": 1, "s8": 1, "f8e4m3fn": 1}
+# wire multiplier: ring all-reduce moves ≈2× the buffer
+WIRE = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+_COMP_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_BODY_RE = re.compile(r"\bwhile\([^\n]*?body=%?([\w.\-]+)")
+
+
+def collective_bytes(hlo: str, depth_factors) -> Dict[str, float]:
+    """Sum per-device collective wire bytes from optimized HLO.
+
+    Collectives inside while-loop bodies execute once per iteration.  HLO
+    text does not expose trip counts, so we attribute structurally: the
+    call graph of while bodies is walked from ENTRY, and a body at
+    nesting depth d is multiplied by prod(depth_factors[:d]) — the known
+    static trip counts of the step (grad-accum scan × layer scan ×
+    attention-chunk scan).  Computations called once (fusions, the
+    optimizer update) get factor 1.  Documented in EXPERIMENTS.md §Method.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in WIRE}
+    # split into computations: defs start at column 0
+    blocks = []
+    comp_idx: Dict[str, int] = {}
+    entry = None
+    for block in re.split(r"\n(?=\S)", hlo):
+        head = block.split("\n", 1)[0]
+        m = _COMP_NAME_RE.match(head)
+        name = m.group(2) if m else f"_anon{len(blocks)}"
+        comp_idx[name] = len(blocks)
+        blocks.append((name, block))
+        if head.startswith("ENTRY"):
+            entry = name
+    if entry is None and blocks:
+        entry = max(blocks, key=lambda nb: len(nb[1]))[0]
+
+    # while-body edges per computation
+    children: Dict[str, list] = {n: _WHILE_BODY_RE.findall(b)
+                                 for n, b in blocks}
+
+    # BFS from entry assigning structural multipliers by nesting depth
+    factor: Dict[str, float] = {}
+    if entry is not None:
+        factor[entry] = 1.0
+        frontier = [(entry, 0)]
+        while frontier:
+            name, depth = frontier.pop()
+            f = factor[name]
+            trip = depth_factors[depth] if depth < len(depth_factors) else 1
+            for child in children.get(name, []):
+                if child in comp_idx and child not in factor:
+                    factor[child] = f * trip
+                    frontier.append((child, depth + 1))
+
+    for name, block in blocks:
+        f = factor.get(name, 1.0)
+        for m in COLLECTIVE_RE.finditer(block):
+            dtype, dims, op = m.groups()
+            nbytes = DTYPE_BYTES.get(dtype, 4)
+            for d in dims.split(","):
+                if d:
+                    nbytes *= int(d)
+            out[op] += nbytes * f * WIRE[op]
+    out["total"] = sum(out[k] for k in WIRE)
+    return out
+
+
+def build_step(cfg, cell, mesh, rules, opt_rules=None, opts=()):
+    """Returns (fn, args) ready for jit(...).lower(*args).
+
+    opt_rules: optional separate rule table for the optimizer state —
+    ZeRO-1 proper: live weights may be replicated over data while
+    master/m/v stay data-sharded (one gather per step instead of
+    per-layer all-gathers)."""
+    params_shapes, axes = tr.init_params(cfg, abstract=True)
+    p_shard = tree_shardings(params_shapes, axes, rules)
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_shapes, p_shard)
+
+    if cell.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        o_axes = {"m": axes, "v": axes, "master": axes, "count": None}
+        o_shard = tree_shardings(opt_shapes, o_axes, opt_rules or rules)
+        opt = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_shapes, o_shard)
+        gdt = jnp.bfloat16 if "gradbf16" in opts else jnp.float32
+        step = make_train_step(cfg, AdamWConfig(), accum=cell.accum,
+                               remat=True, with_embeds=cell.with_embeds,
+                               grad_dtype=gdt,
+                               constrain_grads="lateconstrain" not in opts)
+        return step, (params, opt) + cell.args
+
+    if cell.kind == "encode":
+        def encode_step(params, embeds):
+            logits, _, _ = tr.forward(params, cfg, embeds=embeds)
+            return logits
+        return encode_step, (params,) + cell.args
+
+    if cell.kind == "prefill":
+        emb = cell.with_embeds
+
+        def prefill_step(params, tokens, positions, caches, sample_idx):
+            logits, new_caches, _ = tr.forward(
+                params, cfg,
+                tokens=None if emb else tokens,
+                embeds=tokens if emb else None,
+                positions=positions, caches=caches,
+                logits_slice="last", dense_cache_write=True)
+            return logits, new_caches
+        return prefill_step, (params,) + cell.args
+
+    rolling = cell.rolling
+
+    def decode_step(params, tokens, positions, caches):
+        logits, new_caches, _ = tr.forward(
+            params, cfg, tokens=tokens, positions=positions, caches=caches,
+            rolling=rolling, logits_slice="last")
+        return logits, new_caches
+    return decode_step, (params,) + cell.args
+
+
+def _quant_wrap(fn, args, cell, opts):
+    """Beyond-paper serving optimizations, applied as dry-run wrappers so
+    model code stays unchanged (§Perf hillclimb):
+
+    int8w  — weights stored int8 in HBM, dequantized at use (per-tensor
+             static scale stand-in; production: per-channel scales, fused
+             dequant inside the matmul/Pallas kernel);
+    int8kv — KV cache stored int8, dequant on read / requant on write.
+    """
+    int8w = "int8w" in opts and cell.kind in ("prefill", "decode", "encode")
+    int8kv = "int8kv" in opts and cell.kind in ("prefill", "decode")
+    if not (int8w or int8kv):
+        return fn, args
+    import jax.numpy as jnp
+
+    def deq(x):
+        return (x.astype(jnp.bfloat16) / 16.0) if x.dtype == jnp.int8 else x
+
+    def quant(x):
+        return jnp.clip(x.astype(jnp.float32) * 16.0, -127, 127
+                        ).astype(jnp.int8)
+
+    def to_int8_spec(s):
+        if s.dtype == jnp.dtype(jnp.bfloat16):
+            return jax.ShapeDtypeStruct(s.shape, jnp.int8,
+                                        sharding=s.sharding)
+        return s
+
+    args = list(args)
+    cache_pos = 3                       # (params, tokens, positions, caches)
+    if int8w:
+        args[0] = jax.tree.map(
+            lambda s: to_int8_spec(s) if len(s.shape) >= 2 else s, args[0])
+    if int8kv:
+        args[cache_pos] = jax.tree.map(to_int8_spec, args[cache_pos])
+
+    def wrapped(params, *rest):
+        if int8w:
+            params = jax.tree.map(deq, params)
+        rest = list(rest)
+        if int8kv:
+            rest[cache_pos - 1] = jax.tree.map(deq, rest[cache_pos - 1])
+        out = fn(params, *rest)
+        if int8kv and isinstance(out, tuple) and len(out) == 2:
+            logits, caches = out
+            caches = jax.tree.map(
+                lambda x: quant(x) if x.dtype == jnp.bfloat16 else x, caches)
+            return logits, caches
+        return out
+
+    return wrapped, tuple(args)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             opts: Tuple[str, ...] = ()) -> Dict:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    rules_map = dict(base)
+    if multi_pod and shape.kind != "train":
+        rules_map["batch"] = ("pod", "data")
+    opt_rules = None
+    if "moe-repl" in opts:
+        # hillclimb: replicate live expert weights over the data axis
+        # (killing per-layer all-gathers) but keep optimizer state
+        # FSDP-sharded — ZeRO-1 proper: one params gather per step
+        rules_map["expert_embed"] = None
+        opt_map = dict(rules_map)
+        opt_map["expert_embed"] = "data"
+        opt_rules = ShardingRules(mesh=mesh, rules=opt_map)
+    rules = ShardingRules(mesh=mesh, rules=rules_map)
+
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "devices": mesh.size, "opts": list(opts)}
+    accum_override = None
+    for o in opts:
+        if o.startswith("accum"):
+            accum_override = int(o[len("accum"):])
+    with use_rules(rules):
+        cell = input_specs(cfg, shape, rules, accum_override)
+        fn, args = build_step(cfg, cell, mesh, rules, opt_rules, opts)
+        fn, args = _quant_wrap(fn, args, cell, opts)
+        # buffer donation mirrors production: KV caches update in place,
+        # train params/opt-state are consumed by the step
+        donate = {"train": (0, 1), "prefill": (3,), "decode": (3,),
+                  "encode": ()}[cell.kind]
+        t0 = time.perf_counter()
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+
+        ma = compiled.memory_analysis()
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        # The CPU backend legalizes every bf16 op to f32 (no native bf16
+        # compute), materializing f32 copies of all bf16 temporaries —
+        # roughly doubling temp bytes vs a TPU compilation.  Arguments and
+        # outputs keep their true dtypes.  tpu_estimate_bytes corrects
+        # temp by 2× (documented in EXPERIMENTS.md §Method).
+        tpu_est = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes / 2 - ma.alias_size_in_bytes)
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": peak,
+            "tpu_estimate_bytes": tpu_est,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops": ca.get("flops", 0.0),
+                       "bytes_accessed": ca.get("bytes accessed", 0.0)}
+        from repro.models.transformer import num_groups
+        g = num_groups(cfg)
+        chunks = max(shape.seq_len // 1024, 1)
+        if shape.kind == "train":
+            depth_factors = (cell.accum, g, chunks)
+        elif shape.kind == "decode":
+            depth_factors = (g, max(cfg.ssm_chunk and 1, 1))
+        else:
+            depth_factors = (g, chunks)
+        rec["collectives"] = collective_bytes(compiled.as_text(),
+                                              depth_factors)
+
+        # Roofline terms — per chip, seconds per step (EXPERIMENTS.md
+        # §Method documents each source):
+        #  · compute: XLA's flops counter visits while bodies once, so the
+        #    raw count undercounts scanned layers; MODEL_FLOPS/chips is an
+        #    exact per-chip floor for useful compute — take the max.
+        #  · memory: the per-step HBM working set (arguments + outputs +
+        #    bf16-corrected temporaries) must move through HBM ≥ once.
+        #  · collective: per-device wire bytes from the structural parse
+        #    (= cluster_bytes/chips, the spec's normalization).
+        tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+        n_active = cfg.active_param_count()
+        mf = 2.0 * n_active * tokens
+        if shape.kind == "train":
+            mf *= 3.0
+        rec["model_flops"] = mf
+        flops = max(rec["cost"]["flops"], mf / mesh.size)
+        rec["roofline"] = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": tpu_est / HBM_BW,
+            "collective_s": rec["collectives"]["total"] / ICI_BW,
+        }
+        terms = rec["roofline"]
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["mfu_ratio"] = (mf / mesh.size) / flops if flops else 0.0
+        # roofline fraction: useful-compute time over the step's dominant
+        # bound — the score §Perf drives up
+        rec["roofline_fraction"] = (mf / mesh.size / PEAK_FLOPS) / \
+            max(sum(terms.values()), 1e-12)
+
+    if verbose:
+        m = rec["memory"]["peak_device_bytes"] / 2**30
+        te = rec["memory"]["tpu_estimate_bytes"] / 2**30
+        r = rec["roofline"]
+        print(f"[dryrun] {arch:20s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile {rec['compile_s']:6.1f}s  mem/dev {m:6.2f} GiB "
+              f"(tpu-est {te:5.2f})  "
+              f"comp {r['compute_s']*1e3:8.2f}ms mem {r['memory_s']*1e3:8.2f}ms "
+              f"coll {r['collective_s']*1e3:8.2f}ms  -> {rec['bottleneck']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}"
+        if opts:
+            tag += "_" + "-".join(opts)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated: int8kv,int8w,moe-repl (§Perf)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    opts = tuple(o for o in args.opt.split(",") if o)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, args.out, opts=opts)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} {shape} multi={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(str(f[:3]) for f in failures))
+    print("[dryrun] ALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

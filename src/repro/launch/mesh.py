@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module
+never touches jax device state.  Single pod: 16×16 = 256 chips
+(TPU v5e pod slice); multi-pod: 2×16×16 = 512 chips with a leading
+"pod" axis (DCN between pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1×1 mesh for single-host smoke runs."""
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=auto)

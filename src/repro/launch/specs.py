@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+Weak-type-correct, shardable, zero-allocation stand-ins for train /
+prefill / decode steps.  Modality frontends are stubs per the
+assignment: ``input_specs`` yields precomputed patch/frame embeddings of
+the backbone width instead of token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, spec_for
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig, ShapeSpec
+from jax.sharding import NamedSharding
+
+
+def _sds(shape, dtype, logical, rules: ShardingRules):
+    sharding = None
+    if rules.mesh is not None:
+        sharding = NamedSharding(rules.mesh, spec_for(shape, logical, rules))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    kind: str                      # train | prefill | decode
+    args: Tuple                    # positional ShapeDtypeStructs after params
+    accum: int = 1
+    rolling: bool = False
+    with_embeds: bool = False
+    cache_len: Optional[int] = None
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                rules: ShardingRules):
+    """ShapeDtypeStructs for the cache pytree, with serve shardings."""
+    shapes = jax.eval_shape(lambda: tr.init_cache(cfg, batch, max_len))
+    axes = tr.cache_logical_axes(cfg)
+
+    def attach(leaf_shapes, leaf_axes):
+        return jax.tree.map(
+            lambda s: _sds(s.shape, s.dtype, leaf_axes, rules), leaf_shapes)
+
+    out = []
+    for cs, ax in zip(shapes, axes):
+        out.append({k: attach(v, ax[k]) for k, v in cs.items()})
+    return out
+
+
+def train_accum(shape: ShapeSpec, cfg: Optional[ModelConfig] = None
+                ) -> Tuple[int, int]:
+    """(accum_steps, microbatch) for the train shape.  The largest models
+    (≥30B total params) take deeper accumulation — smaller microbatch
+    activations are what keeps them inside HBM."""
+    accum = 4
+    if cfg is not None and cfg.param_count() > 30e9:
+        accum = 8
+    return accum, shape.global_batch // accum
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                rules: ShardingRules,
+                accum_override: Optional[int] = None) -> CellSpec:
+    b, s = shape.global_batch, shape.seq_len
+    emb = cfg.frontend is not None
+    if shape.kind == "train":
+        a, mb = train_accum(shape, cfg)
+        if accum_override:
+            a, mb = accum_override, shape.global_batch // accum_override
+        batch: Dict[str, Any] = {
+            "labels": _sds((a, mb, s), jnp.int32, (None, "batch", "seq"), rules),
+        }
+        if emb:
+            batch["embeds"] = _sds((a, mb, s, cfg.d_model), cfg.np_dtype,
+                                   (None, "batch", "seq", "embed_act"), rules)
+        else:
+            batch["tokens"] = _sds((a, mb, s), jnp.int32,
+                                   (None, "batch", "seq"), rules)
+        return CellSpec("train", (batch,), accum=a, with_embeds=emb)
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_only:
+            x = _sds((b, s, cfg.d_model), cfg.np_dtype,
+                     ("batch", "seq", "embed_act"), rules)
+            return CellSpec("encode", (x,), with_embeds=True)
+        tokens = (_sds((b, s, cfg.d_model), cfg.np_dtype,
+                       ("batch", "seq", "embed_act"), rules) if emb else
+                  _sds((b, s), jnp.int32, ("batch", "seq"), rules))
+        positions = _sds((b, s), jnp.int32, ("batch", "seq"), rules)
+        caches = cache_specs(cfg, b, s, rules)
+        sample_idx = _sds((b,), jnp.int32, ("batch",), rules)
+        return CellSpec("prefill", (tokens, positions, caches, sample_idx),
+                        with_embeds=emb, cache_len=s)
+
+    # decode: one new token against a cache of seq_len
+    cache_len = s
+    rolling = False
+    if cfg.sliding_window is not None and s > cfg.sliding_window:
+        cache_len = cfg.sliding_window       # rolling-window KV (mixtral)
+        rolling = True
+    tokens = _sds((b, 1), jnp.int32, ("batch", None), rules)
+    positions = _sds((b, 1), jnp.int32, ("batch", None), rules)
+    caches = cache_specs(cfg, b, cache_len, rules)
+    return CellSpec("decode", (tokens, positions, caches), rolling=rolling,
+                    cache_len=cache_len)

@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, ShapeSpec, SHAPES, shape_by_name, cell_supported  # noqa: F401

@@ -1,0 +1,259 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Implements the chunked SSD algorithm for sequence mode (train / prefill /
+re-prefill) and the O(1) recurrent step for decode.  The per-layer
+recurrent cache is ``(ssm_state, conv_state)``:
+
+  ssm_state:  (B, nheads, head_dim, d_state)   fp32
+  conv_state: (B, conv_width-1, conv_channels) activation dtype
+
+Jamba's mamba layers reuse this block (SSD form substituted for Mamba-1;
+see DESIGN.md §Hardware-adaptation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import ParamBuilder, rms_norm
+
+
+def conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state_size
+
+
+def init_mamba(pb: ParamBuilder, cfg) -> None:
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_nheads
+    g, w = cfg.ssm_n_groups, cfg.ssm_conv_width
+    proj_out = 2 * di + 2 * g * ds + nh          # z, x, B, C, dt
+    pb.dense("in_proj", (cfg.d_model, proj_out), ("embed", "ssm_inner"))
+    pb.dense("conv_w", (w, conv_channels(cfg)), (None, "conv_ch"), scale=w ** -0.5)
+    pb.zeros("conv_b", (conv_channels(cfg),), ("conv_ch",))
+    pb.zeros("dt_bias", (nh,), ("ssm_heads",))
+    pb.const("A_log", jnp.log(jnp.linspace(1.0, 16.0, nh)), ("ssm_heads",))
+    pb.ones("D", (nh,), ("ssm_heads",))
+    pb.ones("norm", (di,), (None,))
+    pb.dense("out_proj", (di, cfg.d_model), ("ssm_inner", "embed"))
+
+
+def _causal_conv_seq(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                     conv_state: Optional[jax.Array],
+                     valid_len: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  xbc: (B, L, C); w: (W, C); returns (y, new_state).
+
+    valid_len (B,): per-row count of real (non-padded) tokens — the new
+    conv state is taken from each row's true end so right-padding in
+    bucketized batches cannot corrupt the recurrent state."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)                 # (B, W-1+L, C)
+    # windowed sum: y[t] = sum_j w[j] * full[t+j]
+    y = sum(full[:, j:j + xbc.shape[1], :] * w[j][None, None, :]
+            for j in range(width))
+    y = jax.nn.silu(y + b[None, None, :])
+    if valid_len is None:
+        new_state = full[:, full.shape[1] - (width - 1):, :]
+    else:
+        # token t sits at absolute row (W-1)+t in `full`; the last W-1
+        # real inputs of row i are rows valid_len[i] .. valid_len[i]+W-2
+        idx = valid_len[:, None] + jnp.arange(width - 1)[None, :]
+        new_state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+    return y, new_state
+
+
+def _causal_conv_step(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                      conv_state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token conv step.  xbc: (B, 1, C); conv_state: (B, W-1, C)."""
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+    y = jax.nn.silu(y + b[None, None, :])
+    return y, window[:, 1:, :]
+
+
+def _split_proj(cfg, proj: jax.Array):
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_nheads
+    g = cfg.ssm_n_groups
+    z, x, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + g * ds, 2 * di + 2 * g * ds], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _heads(cfg, x: jax.Array) -> jax.Array:
+    b, l, _ = x.shape
+    return x.reshape(b, l, cfg.ssm_nheads, cfg.ssm_head_dim)
+
+
+def _group_view(cfg, m: jax.Array) -> jax.Array:
+    b, l, _ = m.shape
+    return m.reshape(b, l, cfg.ssm_n_groups, cfg.ssm_state_size)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, bg: jax.Array,
+                cg: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan, group-factored.
+
+    xh: (B, L, NH, HD); dt: (B, L, NH) (post-softplus); a: (NH,) negative;
+    bg, cg: (B, L, G, DS) — B/C stay in GROUP form (never repeated to
+    heads: the naive head-expanded layout costs G→NH (e.g. 16×) extra HBM
+    on jamba).  fp32 casts happen per-chunk inside the scan body, so the
+    full-sequence fp32 copies never materialize either.
+
+    Returns (y (B,L,NH,HD) in xh.dtype, state (B,NH,HD,DS) fp32).
+    """
+    b, l, nh, hd = xh.shape
+    g = bg.shape[2]
+    ds = bg.shape[-1]
+    hpg = nh // g
+    q = min(chunk, l)
+    orig_l = l
+    if l % q != 0:
+        # zero-pad to a chunk multiple: dt=0 ⇒ decay=1 and zero input
+        # contribution, so padded steps are exact identities for the state.
+        pad = q - l % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bg = jnp.pad(bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cg = jnp.pad(cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // q
+    f32 = jnp.float32
+    xc = jnp.moveaxis(xh.reshape(b, nc, q, g, hpg, hd), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, g, hpg), 1, 0)
+    bc = jnp.moveaxis(bg.reshape(b, nc, q, g, ds), 1, 0)
+    cc = jnp.moveaxis(cg.reshape(b, nc, q, g, ds), 1, 0)
+    ag = a.reshape(g, hpg).astype(f32)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, g, hpg, hd, ds), f32)
+    else:
+        init_state = init_state.reshape(b, g, hpg, hd, ds)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(h, xs):
+        xq, dq, bq, cq = xs                                    # chunk slices
+        xq = xq.astype(f32)
+        dq = dq.astype(f32)
+        bq = bq.astype(f32)
+        cq = cq.astype(f32)
+        cum = jnp.cumsum(dq * ag[None, None], axis=1)          # (b,q,g,hpg)
+        # intra-chunk: M[t,s,g,h] = exp(cum_t - cum_s)·(C_t·B_s)_g·dt_s.
+        # Mask the log-deltas BEFORE exp: for s > t the delta is positive
+        # and exp can overflow — where(tri, exp(..), 0) then produces
+        # inf·0 = NaN gradients through the unselected branch.
+        logm = cum[:, :, None] - cum[:, None, :, :]            # (b,t,s,g,hpg)
+        logm = jnp.where(tri[None, :, :, None, None], logm, -jnp.inf)
+        decay = jnp.exp(logm)
+        cb = jnp.einsum("btgd,bsgd->btsg", cq, bq)             # (b,t,s,g)
+        m = decay * cb[..., None] * dq[:, None]                # (b,t,s,g,hpg)
+        y = jnp.einsum("btsgh,bsghp->btghp", m, xq)
+        # inter-chunk: carried state
+        y = y + jnp.einsum("btgd,btgh,bghpd->btghp",
+                           cq, jnp.exp(cum), h)
+        # state update
+        w = jnp.exp(cum[:, -1:] - cum) * dq                    # (b,s,g,hpg)
+        dstate = jnp.einsum("bsgh,bsghp,bsgd->bghpd", w, xq, bq)
+        h = jnp.exp(cum[:, -1])[..., None, None] * h + dstate
+        return h, y.astype(xh.dtype)
+
+    state, ys = jax.lax.scan(body, init_state, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, nh, hd)[:, :orig_l]
+    return y, state.reshape(b, nh, hd, ds)
+
+
+def ssd_step(xh: jax.Array, dt: jax.Array, a: jax.Array, bg: jax.Array,
+             cg: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  xh: (B,1,NH,HD); bg, cg: (B,1,G,DS);
+    state: (B,NH,HD,DS) fp32."""
+    f32 = jnp.float32
+    b = xh.shape[0]
+    nh, hd = xh.shape[2], xh.shape[3]
+    g, ds = bg.shape[2], bg.shape[3]
+    hpg = nh // g
+    x0 = xh[:, 0].astype(f32).reshape(b, g, hpg, hd)
+    d0 = dt[:, 0].astype(f32).reshape(b, g, hpg)
+    b0 = bg[:, 0].astype(f32)                                  # (b,g,ds)
+    c0 = cg[:, 0].astype(f32)
+    ag = a.reshape(g, hpg).astype(f32)
+    st = state.reshape(b, g, hpg, hd, ds)
+    da = jnp.exp(d0 * ag[None])                                # (b,g,hpg)
+    new = da[..., None, None] * st + jnp.einsum(
+        "bgh,bghp,bgd->bghpd", d0, x0, b0)
+    y = jnp.einsum("bghpd,bgd->bghp", new, c0)
+    return (y.reshape(b, 1, nh, hd).astype(xh.dtype),
+            new.reshape(b, nh, hd, ds))
+
+
+def mamba_layer(p: Dict, x: jax.Array, *, cfg,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                decode: bool = False,
+                valid_len: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full Mamba2 block.  x: (B, L, d_model).
+
+    cache = (ssm_state, conv_state) carries recurrent state across turns
+    (re-prefill) and steps (decode).  Returns (y, new_cache) — new_cache is
+    None when called without a cache (pure training forward).
+
+    valid_len (B,): real token count per row.  Padded positions get
+    dt = 0, which makes the SSD step an exact identity (decay exp(0)=1,
+    zero input contribution), so bucketized right-padding is safe.
+    """
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    proj = x @ p["in_proj"]
+    z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc = constrain(xbc, "batch", "seq", "conv_ch")
+
+    ssm_state = conv_state = None
+    if cache is not None:
+        ssm_state, conv_state = cache
+
+    if decode:
+        xbc, conv_state = _causal_conv_step(xbc, p["conv_w"], p["conv_b"], conv_state)
+    else:
+        xbc, conv_state = _causal_conv_seq(xbc, p["conv_w"], p["conv_b"],
+                                           conv_state, valid_len)
+
+    di, ds, g = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_n_groups
+    xs, bmat, cmat = jnp.split(xbc, [di, di + g * ds], axis=-1)
+    xh = _heads(cfg, xs)
+    bg = _group_view(cfg, bmat)
+    cg = _group_view(cfg, cmat)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid_len is not None and not decode:
+        keep = jnp.arange(x.shape[1])[None, :] < valid_len[:, None]
+        dt = jnp.where(keep[:, :, None], dt, 0.0)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+
+    if decode:
+        y, ssm_state = ssd_step(xh, dt, a, bg, cg, ssm_state)
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, a, bg, cg, cfg.ssm_chunk,
+                                   init_state=ssm_state)
+
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    # gated norm: silu stays in model dtype (the f32 promotion costs a
+    # 2 GiB/device transient at 32k prefill; rms_norm is f32 internally)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = constrain(out, "batch", "seq", "embed_act")
+    new_cache = (ssm_state, conv_state) if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    ssm = jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state_size),
+                    jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype)
+    return ssm, conv

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dropless-ish
+capacity dispatch (TPU-friendly static shapes, FLOPs ∝ active experts).
+
+Two execution forms:
+  * ``moe_dense_reference`` — weighs *all* experts per token; O(E) FLOPs.
+    Used as the oracle in tests and for tiny smoke configs.
+  * ``moe_layer`` — capacity-based dispatch: tokens are sorted by expert,
+    packed into an (E, C, d) buffer, run through a grouped einsum, and
+    combined.  FLOPs scale with top-k, not E.  Tokens overflowing the
+    capacity C are dropped (their gate weight contributes nothing), as in
+    Switch/GShard; tests use capacity_factor high enough for zero drops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import ParamBuilder
+
+
+def init_moe(pb: ParamBuilder, d_model: int, d_ff: int, num_experts: int) -> None:
+    # expert weights get their own FSDP logical axis ("expert_embed"):
+    # the hillclimb can replicate them over data (killing per-layer
+    # all-gathers) without touching dense-layer FSDP
+    pb.dense("router", (d_model, num_experts), ("embed", None))
+    pb.dense("wg", (num_experts, d_model, d_ff),
+             ("experts", "expert_embed", "expert_mlp"))
+    pb.dense("wi", (num_experts, d_model, d_ff),
+             ("experts", "expert_embed", "expert_mlp"))
+    pb.dense("wo", (num_experts, d_ff, d_model),
+             ("experts", "expert_mlp", "expert_embed"))
+
+
+def _routing(p: Dict, x2d: jax.Array, top_k: int):
+    """Router logits -> (weights (T,k), experts (T,k), aux load-balance loss)."""
+    logits = (x2d @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)            # (T, k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * P_e
+    e = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)                              # mean router prob
+    onehot = jax.nn.one_hot(experts[:, 0], e)                 # top-1 assignment
+    ce = jnp.mean(onehot, axis=0)                             # fraction dispatched
+    aux = e * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def moe_dense_reference(p: Dict, x: jax.Array, *, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: run every expert, combine with top-k gate weights."""
+    b, l, d = x.shape
+    x2d = x.reshape(-1, d)
+    weights, experts, aux = _routing(p, x2d, top_k)
+    h = jnp.einsum("td,edf->tef", x2d, p["wg"])
+    g = jax.nn.silu(h) * jnp.einsum("td,edf->tef", x2d, p["wi"])
+    y_all = jnp.einsum("tef,efd->ted", g, p["wo"])            # (T, E, d)
+    e = p["router"].shape[-1]
+    gates = jnp.zeros((x2d.shape[0], e), jnp.float32)
+    gates = jax.vmap(lambda g_, e_, w_: g_.at[e_].add(w_))(gates, experts, weights)
+    y = jnp.einsum("te,ted->td", gates, y_all.astype(jnp.float32))
+    return y.reshape(b, l, d).astype(x.dtype), aux
+
+
+def _data_shards(t: int) -> int:
+    """Number of batch (data×pod) shards the token dim is split over —
+    dispatch is kept LOCAL per shard so the sort/scatter never crosses
+    devices (expert-parallel reality; also what XLA partitions cleanly)."""
+    from repro.distributed.sharding import current_rules
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return 1
+    s = rules.axis_size(rules.rules.get("batch"))
+    return s if s > 1 and t % s == 0 else 1
+
+
+def moe_layer(p: Dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-dispatch MoE with shard-local routing.  x: (B, L, d).
+
+    Tokens are viewed as (S, T/S, d) with S = batch-shard count; each
+    shard sorts and packs its own tokens into an (E, C_local, d) buffer
+    (vmap'd scatter → scatter with a sharded batch dim — no cross-shard
+    rematerialization).  Expert einsums carry the shard dim; expert
+    weights shard over 'experts' (E % axis == 0) or 'expert_mlp'.
+    """
+    b, l, d = x.shape
+    e = p["router"].shape[-1]
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    weights, experts, aux = _routing(p, x2d, top_k)
+
+    s = _data_shards(t)
+    tl = t // s                                                # tokens/shard
+    cap = max(1, int(math.ceil(tl * top_k / e * capacity_factor)))
+
+    x3 = constrain(x2d.reshape(s, tl, d), "batch", None, "embed_act")
+    w3 = weights.reshape(s, tl, top_k)
+    e3 = experts.reshape(s, tl, top_k)
+
+    def dispatch_local(xs, ws, es):
+        """One shard: (tl, d), (tl, k), (tl, k) → packed buffer + combine
+        metadata."""
+        flat_expert = es.reshape(-1)                           # (tl*k,)
+        flat_weight = ws.reshape(-1)
+        flat_token = jnp.repeat(jnp.arange(tl), top_k)
+        order = jnp.argsort(flat_expert, stable=True)
+        sorted_expert = flat_expert[order]
+        sorted_token = flat_token[order]
+        sorted_weight = flat_weight[order]
+        group_start = jnp.searchsorted(sorted_expert, jnp.arange(e),
+                                       side="left")
+        ranks = jnp.arange(tl * top_k) - group_start[sorted_expert]
+        keep = ranks < cap
+        dest = jnp.where(keep, sorted_expert * cap + ranks, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), xs.dtype)
+        buf = buf.at[dest].set(xs[sorted_token])
+        return buf[: e * cap], dest, sorted_token, sorted_weight * keep
+
+    buf, dest, s_tok, s_w = jax.vmap(dispatch_local)(x3, w3, e3)
+    dispatched = buf.reshape(s, e, cap, d)
+    dispatched = constrain(dispatched, "batch", "experts", None, "embed_act")
+
+    h = jnp.einsum("secd,edf->secf", dispatched, p["wg"])
+    g = jax.nn.silu(h) * jnp.einsum("secd,edf->secf", dispatched, p["wi"])
+    g = constrain(g, "batch", "experts", None, "expert_mlp")
+    y_exp = jnp.einsum("secf,efd->secd", g, p["wo"])           # (S,E,C,d)
+    y_exp = constrain(y_exp, "batch", "experts", None, "embed_act")
+
+    def combine_local(y_e, dest, s_tok, s_w):
+        # combine in model dtype: top-k ≤ 8 additions per token — bf16
+        # accumulation is fine and halves the (T·k, d) contrib transient
+        y_flat = jnp.concatenate(
+            [y_e.reshape(e * cap, d), jnp.zeros((1, d), y_e.dtype)], axis=0)
+        contrib = y_flat[dest] * s_w[:, None].astype(y_flat.dtype)
+        return jnp.zeros((tl, d), y_e.dtype).at[s_tok].add(contrib)
+
+    y = jax.vmap(combine_local)(y_exp, dest, s_tok, s_w)
+    y = constrain(y, "batch", None, "embed_act")
+    return y.reshape(b, l, d).astype(x.dtype), aux

@@ -1,0 +1,319 @@
+"""Full model assembly for every assigned architecture family.
+
+Layers are stacked in *pattern groups*: the layer pattern of period ``p``
+(dense: 1, jamba hybrid: 8) is unrolled inside a ``jax.lax.scan`` body and
+parameters are stacked over the ``G = num_layers / p`` groups.  This keeps
+HLO size O(pattern) instead of O(num_layers) — essential for dry-run
+compile times at 32–64 layers — and gives the remat boundary used in
+training (checkpoint per scan body).
+
+Caches (KV for attention layers, (ssm, conv) state for mamba layers) are
+pytrees stacked the same way, scanned through as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, constrain_tree
+from repro.models import mamba as mamba_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamBuilder, attention_layer, init_attention,
+                                 init_mlp, rms_norm, swiglu, write_kv_cache)
+from repro.models.moe import init_moe, moe_dense_reference, moe_layer
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        import math
+        return math.lcm(cfg.attn_layer_period, cfg.moe_layer_period)
+    return 1
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    p = pattern_period(cfg)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ------------------------------------------------------------------- init
+
+
+def _init_one_layer(key, cfg: ModelConfig, j: int, abstract: bool = False):
+    pb = ParamBuilder(key, cfg.np_dtype, abstract)
+    pb.ones("ln1", (cfg.d_model,), (None,))
+    mx = pb.sub("mixer")
+    if cfg.layer_kind(j) == "attn":
+        init_attention(mx, cfg)
+    else:
+        mamba_mod.init_mamba(mx, cfg)
+    if cfg.family == "ssm":
+        # mamba2 arch: no separate FFN (the block already mixes channels)
+        pass
+    else:
+        pb.ones("ln2", (cfg.d_model,), (None,))
+        ff = pb.sub("ffn")
+        if cfg.layer_is_moe(j):
+            init_moe(ff, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts)
+        else:
+            init_mlp(ff, cfg.d_model, cfg.d_ff)
+    return pb.params, pb.axes
+
+
+def init_params(cfg: ModelConfig, key=None,
+                abstract: bool = False) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_axes) with pattern-stacked blocks.
+
+    abstract=True: ShapeDtypeStruct leaves, no allocation (dry-run)."""
+    p = pattern_period(cfg)
+    g = num_groups(cfg)
+    if abstract:
+        keys = [None] * (2 + p * g)
+    else:
+        keys = list(jax.random.split(key, 2 + p * g))
+    pb = ParamBuilder(keys[0], cfg.np_dtype, abstract)
+    pb.dense("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+             scale=0.02)
+    blocks, blocks_axes = [], []
+    ki = 2
+    for j in range(p):
+        per_group = []
+        axes_j = None
+        for _ in range(g):
+            lp, la = _init_one_layer(keys[ki], cfg, j, abstract)
+            per_group.append(lp)
+            axes_j = la
+            ki += 1
+        if abstract:
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((g,) + s.shape, s.dtype),
+                per_group[0])
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                                   *per_group)
+        blocks.append(stacked)
+        # leading scan dim is unsharded
+        blocks_axes.append(jax.tree.map(
+            lambda ax: (None,) + tuple(ax),
+            axes_j, is_leaf=lambda x: isinstance(x, tuple)))
+    pb.params["blocks"] = blocks
+    pb.axes["blocks"] = blocks_axes
+    pb.ones("final_norm", (cfg.d_model,), (None,))
+    pb.dense("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+             scale=cfg.d_model ** -0.5)
+    return pb.params, pb.axes
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    """Logical-axes tree without materializing params."""
+    return init_params(cfg, abstract=True)[1]
+
+
+def param_shapes(cfg: ModelConfig):
+    return init_params(cfg, abstract=True)[0]
+
+
+# ------------------------------------------------------------------ cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> List[Any]:
+    """Per-pattern-position cache, stacked over groups.
+
+    attn position: {"k": (G,B,S,Hkv,D), "v": ...}
+    ssm  position: {"ssm": (G,B,nh,hd,ds), "conv": (G,B,W-1,C)}
+    """
+    dtype = dtype or cfg.np_dtype
+    p = pattern_period(cfg)
+    g = num_groups(cfg)
+    caches: List[Any] = []
+    for j in range(p):
+        if cfg.layer_kind(j) == "attn":
+            s = max_len
+            if cfg.sliding_window is not None:
+                s = min(max_len, cfg.sliding_window)
+            kv = jnp.zeros((g, batch, s, cfg.num_kv_heads, cfg.hdim), dtype)
+            caches.append({"k": kv, "v": kv})
+        else:
+            ssm, conv = mamba_mod.init_mamba_cache(cfg, batch, dtype)
+            caches.append({"ssm": jnp.broadcast_to(ssm, (g,) + ssm.shape),
+                           "conv": jnp.broadcast_to(conv, (g,) + conv.shape)})
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig) -> List[Any]:
+    """Logical axes for the cache pytree (serve rules shard KV seq)."""
+    p = pattern_period(cfg)
+    out: List[Any] = []
+    for j in range(p):
+        if cfg.layer_kind(j) == "attn":
+            ax = (None, "batch", "cache_seq", "kv_heads", "head_dim")
+            out.append({"k": ax, "v": ax})
+        else:
+            out.append({"ssm": (None, "batch", "ssm_heads", None, None),
+                        "conv": (None, "batch", None, "conv_ch")})
+    return out
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _block(cfg: ModelConfig, j: int, lp: Dict, x: jax.Array, cache, *,
+           positions, seq_valid_len, kv_valid_len, decode: bool,
+           rolling: bool, dense_write: bool = False):
+    """One pattern-position layer. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.layer_kind(j) == "attn":
+        kv = (cache["k"], cache["v"]) if cache is not None else None
+        if rolling and kv is not None:
+            window = kv[0].shape[1]
+            wfn = functools.partial(_rolling_write, window=window)
+            from repro.models.layers import rolling_mask
+            mix, upd = attention_layer(
+                lp["mixer"], h, cfg=cfg, positions=positions, kv=kv,
+                kv_valid_len=None, cache_write_fn=wfn,
+                mask_override=rolling_mask(positions, window))
+        else:
+            mix, upd = attention_layer(
+                lp["mixer"], h, cfg=cfg, positions=positions, kv=kv,
+                kv_valid_len=kv_valid_len, dense_cache_write=dense_write)
+        new_cache = {"k": upd[0], "v": upd[1]} if upd is not None else None
+    else:
+        cc = (cache["ssm"], cache["conv"]) if cache is not None else None
+        mix, upd = mamba_mod.mamba_layer(lp["mixer"], h, cfg=cfg, cache=cc,
+                                         decode=decode,
+                                         valid_len=seq_valid_len)
+        new_cache = {"ssm": upd[0], "conv": upd[1]} if upd is not None else None
+    x = x + mix
+    if cfg.family != "ssm":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.layer_is_moe(j):
+            if cfg.num_experts <= 8 and h.shape[0] * h.shape[1] <= 4096:
+                y, a = moe_dense_reference(lp["ffn"], h,
+                                           top_k=cfg.num_experts_per_tok)
+            else:
+                y, a = moe_layer(lp["ffn"], h, top_k=cfg.num_experts_per_tok)
+            aux = aux + a
+        else:
+            y = swiglu(lp["ffn"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _rolling_write(cache, new, positions, *, window):
+    return write_kv_cache(cache, new, positions % window)
+
+
+def forward(params: Dict, cfg: ModelConfig, *,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            caches: Optional[List[Any]] = None,
+            kv_valid_len: Optional[jax.Array] = None,
+            seq_valid_len: Optional[jax.Array] = None,
+            rolling: bool = False,
+            remat: bool = False,
+            logits_slice: Optional[str] = None,
+            dense_cache_write: bool = False,
+            ) -> Tuple[jax.Array, Optional[List[Any]], jax.Array]:
+    """Unified forward.
+
+    tokens: (B, L) int32 — or embeds: (B, L, d) for stub frontends.
+    positions: (B, L) absolute positions (defaults arange).
+    caches: from :func:`init_cache`; when given, attention writes new KV at
+      ``positions`` and mamba layers thread their state (decode inferred
+      from L == 1).  Caches ride the layer-scan CARRY and are updated with
+      dynamic_update_index_in_dim — in-place under buffer donation, so the
+      serving steps never hold two full cache copies.
+    dense_cache_write: fresh full prefill covering the entire cache
+      (L == S): KV "write" becomes a pure resharding copy.
+    logits_slice: None → full (B, L, V) logits; "last" → (B, V) of final
+      position only (decode/prefill TTFT path — avoids the full-vocab
+      matmul over L).
+    Returns (logits, new_caches, moe_aux_loss).
+    """
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds.astype(params["embed"].dtype)
+    b, l = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+    x = constrain(x, "batch", "seq", "embed_act")
+    decode = l == 1 and caches is not None
+
+    p = pattern_period(cfg)
+    has_cache = caches is not None
+    cache_axes = cache_logical_axes(cfg) if has_cache else None
+
+    def body(carry, xs):
+        if has_cache:
+            x, aux, cs_all, g = carry
+        else:
+            x, aux = carry
+            cs_all = None
+        lps = xs
+        for j in range(p):
+            if cs_all is not None:
+                cache_j = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, g, 0, keepdims=False), cs_all[j])
+            else:
+                cache_j = None
+            blk = functools.partial(
+                _block, cfg, j, positions=positions,
+                seq_valid_len=seq_valid_len, kv_valid_len=kv_valid_len,
+                decode=decode, rolling=rolling,
+                dense_write=dense_cache_write)
+            if remat and p > 1:
+                # nested per-layer remat: with a multi-layer pattern body
+                # (jamba p=8) a single body-level checkpoint would hold all
+                # 8 layers' residuals live during the block's backward
+                blk = jax.checkpoint(blk, prevent_cse=False)
+            x, nc, a = blk(lps[j], x, cache_j)
+            aux = aux + a
+            if cs_all is not None:
+                upd = jax.tree.map(
+                    lambda full, u: jax.lax.dynamic_update_index_in_dim(
+                        full, u.astype(full.dtype), g, 0),
+                    cs_all[j], nc)
+                # pin the loop-carried cache sharding: XLA's propagation
+                # through while-carries can decay to replicated (→ tens
+                # of GiB of KV rematerialized per device)
+                cs_all[j] = constrain_tree(upd, cache_axes[j])
+        if has_cache:
+            return (x, aux, cs_all, g + 1), None
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    zero = jnp.zeros((), jnp.float32)
+    if has_cache:
+        carry0 = (x, zero, list(caches), jnp.zeros((), jnp.int32))
+        (x, aux, new_caches, _), _ = jax.lax.scan(body, carry0,
+                                                  params["blocks"])
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, zero), params["blocks"])
+        new_caches = None
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    vpad = cfg.padded_vocab - cfg.vocab_size
+    if logits_slice == "last":
+        x = x[:, -1]
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "vocab")
+    else:
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "seq", "vocab")
+    if vpad:
+        # mask padded vocabulary columns (argmax/softmax safety)
+        neg = jnp.concatenate(
+            [jnp.zeros((cfg.vocab_size,), logits.dtype),
+             jnp.full((vpad,), -1e9, logits.dtype)])
+        logits = logits + neg
+    return logits, new_caches, aux

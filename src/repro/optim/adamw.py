@@ -1,0 +1,100 @@
+"""AdamW with fp32 master weights — ZeRO-1-style distribution.
+
+Optimizer state (m, v, master) mirrors the parameter tree; because train
+params are FSDP-sharded over the ``data`` axis (distributed.sharding
+TRAIN_RULES), the optimizer state is automatically partitioned across
+data-parallel workers — the ZeRO-1 property falls out of the sharding
+rules rather than a separate partitioning pass.  Compute params stay in
+the model dtype (bf16 at scale); masters/updates are fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> Dict:
+    # copy (not view) so master never aliases the donated param buffers
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads: Any, state: Dict, cfg: AdamWConfig,
+                 param_dtype=jnp.float32) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params_in_model_dtype, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return m, v, p - lr * step
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p2)
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "master": jax.tree.unflatten(treedef, new_p),
+        "count": count,
+    }
+    # force a copy when param dtype == fp32: params must not alias the
+    # master buffers (both are donated by the jit'd train step)
+    cast = (lambda p: p.astype(param_dtype)) if param_dtype != jnp.float32 \
+        else (lambda p: jnp.copy(p))
+    params = jax.tree.map(cast, new_state["master"])
+    return params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,3 @@
+from repro.serving.kvcache import KVArena  # noqa: F401
+from repro.serving.executor import BucketExecutor  # noqa: F401
+from repro.serving.engine import Engine, EngineConfig  # noqa: F401

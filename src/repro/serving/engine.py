@@ -1,0 +1,178 @@
+"""Single-instance serving engine: real JAX execution of the LAPS design.
+
+Composes the substrate — KVArena (slots) + BucketExecutor (captured
+shapes) + models.transformer — under the paper's scheduling primitives:
+
+  * short-prefill batches padded to the (L, B) bucket grid, executed as
+    one captured step (§3.1);
+  * re-prefill: new tokens written on top of the session's cached
+    history (positions carry the offset);
+  * long prefills advanced in fixed chunks C_l (§3.2);
+  * decode steps batched across sessions;
+  * runtime (T, L, H) samples feed core.boundary.fit — the engine
+    re-estimates L_m live, exactly the paper's "fitting at runtime".
+
+Runs identically with smoke configs on this CPU container and (with a
+mesh + serve sharding rules) on a TPU pod slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boundary as boundary_mod
+from repro.core.buckets import BucketGrid
+from repro.models.config import ModelConfig
+from repro.serving.executor import BucketExecutor
+from repro.serving.kvcache import KVArena
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 16
+    max_len: int = 256
+    chunk_tokens: int = 64           # C_l
+    grid_lengths: Tuple[int, ...] = (8, 16, 32, 64)
+    grid_depths: Tuple[int, ...] = (1, 2, 4, 8)
+    pad_token: int = 0
+    measure: bool = True             # collect boundary-fit samples
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: Optional[EngineConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg or EngineConfig()
+        self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len)
+        self.executor = BucketExecutor(cfg)
+        self.grid = BucketGrid(self.ecfg.grid_lengths, self.ecfg.grid_depths,
+                               mem_budget_tokens=self.ecfg.num_slots
+                               * self.ecfg.max_len)
+        self.samples: List[Tuple[float, float, float]] = []  # (T, L, H)
+        self.fitted: Optional[boundary_mod.TotalFit] = None
+
+    # ------------------------------------------------------------ session
+    def open_session(self, session: int) -> None:
+        self.arena.alloc(session)
+
+    def close_session(self, session: int) -> None:
+        self.arena.free(session)
+
+    def history(self, session: int) -> int:
+        return self.arena.length(session)
+
+    # ------------------------------------------------- bucketized prefill
+    def prefill_batch(self, sessions: Sequence[int],
+                      token_lists: Sequence[np.ndarray],
+                      bucket: Optional[Tuple[int, int]] = None
+                      ) -> Dict[int, int]:
+        """Short-prefill / re-prefill batch.  Pads to ``bucket`` (L, B)
+        when given (graph path), else to max length (standard path).
+        Returns {session: first_sampled_token}."""
+        assert len(sessions) == len(token_lists)
+        n = len(sessions)
+        lens = [len(t) for t in token_lists]
+        if bucket is not None:
+            pad_l, pad_b = bucket
+            assert pad_l >= max(lens) and pad_b >= n, (bucket, lens, n)
+        else:
+            pad_l, pad_b = max(lens), n
+
+        slots, hists = [], []
+        for s in sessions:
+            slots.append(self.arena.alloc(s))
+            hists.append(self.arena.length(s))
+        # depth padding reuses slot 0's cache row for dummy rows
+        all_slots = slots + [slots[0]] * (pad_b - n)
+
+        tokens = np.full((pad_b, pad_l), self.ecfg.pad_token, np.int32)
+        positions = np.zeros((pad_b, pad_l), np.int32)
+        sample_idx = np.zeros((pad_b,), np.int32)
+        park = self.arena.max_len - 1
+        for i, (tl, h) in enumerate(zip(token_lists, hists)):
+            tokens[i, :len(tl)] = tl
+            pos = h + np.arange(pad_l)
+            pos[len(tl):] = park                    # junk KV → parking slot
+            positions[i] = pos
+            sample_idx[i] = len(tl) - 1
+        positions[n:] = park                        # dummy depth rows
+
+        caches = self.arena.gather(all_slots)
+        t0 = time.perf_counter()
+        last, new_caches = self.executor.prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            caches, jnp.asarray(sample_idx))
+        toks = np.asarray(jnp.argmax(last, axis=-1))
+        elapsed = time.perf_counter() - t0
+        # write back only the real rows
+        self.arena.scatter(slots, jax.tree.map(
+            lambda a: a[:, :n], new_caches))
+        out: Dict[int, int] = {}
+        for i, s in enumerate(sessions):
+            self.arena.set_length(s, hists[i] + lens[i])
+            out[s] = int(toks[i])
+        if self.ecfg.measure and n:
+            per = elapsed / n
+            for l, h in zip(lens, hists):
+                self.samples.append((per, float(l), float(h)))
+        return out
+
+    # ------------------------------------------------------ long prefill
+    def prefill_long(self, session: int, token_list: np.ndarray) -> int:
+        """Chunked long prefill (C_l per step).  Returns first token."""
+        c = self.ecfg.chunk_tokens
+        tok = None
+        for start in range(0, len(token_list), c):
+            chunk = token_list[start:start + c]
+            res = self.prefill_batch([session], [np.asarray(chunk)])
+            tok = res[session]
+        return tok
+
+    # ------------------------------------------------------------- decode
+    def decode_batch(self, sessions: Sequence[int],
+                     tokens: Sequence[int], steps: int = 1
+                     ) -> Dict[int, List[int]]:
+        """Greedy decode ``steps`` tokens for each session."""
+        n = len(sessions)
+        slots = [self.arena.slot_of(s) for s in sessions]
+        cur = np.asarray(tokens, np.int32)
+        out: Dict[int, List[int]] = {s: [] for s in sessions}
+        for _ in range(steps):
+            hists = [self.arena.length(s) for s in sessions]
+            positions = np.asarray(hists, np.int32)[:, None]
+            caches = self.arena.gather(slots)
+            logits, new_caches = self.executor.decode(
+                self.params, jnp.asarray(cur[:, None]),
+                jnp.asarray(positions), caches)
+            self.arena.scatter(slots, new_caches)
+            cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for i, s in enumerate(sessions):
+                self.arena.set_length(s, hists[i] + 1)
+                out[s].append(int(cur[i]))
+        return out
+
+    # ------------------------------------------------------ runtime fit
+    def fit_boundary(self) -> Optional[boundary_mod.TotalFit]:
+        if len(self.samples) >= 8:
+            self.fitted = boundary_mod.fit_total(self.samples)
+        return self.fitted
+
+    def classification_threshold(self, history: int = 0) -> float:
+        if self.fitted is not None:
+            return self.fitted.boundary(history)
+        return boundary_mod.H200_QWEN32B.boundary(history)
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict:
+        return {
+            "graph_hit_rate": self.executor.hit_rate,
+            "captured_shapes": len(self.executor.compile_times),
+            "capture_seconds": self.executor.capture_cost(),
+            "free_slots": self.arena.free_slots,
+            "fit_samples": len(self.samples),
+        }

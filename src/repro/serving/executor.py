@@ -1,0 +1,122 @@
+"""Bucketized AOT-executable cache — the TPU analogue of CUDA Graph
+capture (§3.1, DESIGN.md §2).
+
+Each (kind, L_bucket, B_bucket) shape is lowered + compiled ONCE
+(``jax.jit(...).lower(...).compile()``) and re-dispatched with zero
+retracing afterwards.  A shape miss costs a fresh compile — seconds,
+like the paper's 8–12 s per-graph capture — which is precisely why the
+scheduler pads to the captured grid.  Compile times and hit/miss
+statistics are recorded for the §4.2 cost analysis.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+def make_prefill_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(B,L), positions(B,L), caches, sample_idx(B,)) →
+    (last_logits(B,V), new_caches).  Covers first prefill AND re-prefill
+    (positions carry the history offset)."""
+
+    def prefill_step(params, tokens, positions, caches, sample_idx):
+        logits, new_caches, _ = tr.forward(
+            params, cfg, tokens=tokens, positions=positions, caches=caches,
+            seq_valid_len=sample_idx + 1)
+        last = jnp.take_along_axis(
+            logits, sample_idx[:, None, None], axis=1)[:, 0]
+        return last, new_caches
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig) -> Callable:
+    def decode_step(params, tokens, positions, caches):
+        logits, new_caches, _ = tr.forward(
+            params, cfg, tokens=tokens, positions=positions, caches=caches,
+            logits_slice="last")
+        return logits, new_caches
+
+    return decode_step
+
+
+class BucketExecutor:
+    def __init__(self, cfg: ModelConfig, donate_cache: Optional[bool] = None):
+        self.cfg = cfg
+        self._prefill = make_prefill_fn(cfg)
+        self._decode = make_decode_fn(cfg)
+        if donate_cache is None:  # buffer donation: TPU yes, CPU warns
+            donate_cache = jax.default_backend() == "tpu"
+        self._jit_prefill = jax.jit(self._prefill,
+                                    donate_argnums=(3,) if donate_cache else ())
+        self._jit_decode = jax.jit(self._decode,
+                                   donate_argnums=(3,) if donate_cache else ())
+        self._compiled: Dict[Tuple, Any] = {}
+        self.compile_times: Dict[Tuple, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # --------------------------------------------------------------- keys
+    @staticmethod
+    def _key(kind: str, *arrays) -> Tuple:
+        def sig(x):
+            return tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(x))
+        return (kind,) + tuple(sig(a) for a in arrays)
+
+    def _get(self, kind: str, jitted, args) -> Any:
+        key = self._key(kind, *args)
+        exe = self._compiled.get(key)
+        if exe is None:
+            self.misses += 1
+            t0 = time.perf_counter()
+            exe = jitted.lower(*args).compile()
+            self.compile_times[key] = time.perf_counter() - t0
+            self._compiled[key] = exe
+        else:
+            self.hits += 1
+        return exe
+
+    # ---------------------------------------------------------- dispatch
+    def prefill(self, params, tokens, positions, caches, sample_idx):
+        exe = self._get("prefill", self._jit_prefill,
+                        (params, tokens, positions, caches, sample_idx))
+        return exe(params, tokens, positions, caches, sample_idx)
+
+    def decode(self, params, tokens, positions, caches):
+        exe = self._get("decode", self._jit_decode,
+                        (params, tokens, positions, caches))
+        return exe(params, tokens, positions, caches)
+
+    # ------------------------------------------------------------- stats
+    def capture_cost(self) -> float:
+        """Total 'graph capture' (compile) seconds — §4.2."""
+        return sum(self.compile_times.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def precapture(self, params, arena_gather, lengths, depths) -> float:
+        """Capture the (L, B) grid at init (paper: graphs captured at
+        system initialization).  Returns total capture seconds."""
+        t0 = time.perf_counter()
+        for b in depths:
+            caches = arena_gather(list(range(b)))
+            for l in lengths:
+                tokens = jnp.zeros((b, l), jnp.int32)
+                positions = jnp.zeros((b, l), jnp.int32)
+                sample_idx = jnp.zeros((b,), jnp.int32)
+                self._get("prefill", self._jit_prefill,
+                          (params, tokens, positions, caches, sample_idx))
+            tok1 = jnp.zeros((b, 1), jnp.int32)
+            pos1 = jnp.zeros((b, 1), jnp.int32)
+            self._get("decode", self._jit_decode,
+                      (params, tok1, pos1, caches))
+        return time.perf_counter() - t0

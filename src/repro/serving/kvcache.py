@@ -1,0 +1,81 @@
+"""Slot-arena KV/state cache.
+
+TPU-friendly dense layout: one preallocated arena per layer-pattern
+position with a leading slot dimension —
+
+  attention:  k/v  (G, slots, S_max, Hkv, D)
+  mamba:      ssm  (G, slots, NH, HD, DS) fp32, conv (G, slots, W-1, C)
+
+Sessions own slots; a batch is assembled by gathering its slot rows and
+written back by scatter.  Statically shaped throughout (S_max fixed), so
+every bucketized step compiles once — the paged-KV pointer chasing of
+GPU systems is replaced by whole-slot gathers, which XLA turns into
+efficient dynamic-slice DMAs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+class KVArena:
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 dtype=None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        # build per-slot cache then add the slot axis via the batch dim:
+        # init_cache already produces (G, B, ...) — treat B as slots
+        self.arena = tr.init_cache(cfg, num_slots, max_len, dtype)
+        self._free: List[int] = list(range(num_slots))
+        self._session_slot: Dict[int, int] = {}
+        self.lengths: Dict[int, int] = {}          # session -> tokens cached
+
+    # ----------------------------------------------------------- slots
+    def alloc(self, session: int) -> int:
+        if session in self._session_slot:
+            return self._session_slot[session]
+        if not self._free:
+            raise RuntimeError("KV arena exhausted")
+        slot = self._free.pop()
+        self._session_slot[session] = slot
+        self.lengths[session] = 0
+        return slot
+
+    def free(self, session: int) -> None:
+        slot = self._session_slot.pop(session, None)
+        if slot is not None:
+            self._free.append(slot)
+            self.lengths.pop(session, None)
+
+    def slot_of(self, session: int) -> Optional[int]:
+        return self._session_slot.get(session)
+
+    def length(self, session: int) -> int:
+        return self.lengths.get(session, 0)
+
+    def set_length(self, session: int, n: int) -> None:
+        if n > self.max_len - 2:
+            raise RuntimeError(
+                f"session {session} overflows arena ({n} > {self.max_len - 2})")
+        self.lengths[session] = n
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    # ---------------------------------------------------------- gather
+    def gather(self, slots: List[int]) -> Any:
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(lambda a: jnp.take(a, idx, axis=1), self.arena)
+
+    def scatter(self, slots: List[int], batch_cache: Any) -> None:
+        idx = jnp.asarray(slots, jnp.int32)
+        self.arena = jax.tree.map(
+            lambda a, b: a.at[:, idx].set(b.astype(a.dtype)),
+            self.arena, batch_cache)

@@ -1,0 +1,129 @@
+"""Wall-clock serving loop: core policies driving the real JAX engine.
+
+This is the production composition (launch/serve.py wraps it):
+
+  requests → DualQueue classification → AWD short batches / chunked
+  long prefills → bucketized AOT executables → KV arena → decode.
+
+The same policy objects run in the simulator under a virtual clock; here
+they schedule real JAX computations, TTFTs are real wall-clock, and the
+engine's (T, L, H) samples continuously re-fit the §2.1 boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.request import Batch, Request
+from repro.core.scheduler import BasePolicy, ChunkWork
+from repro.core.slo import SLOTracker
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    req: Request
+    tokens: np.ndarray
+    decode_tokens: int = 0
+
+
+class ServeLoop:
+    def __init__(self, engine: Engine, policy: BasePolicy,
+                 slo_ttft: Optional[float] = 0.4,
+                 clock: Callable[[], float] = time.monotonic,
+                 refit_every: int = 16):
+        self.engine = engine
+        self.policy = policy
+        self.clock = clock
+        self.tracker = SLOTracker(slo_ttft)
+        self.slo = slo_ttft
+        self._tokens: Dict[int, PendingRequest] = {}
+        self._outstanding = 0
+        self.refit_every = refit_every
+        self._since_fit = 0
+        self.first_tokens: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ intake
+    def submit(self, session: int, tokens: np.ndarray,
+               decode_tokens: int = 0,
+               deadline: Optional[float] = None) -> Request:
+        now = self.clock()
+        self.engine.open_session(session)
+        r = Request(new_tokens=len(tokens),
+                    history_tokens=self.engine.history(session),
+                    arrival=now,
+                    deadline=deadline if deadline is not None else
+                    (now + self.slo if self.slo else None),
+                    session=session)
+        self._tokens[r.rid] = PendingRequest(r, np.asarray(tokens),
+                                             decode_tokens)
+        self.policy.enqueue(r, now)
+        self._outstanding += 1
+        return r
+
+    # ----------------------------------------------------------- execute
+    def _run_batch(self, batch: Batch) -> None:
+        now = self.clock()
+        sessions, token_lists = [], []
+        for r in batch.requests:
+            r.dispatch_time = now
+            pr = self._tokens[r.rid]
+            sessions.append(r.session)
+            token_lists.append(pr.tokens)
+        bucket = None
+        if batch.uses_graph:
+            bucket = (batch.bucket_len, batch.bucket_depth)
+        firsts = self.engine.prefill_batch(sessions, token_lists, bucket)
+        done = self.clock()
+        for r in batch.requests:
+            r.finish_time = done
+            self.tracker.record(r)
+            self.first_tokens[r.session] = firsts[r.session]
+            self._outstanding -= 1
+
+    def _run_chunk(self, work: ChunkWork) -> None:
+        now = self.clock()
+        r = work.req
+        if r.dispatch_time is None:
+            r.dispatch_time = now
+        pr = self._tokens[r.rid]
+        chunk = pr.tokens[work.done_tokens:work.done_tokens + work.chunk_tokens]
+        firsts = self.engine.prefill_batch([r.session], [np.asarray(chunk)])
+        if work.is_last:
+            r.finish_time = self.clock()
+            self.tracker.record(r)
+            self.first_tokens[r.session] = firsts[r.session]
+            self._outstanding -= 1
+
+    # --------------------------------------------------------------- run
+    def run_until_idle(self, max_wall: float = 60.0) -> None:
+        start = self.clock()
+        while self._outstanding > 0 and self.clock() - start < max_wall:
+            now = self.clock()
+            work, wake = self.policy.next_work(now)
+            if isinstance(work, Batch) and work.requests:
+                self._run_batch(work)
+                self.policy.on_complete(work, self.clock())
+            elif isinstance(work, ChunkWork):
+                self._run_chunk(work)
+                self.policy.on_complete(work, self.clock())
+            elif wake is not None:
+                time.sleep(max(0.0, min(wake - now, 0.01)))
+            else:
+                time.sleep(0.0005)
+            self._since_fit += 1
+            if self._since_fit >= self.refit_every:
+                self._since_fit = 0
+                fit = self.engine.fit_boundary()
+                if fit is not None and hasattr(self.policy, "dq") and \
+                        self.policy.dq.override is None:
+                    self.policy.dq.model = None  # fitted threshold wins
+                    self.policy.dq.override = fit.boundary()
+
+    def decode(self, session: int, steps: int) -> List[int]:
+        first = self.first_tokens.get(session, 0)
+        out = self.engine.decode_batch([session], [first], steps)
+        return [first] + out[session]

@@ -1,0 +1,4 @@
+from repro.sim.costmodel import CostModel, H200_32B, H200_14B, H200_7B  # noqa: F401
+from repro.sim.simulator import ClusterSim, SimConfig  # noqa: F401
+from repro.sim.workload import (WorkloadConfig, lmsys_like_requests,  # noqa: F401
+                                closed_loop_clients, length_stats)

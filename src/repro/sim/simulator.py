@@ -1,0 +1,311 @@
+"""Discrete-event cluster simulator.
+
+Drives the *same* policy objects (core.scheduler) the real engine uses,
+under a calibrated cost model, to reproduce the paper's experiments at
+H200-cluster scale on this CPU-only container.  Supports:
+
+  * shared-queue (temporal disaggregation, N ≥ 1 instances pulling from
+    one policy) and routed (per-instance policies + router) topologies;
+  * routers: round_robin, least_loaded (SGLang-router-like), pool
+    (PLA spatial: classify → pool → least-loaded member);
+  * Algorithm 2 controller with live instance migration between pools;
+  * MIX mode (decode sessions co-resident with prefill — Fig.8);
+  * closed-loop clients (Fig.1/3/6) and open-loop traces (Fig.7);
+  * fault injection: instance failure/join and straggler slowdown.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.controller import (InstanceStats, Migration,
+                                   PressureController)
+from repro.core.request import Batch, Request
+from repro.core.scheduler import BasePolicy, ChunkWork, PoolPolicy
+from repro.core.slo import SLOTracker
+from repro.sim.costmodel import CostModel
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mode: str = "pd"              # "pd" (prefill-only instance) | "mix"
+    router: str = "shared"        # shared | round_robin | least_loaded | pool
+    control_period: float = 0.0   # >0 enables the pressure controller
+    slo_ttft: Optional[float] = 0.4
+    seed: int = 0
+    max_events: int = 5_000_000
+
+
+class _Instance:
+    def __init__(self, idx: int, policy: Optional[BasePolicy],
+                 speed: float = 1.0):
+        self.idx = idx
+        self.policy = policy          # None in shared mode
+        self.speed = speed
+        self.busy = False
+        self.alive = True
+        self.busy_time = 0.0
+        self.busy_mark = 0.0          # busy_time at last control period
+        self.decode_sessions: List[int] = []
+        self.recent_dev: List[float] = []
+        self.prefill_done = 0
+        self.current = None
+
+
+class ClusterSim:
+    def __init__(self, n_instances: int,
+                 policy_factory: Callable[[int], BasePolicy],
+                 cost: CostModel, cfg: Optional[SimConfig] = None,
+                 shared_policy: Optional[BasePolicy] = None,
+                 classifier: Optional[Callable[[Request], str]] = None,
+                 controller: Optional[PressureController] = None,
+                 pools: Optional[Dict[int, str]] = None):
+        self.cfg = cfg or SimConfig()
+        self.cost = cost
+        self.shared = shared_policy
+        self.classifier = classifier
+        self.controller = controller
+        self.instances = [
+            _Instance(i, None if shared_policy is not None else policy_factory(i))
+            for i in range(n_instances)]
+        self.pools = pools or {}
+        self.tracker = SLOTracker(self.cfg.slo_ttft)
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self._rr = 0
+        self.now = 0.0
+        self.clients: List = []
+        self._client_busy: Dict[int, bool] = {}
+
+    # ------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, data=None) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, data))
+
+    def add_requests(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self._push(r.arrival, "arrival", r)
+
+    def add_clients(self, clients, start: float = 0.0,
+                    think_time: float = 0.0) -> None:
+        self.clients = list(clients)
+        self.think = think_time
+        for cid in range(len(self.clients)):
+            self._push(start, "client", cid)
+
+    def inject_failure(self, t: float, instance: int) -> None:
+        self._push(t, "fail", instance)
+
+    def inject_join(self, t: float, instance_speed: Tuple[int, float]) -> None:
+        self._push(t, "join", instance_speed)
+
+    def set_straggler(self, instance: int, speed: float) -> None:
+        self.instances[instance].speed = speed
+
+    # ------------------------------------------------------------ routing
+    def _route(self, r: Request) -> Optional[_Instance]:
+        alive = [i for i in self.instances if i.alive]
+        if not alive:
+            return None
+        if self.cfg.router == "round_robin":
+            self._rr = (self._rr + 1) % len(alive)
+            return alive[self._rr]
+        if self.cfg.router == "least_loaded":
+            return min(alive, key=lambda i: i.policy.backlog_tokens())
+        if self.cfg.router == "pool":
+            cls = self.classifier(r) if self.classifier else "short"
+            members = [i for i in alive
+                       if getattr(i.policy, "pool", None) == cls]
+            if not members:
+                members = alive
+            return min(members, key=lambda i: i.policy.backlog_tokens())
+        return None  # shared
+
+    # ------------------------------------------------------------- engine
+    def _try(self, inst: _Instance) -> None:
+        if inst.busy or not inst.alive:
+            return
+        policy = self.shared if self.shared is not None else inst.policy
+        work, wake = policy.next_work(self.now)
+        if work is None:
+            # MIX: run a decode-only step if sessions are active
+            if self.cfg.mode == "mix" and inst.decode_sessions:
+                dt = self.cost.decode_step_time(len(inst.decode_sessions)) \
+                    * inst.speed
+                inst.busy = True
+                inst.current = "decode"
+                self._push(self.now + dt, "done", (inst.idx, "decode"))
+            elif wake is not None and wake > self.now:
+                self._push(wake, "try", inst.idx)
+            return
+        service = self.cost.work_time(work) * inst.speed
+        if self.cfg.mode == "mix" and inst.decode_sessions:
+            # continuous batching: the step piggybacks a decode token for
+            # every active session
+            service += self.cost.decode_step_time(len(inst.decode_sessions)) \
+                * inst.speed
+            inst.decode_sessions = [s - 1 for s in inst.decode_sessions if s > 1]
+        if isinstance(work, Batch):
+            for r in work.requests:
+                if r.dispatch_time is None:
+                    r.dispatch_time = self.now
+                r.instance = inst.idx
+        elif isinstance(work, ChunkWork):
+            if work.req.dispatch_time is None:
+                work.req.dispatch_time = self.now
+            work.req.instance = inst.idx
+        inst.busy = True
+        inst.current = work
+        self._push(self.now + service, "done", (inst.idx, work))
+
+    def _finish(self, inst: _Instance, work) -> None:
+        inst.busy = False
+        inst.current = None
+        if work == "decode":
+            inst.decode_sessions = [s - 1 for s in inst.decode_sessions if s > 1]
+            return
+        policy = self.shared if self.shared is not None else inst.policy
+        policy.on_complete(work, self.now)
+        if isinstance(work, Batch):
+            for r in work.requests:
+                r.finish_time = self.now
+                self.tracker.record(r)
+                self._after_request(inst, r)
+        elif isinstance(work, ChunkWork) and work.is_last:
+            work.req.finish_time = self.now
+            self.tracker.record(work.req)
+            self._after_request(inst, work.req)
+
+    def _after_request(self, inst: _Instance, r: Request) -> None:
+        inst.prefill_done += 1
+        if r.deadline is not None:
+            inst.recent_dev.append(max(0.0, (r.finish_time or 0.0) - r.deadline))
+        if self.cfg.mode == "mix" and r.decode_tokens > 0:
+            inst.decode_sessions.append(r.decode_tokens)
+        if 0 <= r.session < len(self.clients) and \
+                self._client_busy.get(r.session, False):
+            self._client_busy[r.session] = False
+            self._push(self.now + self.think, "client", r.session)
+
+    # ---------------------------------------------------------- controller
+    def _instance_stats(self, inst: _Instance, period: float) -> InstanceStats:
+        util = (inst.busy_time - inst.busy_mark) / max(period, 1e-9)
+        inst.busy_mark = inst.busy_time
+        dev = sum(inst.recent_dev) / len(inst.recent_dev) \
+            if inst.recent_dev else 0.0
+        # clip: structurally unmeetable deadlines (a 20k-token prefill vs
+        # a 0.4 s TTFT SLO) must not dominate pool pressure, or the
+        # controller starves the healthy pool chasing lost causes
+        dev = min(dev, 1.0)
+        inst.recent_dev = []
+        backlog = inst.policy.backlog_tokens() / 16_384 if inst.policy else 0.0
+        return InstanceStats(inst.idx, backlog, dev, min(util, 1.0))
+
+    def _control(self) -> None:
+        period = self.cfg.control_period
+        alive = [i for i in self.instances if i.alive and i.policy is not None]
+        shorts = [self._instance_stats(i, period) for i in alive
+                  if getattr(i.policy, "pool", None) == "short"]
+        longs = [self._instance_stats(i, period) for i in alive
+                 if getattr(i.policy, "pool", None) == "long"]
+        if self.controller is not None and shorts and longs:
+            mig: Optional[Migration] = self.controller.step(
+                shorts, longs, self.now)
+            if mig is not None:
+                inst = self.instances[mig.instance]
+                if isinstance(inst.policy, PoolPolicy):
+                    inst.policy.pool = mig.dst_pool
+        self._push(self.now + period, "control")
+
+    # --------------------------------------------------------------- run
+    def run(self, until: float = float("inf")) -> SLOTracker:
+        if self.cfg.control_period > 0:
+            self._push(self.cfg.control_period, "control")
+        events = 0
+        busy_since: Dict[int, float] = {}
+        while self._events and events < self.cfg.max_events:
+            t, _, kind, data = heapq.heappop(self._events)
+            if t > until:
+                break
+            self.now = t
+            events += 1
+            if kind == "arrival":
+                r: Request = data
+                if self.shared is not None:
+                    self.shared.enqueue(r, t)
+                    for inst in self.instances:
+                        self._try(inst)
+                else:
+                    inst = self._route(r)
+                    if inst is not None:
+                        inst.policy.enqueue(r, t)
+                        self._try(inst)
+            elif kind == "client":
+                # enqueue synchronously: the next turn must be visible to
+                # any same-timestamp "try" of a freed instance, otherwise
+                # the instance grabs a long chunk before the arrival lands
+                cid: int = data
+                if cid < len(self.clients):
+                    r = self.clients[cid](t)
+                    if r is not None:
+                        r.arrival = t
+                        r.session = cid
+                        self._client_busy[cid] = True
+                        if self.shared is not None:
+                            self.shared.enqueue(r, t)
+                            for inst in self.instances:
+                                self._try(inst)
+                        else:
+                            inst = self._route(r)
+                            if inst is not None:
+                                inst.policy.enqueue(r, t)
+                                self._try(inst)
+            elif kind == "try":
+                self._try(self.instances[data])
+            elif kind == "done":
+                idx, work = data
+                inst = self.instances[idx]
+                if not inst.alive or inst.current is not work:
+                    continue  # stale completion from a failed instance
+                self._finish(inst, work)
+                # defer the idle re-check behind same-timestamp client
+                # releases pushed by _finish (closed-loop next turns)
+                self._push(self.now, "try", inst.idx)
+            elif kind == "fail":
+                inst = self.instances[data]
+                inst.alive = False
+                # in-flight work dies with the node: the request is
+                # re-submitted (re-prefill from cached/replicated state)
+                if isinstance(inst.current, Batch):
+                    for r in inst.current.requests:
+                        r.dispatch_time = None
+                        self._push(self.now, "arrival", r)
+                elif isinstance(inst.current, ChunkWork):
+                    inst.current.req.dispatch_time = None
+                    self._push(self.now, "arrival", inst.current.req)
+                inst.current, inst.busy = None, False
+                # queued requests are re-routed to surviving instances
+                if inst.policy is not None:
+                    for r in inst.policy.drain():
+                        r.dispatch_time = None
+                        self._push(self.now, "arrival", r)
+            elif kind == "join":
+                idx, speed = data
+                while len(self.instances) <= idx:
+                    self.instances.append(_Instance(len(self.instances), None))
+                self.instances[idx].alive = True
+                self.instances[idx].speed = speed
+            elif kind == "control":
+                self._control()
+            # busy-time accounting
+            for inst in self.instances:
+                if inst.busy and inst.idx not in busy_since:
+                    busy_since[inst.idx] = t
+                elif not inst.busy and inst.idx in busy_since:
+                    inst.busy_time += t - busy_since.pop(inst.idx)
+        return self.tracker
+
+    # ------------------------------------------------------------ metrics
+    def prefill_rps(self, horizon: float) -> float:
+        return sum(i.prefill_done for i in self.instances) / max(horizon, 1e-9)

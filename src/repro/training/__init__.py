@@ -1,0 +1,2 @@
+from repro.training.train_step import make_train_step, cross_entropy  # noqa: F401
+from repro.training.loop import TrainLoop, TrainConfig  # noqa: F401

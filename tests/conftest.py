@@ -1,0 +1,11 @@
+import os
+import sys
+
+# single real device for tests/benches (dry-run sets its own flag)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

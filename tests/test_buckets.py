@@ -1,0 +1,54 @@
+"""§3.1 bucket grid properties."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.buckets import BucketGrid, greedy_length_groups
+
+
+def grid(budget=16_384):
+    return BucketGrid(mem_budget_tokens=budget)
+
+
+@given(l=st.integers(1, 256))
+def test_nearest_length_is_minimal_cover(l):
+    g = grid()
+    n = g.nearest_length(l)
+    assert n is not None and n >= l
+    smaller = [x for x in g.lengths if x < n]
+    assert all(x < l for x in smaller)
+
+
+@given(l=st.integers(257, 10_000))
+def test_off_grid_lengths_rejected(l):
+    assert grid().nearest_length(l) is None
+
+
+@given(lengths=st.lists(st.integers(1, 256), min_size=1, max_size=64))
+def test_nearest_graph_covers(lengths):
+    g = grid()
+    b = g.nearest_graph(lengths)
+    if b is not None:
+        assert b.length >= max(lengths)
+        assert b.depth >= len(lengths)
+        assert b.tokens <= g.mem_budget
+        assert 0.0 <= g.padding_waste(lengths) < 1.0
+
+
+def test_nearest_graph_budget_rejection():
+    g = grid(budget=64)
+    assert g.nearest_graph([256]) is None     # 256 > 64 budget
+    assert g.nearest_graph([8] * 100) is None  # depth 100 off-grid
+
+
+def test_max_depth():
+    g = grid(budget=1024)
+    assert g.max_depth(8) == 64
+    assert g.max_depth(256) == 4
+    assert g.max_depth(256, mem_budget=256) == 1
+
+
+@given(lengths=st.lists(st.integers(1, 300), min_size=1, max_size=50))
+def test_greedy_groups_partition(lengths):
+    groups = greedy_length_groups(lengths, grid())
+    flat = sorted(i for grp in groups for i in grp)
+    assert flat == list(range(len(lengths)))

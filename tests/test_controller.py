@@ -1,0 +1,66 @@
+"""Algorithm 2 — instance-pressure controller behaviour."""
+import pytest
+
+from repro.core.controller import (ControllerConfig, InstanceStats,
+                                   PressureController)
+
+
+def stats(idx, q=0.0, e=0.0, u=0.0):
+    return InstanceStats(idx, q, e, u)
+
+
+def test_migrates_under_imbalance():
+    c = PressureController(ControllerConfig(t_cool=0.0, tau=0.25))
+    shorts = [stats(0, q=5.0, e=1.0), stats(1, q=4.0, e=0.8)]
+    longs = [stats(2, q=0.1, u=0.2), stats(3, q=0.1, u=0.3)]
+    mig = c.step(shorts, longs, now=10.0)
+    assert mig is not None
+    assert mig.src_pool == "long" and mig.dst_pool == "short"
+    assert mig.instance in (2, 3)
+
+
+def test_respects_n_min():
+    c = PressureController(ControllerConfig(t_cool=0.0, n_min=1))
+    shorts = [stats(0, q=9.0)]
+    longs = [stats(1, q=0.0)]
+    assert c.step(shorts, longs, now=1.0) is None  # long pool at n_min
+
+
+def test_hysteresis_blocks_small_imbalance():
+    c = PressureController(ControllerConfig(t_cool=0.0, tau=0.5))
+    shorts = [stats(0, q=1.1), stats(1, q=1.0)]
+    longs = [stats(2, q=1.0), stats(3, q=0.9)]
+    assert c.step(shorts, longs, now=1.0) is None
+
+
+def test_cooldown():
+    c = PressureController(ControllerConfig(t_cool=5.0, tau=0.1))
+    shorts = [stats(0, q=9.0), stats(1, q=9.0)]
+    longs = [stats(2, q=0.0), stats(3, q=0.0)]
+    assert c.step(shorts, longs, now=0.0) is not None
+    assert c.step(shorts, longs, now=2.0) is None      # cooling down
+    assert c.step(shorts, longs, now=6.0) is not None  # cooled
+
+
+def test_utilization_credits_pressure():
+    c = PressureController(ControllerConfig())
+    busy = stats(0, q=1.0, u=1.0)
+    idle = stats(1, q=1.0, u=0.0)
+    assert c.pressure(busy) < c.pressure(idle)
+
+
+def test_p90_aggregator_robust_to_one_hot_instance():
+    c = PressureController(ControllerConfig(quantile=0.5))
+    pool = [stats(i, q=0.1) for i in range(9)] + [stats(9, q=99.0)]
+    assert c.pool_pressure(pool) < 1.0     # median ignores the outlier
+
+
+def test_no_oscillation_on_balanced_load():
+    c = PressureController(ControllerConfig(t_cool=0.0, tau=0.25))
+    migrations = 0
+    for t in range(50):
+        shorts = [stats(0, q=1.0 + 0.05 * (t % 2)), stats(1, q=1.0)]
+        longs = [stats(2, q=1.0), stats(3, q=1.0 - 0.05 * (t % 2))]
+        if c.step(shorts, longs, now=float(t)) is not None:
+            migrations += 1
+    assert migrations == 0

@@ -1,0 +1,72 @@
+"""Unit tests for the dry-run analysis tooling (no 512-device init:
+pure text parsing + spec helpers)."""
+import sys
+
+import pytest
+
+# import the parser without triggering the XLA_FLAGS side effect twice —
+# dryrun sets env at import; harmless under JAX_PLATFORMS=cpu with the
+# backend already initialized by conftest
+from repro.launch.dryrun import collective_bytes  # noqa: E402
+from repro.models.config import SHAPES, shape_by_name
+from repro.launch.specs import train_accum
+from repro.configs import get_config
+
+HLO = """\
+HloModule jit_step
+
+%body.1 (arg: (f32[8,128], f32[])) -> (f32[8,128], f32[]) {
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (arg: (f32[8,128], f32[])) -> pred[] {
+  ROOT %lt = pred[] compare(...)
+}
+
+ENTRY %main.42 (p0: f32[8,128]) -> f32[8,128] {
+  %ag = bf16[16,256]{1,0} all-gather(%p), channel_id=1
+  %w = (f32[8,128], f32[]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[8,128] get-tuple-element(%w)
+}
+"""
+
+
+def test_collective_parser_structural_attribution():
+    out = collective_bytes(HLO, depth_factors=(10,))
+    # entry all-gather: 16*256*2 bytes, wire x1, factor 1
+    assert out["all-gather"] == 16 * 256 * 2
+    # body all-reduce: 8*128*4 bytes, wire x2, x10 loop iterations
+    assert out["all-reduce"] == 8 * 128 * 4 * 2 * 10
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_collective_parser_nested_depths():
+    hlo = HLO.replace(
+        "%ar = f32[8,128]{1,0} all-reduce(%x), replica_groups=...",
+        "%ar = f32[8,128]{1,0} all-reduce(%x), replica_groups=...\n"
+        "  %w2 = (f32[4]) while(%i2), condition=%cond.1, body=%inner.9")
+    hlo += """
+%inner.9 (a: f32[4]) -> f32[4] {
+  %rs = f32[4,4]{1,0} reduce-scatter(%y)
+}
+"""
+    out = collective_bytes(hlo, depth_factors=(10, 7))
+    assert out["reduce-scatter"] == 4 * 4 * 4 * 10 * 7
+
+
+def test_shapes_registry():
+    assert {s.name for s in SHAPES} == {"train_4k", "prefill_32k",
+                                        "decode_32k", "long_500k"}
+    assert shape_by_name("train_4k").tokens == 4096 * 256
+    with pytest.raises(KeyError):
+        shape_by_name("nope")
+
+
+def test_train_accum_scales_with_model_size():
+    small = get_config("qwen3-4b")
+    big = get_config("jamba-v0.1-52b")
+    a_small, mb_small = train_accum(shape_by_name("train_4k"), small)
+    a_big, mb_big = train_accum(shape_by_name("train_4k"), big)
+    assert a_small == 4 and mb_small == 64
+    assert a_big == 8 and mb_big == 32

@@ -1,0 +1,98 @@
+"""Real-engine integration: staged serving == pure forward, arena slot
+management, executor capture stats, runtime boundary fitting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(3)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-2.7b",
+                                  "jamba-v0.1-52b"])
+def test_engine_matches_pure_forward(arch):
+    rng = np.random.default_rng(0)
+    cfg = get_smoke(arch)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64))
+    t1 = rng.integers(0, cfg.vocab_size, 10)
+    out = eng.prefill_batch([0, 1], [t1, rng.integers(0, cfg.vocab_size, 5)],
+                            bucket=(16, 2))
+    tok0 = out[0]
+    dec = eng.decode_batch([0], [tok0], steps=3)
+    t2 = rng.integers(0, cfg.vocab_size, 7)
+    out2 = eng.prefill_batch([0], [t2])
+
+    def greedy(seq):
+        lo, _, _ = tr.forward(params, cfg,
+                              tokens=jnp.asarray(seq, jnp.int32)[None])
+        return int(jnp.argmax(lo[0, -1]))
+
+    ctx = list(t1)
+    assert greedy(ctx) == tok0
+    ctx.append(tok0)
+    for i in range(3):
+        nxt = greedy(ctx)
+        assert nxt == dec[0][i]
+        ctx.append(nxt)
+    ctx = ctx[:-1] + list(t2)
+    assert greedy(ctx) == out2[0]
+
+
+def test_arena_slots(qwen):
+    cfg, params = qwen
+    eng = Engine(cfg, params, EngineConfig(num_slots=2, max_len=32))
+    eng.open_session(0)
+    eng.open_session(1)
+    assert eng.arena.free_slots == 0
+    with pytest.raises(RuntimeError):
+        eng.open_session(2)
+    eng.close_session(0)
+    eng.open_session(2)                   # slot recycled
+    assert eng.arena.free_slots == 0
+
+
+def test_session_overflow_guard(qwen):
+    cfg, params = qwen
+    eng = Engine(cfg, params, EngineConfig(num_slots=2, max_len=16))
+    rng = np.random.default_rng(1)
+    eng.prefill_batch([0], [rng.integers(0, cfg.vocab_size, 10)])
+    with pytest.raises(RuntimeError):
+        eng.prefill_batch([0], [rng.integers(0, cfg.vocab_size, 10)])
+
+
+def test_executor_capture_and_reuse(qwen):
+    cfg, params = qwen
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64))
+    rng = np.random.default_rng(2)
+    for s in range(3):
+        eng.prefill_batch([s], [rng.integers(0, cfg.vocab_size, 6)],
+                          bucket=(8, 1))
+    st = eng.stats()
+    assert st["captured_shapes"] == 1      # one (8,1) shape compiled once
+    assert eng.executor.hits == 2
+    assert st["capture_seconds"] > 0
+
+
+def test_runtime_boundary_fit(qwen):
+    cfg, params = qwen
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    rng = np.random.default_rng(3)
+    for s in range(8):
+        n = int(rng.integers(4, 60))
+        eng.prefill_batch([s], [rng.integers(0, cfg.vocab_size, n)])
+    fit = eng.fit_boundary()
+    assert fit is not None
+    assert 16.0 <= fit.boundary() <= 2048.0
+    assert eng.classification_threshold() == fit.boundary()

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attn
+from repro.kernels.flash_attn import flash_attn
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.key(0)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,lq,s,hq,hkv,d,bq,bk", [
+    (1, 16, 16, 4, 4, 16, 8, 8),       # MHA square
+    (2, 48, 80, 8, 2, 32, 16, 16),     # GQA, cache longer than query
+    (1, 33, 70, 4, 1, 64, 16, 32),     # ragged (padding paths)
+    (2, 8, 128, 8, 4, 16, 8, 64),      # short query, long cache
+])
+def test_flash_attn_sweep(dtype, b, lq, s, hq, hkv, d, bq, bk):
+    ks = jax.random.split(KEY, 4)
+    q = rand(ks[0], (b, lq, hq, d), dtype)
+    k = rand(ks[1], (b, s, hkv, d), dtype)
+    v = rand(ks[2], (b, s, hkv, d), dtype)
+    offs = jax.random.randint(ks[3], (b,), 0, s - lq + 1)
+    out = flash_attn(q, k, v, offs, block_q=bq, block_k=bk)
+    want = ref.ref_flash_attn(q, k, v, q_offsets=offs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_flash_attn_sliding_window(window):
+    ks = jax.random.split(KEY, 4)
+    b, lq, s, hq, hkv, d = 2, 32, 64, 4, 2, 32
+    q = rand(ks[0], (b, lq, hq, d), jnp.float32)
+    k = rand(ks[1], (b, s, hkv, d), jnp.float32)
+    v = rand(ks[2], (b, s, hkv, d), jnp.float32)
+    offs = jnp.array([10, 30], jnp.int32)
+    out = flash_attn(q, k, v, offs, window=window, block_q=16, block_k=16)
+    want = ref.ref_flash_attn(q, k, v, q_offsets=offs, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attn_noncausal_kv_len():
+    ks = jax.random.split(KEY, 4)
+    b, lq, s, hq, hkv, d = 2, 16, 32, 4, 4, 16
+    q = rand(ks[0], (b, lq, hq, d), jnp.float32)
+    k = rand(ks[1], (b, s, hkv, d), jnp.float32)
+    v = rand(ks[2], (b, s, hkv, d), jnp.float32)
+    lens = jnp.array([20, 32], jnp.int32)
+    out = flash_attn(q, k, v, None, lens, causal=False, block_q=8, block_k=8)
+    want = ref.ref_flash_attn(q, k, v, kv_lengths=lens, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,hq,hkv,d,bk", [
+    (2, 64, 8, 2, 32, 16),
+    (1, 100, 4, 4, 64, 32),    # ragged cache blocks
+    (4, 32, 8, 1, 16, 32),     # MQA
+])
+def test_decode_attn_sweep(dtype, b, s, hq, hkv, d, bk):
+    ks = jax.random.split(KEY, 4)
+    q = rand(ks[0], (b, hq, d), dtype)
+    k = rand(ks[1], (b, s, hkv, d), dtype)
+    v = rand(ks[2], (b, s, hkv, d), dtype)
+    lens = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attn(q, k, v, lens, block_k=bk)
+    want = ref.ref_decode_attn(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,l,nh,hd,ds,chunk", [
+    (2, 40, 4, 8, 16, 16),     # padding path (40 % 16 != 0)
+    (1, 64, 2, 16, 32, 32),
+    (2, 16, 8, 8, 8, 16),      # single chunk
+])
+def test_ssd_scan_sweep(b, l, nh, hd, ds, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = rand(ks[0], (b, l, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (b, l, nh), jnp.float32))
+    a = -jnp.exp(rand(ks[2], (nh,), jnp.float32) * 0.3)
+    bm = rand(ks[3], (b, l, nh, ds), jnp.float32)
+    cm = rand(ks[4], (b, l, nh, ds), jnp.float32)
+    h0 = jnp.zeros((b, nh, hd, ds))
+    y, hf = ssd_scan(x, dt, a, bm, cm, h0, chunk=chunk)
+    ye, hfe = ref.ref_ssd_scan(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfe),
+                               atol=5e-5, rtol=5e-4)
+
+
+def test_ssd_scan_carries_state():
+    """Splitting a sequence across two scans == one scan (re-prefill)."""
+    ks = jax.random.split(KEY, 5)
+    b, l, nh, hd, ds = 1, 32, 2, 8, 16
+    x = rand(ks[0], (b, l, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (b, l, nh), jnp.float32))
+    a = -jnp.exp(rand(ks[2], (nh,), jnp.float32) * 0.3)
+    bm = rand(ks[3], (b, l, nh, ds), jnp.float32)
+    cm = rand(ks[4], (b, l, nh, ds), jnp.float32)
+    h0 = jnp.zeros((b, nh, hd, ds))
+    y_all, h_all = ssd_scan(x, dt, a, bm, cm, h0, chunk=8)
+    y1, h1 = ssd_scan(x[:, :20], dt[:, :20], a, bm[:, :20], cm[:, :20],
+                      h0, chunk=8)
+    y2, h2 = ssd_scan(x[:, 20:], dt[:, 20:], a, bm[:, 20:], cm[:, 20:],
+                      h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_all),
+                               atol=5e-5, rtol=5e-4)

@@ -1,0 +1,84 @@
+"""§2.2 M/G/1 analytics validated against an independent event-driven
+single-server queue."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.queueing import (ServiceClass, hol_penalty, mixed_wait,
+                                 mixture, normalized_latency, pk_wait,
+                                 utilization)
+
+
+def _simulate_mg1(rng, lam, sampler, n=40_000):
+    """Event-driven M/G/1 FCFS: returns mean waiting time."""
+    t = 0.0
+    server_free = 0.0
+    waits = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / lam)
+        start = max(t, server_free)
+        waits.append(start - t)
+        server_free = start + sampler()
+    return float(np.mean(waits[n // 10:]))
+
+
+def test_pk_matches_simulation_deterministic_service():
+    rng = np.random.default_rng(0)
+    lam, s = 8.0, 0.05                      # rho = 0.4
+    w_sim = _simulate_mg1(rng, lam, lambda: s)
+    w_pk = pk_wait(lam, s, s * s)
+    assert w_sim == pytest.approx(w_pk, rel=0.08)
+
+
+def test_pk_matches_simulation_two_class_mixture():
+    rng = np.random.default_rng(1)
+    lam, p = 6.0, 0.8
+    s_short, s_long = 0.02, 0.30
+
+    def sampler():
+        return s_short if rng.random() < p else s_long
+
+    w_sim = _simulate_mg1(rng, lam, sampler)
+    classes = [ServiceClass(lam * p, s_short, s_short ** 2),
+               ServiceClass(lam * (1 - p), s_long, s_long ** 2)]
+    w_pk = mixed_wait(classes)
+    assert w_sim == pytest.approx(w_pk, rel=0.12)
+
+
+def test_hol_penalty_is_the_mixture_excess():
+    """ΔW_HoL == W(mixture) − W(homogeneous with same mean)."""
+    lam, p = 6.0, 0.8
+    s_s, s_l = 0.02, 0.30
+    classes = [ServiceClass(lam * p, s_s, s_s ** 2),
+               ServiceClass(lam * (1 - p), s_l, s_l ** 2)]
+    _, es, es2 = mixture(classes)
+    rho = lam * es
+    w_mixed = pk_wait(lam, es, es2)
+    w_homog = pk_wait(lam, es, es * es)     # deterministic same-mean
+    delta = hol_penalty(lam, p, s_l, s_s, rho)
+    assert w_mixed - w_homog == pytest.approx(delta, rel=1e-9)
+
+
+@given(p=st.floats(0.01, 0.99), lam=st.floats(0.1, 5.0),
+       s_s=st.floats(0.001, 0.05), gap=st.floats(0.01, 0.5))
+def test_hol_penalty_positive_and_grows_with_gap(p, lam, s_s, gap):
+    s_l = s_s + gap
+    es = p * s_s + (1 - p) * s_l
+    rho = lam * es
+    if rho >= 0.95:
+        return
+    d1 = hol_penalty(lam, p, s_l, s_s, rho)
+    d2 = hol_penalty(lam, p, s_l + gap, s_s, rho)
+    assert d1 > 0
+    assert d2 > d1
+
+
+def test_convoy_effect_hurts_short_jobs_more():
+    """Same W ⇒ normalized latency is worse for shorter service (§2.2)."""
+    w = 0.1
+    assert normalized_latency(0.02, w) > normalized_latency(0.3, w)
+
+
+def test_utilization():
+    cs = [ServiceClass(2.0, 0.1, 0.01), ServiceClass(1.0, 0.3, 0.09)]
+    assert utilization(cs) == pytest.approx(0.5)

