@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.buckets import Bucket, BucketGrid
+from repro.core.buckets import (Bucket, BucketGrid, DEFAULT_TOKEN_BUCKETS,
+                                TokenBucketLadder)
 from repro.core.request import Batch, Request
 
 EPS = 1e-9
@@ -45,12 +46,22 @@ class AWDConfig:
     max_pad_ratio_offline: float = 1.1
     idle_flush: float = 0.5       # deadline-free: flush residue when the
     # queue has been stagnant this long (tail requests must not starve)
+    packed: bool = False          # padding-free packed prefill: batches
+    # concatenate into one flat token stream bucketed on TOTAL tokens
+    # (TokenBucketLadder) instead of padding to the (L, B) grid
+    token_buckets: Optional[Tuple[int, ...]] = None  # None → defaults
+    packed_max_seqs: int = 16     # cache rows per packed step (B_max)
 
 
 class AWDScheduler:
     def __init__(self, grid: BucketGrid, cfg: Optional[AWDConfig] = None):
         self.grid = grid
         self.cfg = cfg or AWDConfig()
+        self.ladder: Optional[TokenBucketLadder] = None
+        if self.cfg.packed:
+            self.ladder = TokenBucketLadder(
+                self.cfg.token_buckets or DEFAULT_TOKEN_BUCKETS,
+                self.cfg.packed_max_seqs)
         # single source of truth for the memory budget (grid's by default)
         self.mem_budget = self.cfg.mem_budget_tokens or grid.mem_budget
         self.s_hat = self.cfg.service_estimate
@@ -103,25 +114,41 @@ class AWDScheduler:
         """Bucket-first greedy selection (Algorithm 1 line 6): requests
         ordered by (bucket, arrival) so same-length groups cluster and
         padding to the eventual NEARESTGRAPH shape stays minimal; filled
-        to target depth D under the memory budget."""
+        to target depth D under the memory budget.
+
+        Packed mode: requests cost their RAW length (no per-request
+        padding exists), order is plain FCFS (packing is composition-
+        independent), and the fill target is the token-bucket ladder."""
         if not queue:
             return []
         cap = depth_cap if depth_cap is not None else self.d_target
         budget = self.mem_budget
-        ordered = sorted(
-            queue, key=lambda r: (self.grid.nearest_length(r.new_tokens)
-                                  or 10 ** 9, r.arrival))
+        if self.ladder is not None:
+            cap = min(cap, self.ladder.max_seqs)
+            budget = min(budget, self.ladder.max_tokens)
+            ordered = sorted(queue, key=lambda r: r.arrival)
+        else:
+            ordered = sorted(
+                queue, key=lambda r: (self.grid.nearest_length(r.new_tokens)
+                                      or 10 ** 9, r.arrival))
         picked: List[Request] = []
         tokens = 0
         for r in ordered:
             if len(picked) >= cap:
                 break
-            pad = self.grid.nearest_length(r.new_tokens) or r.new_tokens
+            pad = self._cost(r)
             if picked and tokens + pad > budget:
                 break
             picked.append(r)
             tokens += pad
         return picked
+
+    def _cost(self, r: Request) -> int:
+        """Tokens a request occupies in a batch shape: its padded bucket
+        length on the dense grid, its raw length on the packed ladder."""
+        if self.ladder is not None:
+            return r.new_tokens
+        return self.grid.nearest_length(r.new_tokens) or r.new_tokens
 
     def _sla_urgent(self, queue: Sequence[Request], now: float) -> bool:
         return any(r.slack(now, self.s_hat) <= self.cfg.sigma for r in queue)
@@ -185,7 +212,7 @@ class AWDScheduler:
         tokens = 0
         for r in sorted(queue, key=lambda r: (r.deadline is None,
                                               r.deadline or r.arrival)):
-            pad = self.grid.nearest_length(r.new_tokens) or r.new_tokens
+            pad = self._cost(r)
             if picked and tokens + pad > self.mem_budget:
                 break
             picked.append(r)
@@ -195,17 +222,33 @@ class AWDScheduler:
     def _emit(self, requests: List[Request], now: float,
               sla_flush: bool = False) -> Batch:
         lengths = [r.new_tokens for r in requests]
-        g = self.grid.nearest_graph(lengths, self.mem_budget)
         batch = Batch(requests=list(requests), kind="short")
         real = max(sum(lengths), 1)
         ratio = self.cfg.max_pad_ratio_offline if self.cfg.deadline_free \
             else self.cfg.max_pad_ratio
-        if g is not None and g.length * len(requests) <= ratio * real:
-            batch.bucket_len, batch.bucket_depth = g.length, g.depth
-            batch.uses_graph = True
-            self.graph_hits += 1
-            for r in requests:
-                r.padded_to, r.used_graph = g.length, True
+        if self.ladder is not None:
+            # packed path: one flat stream in the total-token bucket —
+            # the profitability guard only sees the bucket tail
+            tb = self.ladder.bucket_for(sum(lengths))
+            if tb is not None and len(requests) <= self.ladder.max_seqs \
+                    and tb <= ratio * real:
+                batch.token_bucket = tb
+                batch.uses_graph = True
+                self.graph_hits += 1
+                for r in requests:
+                    r.used_graph = True
+        if not batch.uses_graph:
+            # dense (L, B) grid — also the packed mode's fallback when
+            # the token bucket flunks profitability (a small batch in a
+            # big bucket): a captured grid shape still beats an eager
+            # compile of the exact batch shape at serve time
+            g = self.grid.nearest_graph(lengths, self.mem_budget)
+            if g is not None and g.length * len(requests) <= ratio * real:
+                batch.bucket_len, batch.bucket_depth = g.length, g.depth
+                batch.uses_graph = True
+                self.graph_hits += 1
+                for r in requests:
+                    r.padded_to, r.used_graph = g.length, True
         self.dispatches += 1
         # Algorithm 1 lines 11–15: adapt W / D from fill behaviour.
         # SLA flushes bypass the adaptation — shrinking D on a deadline

@@ -13,6 +13,7 @@ from typing import List, Optional, Sequence, Tuple
 
 DEFAULT_LENGTHS = (8, 16, 32, 64, 128, 256)
 DEFAULT_DEPTHS = (1, 2, 4, 8, 16, 32, 64)
+DEFAULT_TOKEN_BUCKETS = (64, 128, 256, 512)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +88,48 @@ class BucketGrid:
             return 0.0
         real = sum(lengths)
         return 1.0 - real / b.tokens
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+
+class TokenBucketLadder:
+    """Padding-free alternative to the (L, B) grid: captured shapes are
+    1-D TOTAL-token buckets over a packed flat stream.
+
+    A batch of heterogeneous lengths [7, 61, 12] packs into one stream
+    of 80 tokens and runs in the 128-bucket shape — the only padding is
+    the bucket tail (48 tokens here), vs. padding every request to the
+    max bucketed length under the dense grid.  The captured-shape space
+    is |buckets|, not |lengths| × |depths|.
+    """
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_TOKEN_BUCKETS,
+                 max_seqs: int = 16):
+        assert buckets, "token ladder needs at least one bucket"
+        self.buckets = tuple(sorted(buckets))
+        self.max_seqs = max_seqs
+
+    # ------------------------------------------------------------- lookup
+    @property
+    def max_tokens(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, total_tokens: int) -> Optional[int]:
+        """Smallest bucket ≥ total_tokens (None when off-scale)."""
+        i = bisect.bisect_left(self.buckets, total_tokens)
+        return self.buckets[i] if i < len(self.buckets) else None
+
+    def covers(self, total_tokens: int) -> bool:
+        return total_tokens <= self.buckets[-1]
+
+    def padding_waste(self, lengths: Sequence[int]) -> float:
+        """Fraction of executed tokens wasted on the bucket tail."""
+        total = sum(lengths)
+        b = self.bucket_for(total)
+        if b is None or b == 0:
+            return 0.0
+        return 1.0 - total / b
 
     def __len__(self) -> int:
         return len(self.buckets)

@@ -61,6 +61,7 @@ class Batch:
     requests: list
     bucket_len: Optional[int] = None     # padded per-request length (graph L)
     bucket_depth: Optional[int] = None   # padded batch size (graph B)
+    token_bucket: Optional[int] = None   # packed path: total-token bucket T
     uses_graph: bool = False
     kind: str = "short"                  # short | long | decode | mixed
 
@@ -73,7 +74,13 @@ class Batch:
         return sum(r.new_tokens for r in self.requests)
 
     @property
+    def is_packed(self) -> bool:
+        return self.token_bucket is not None
+
+    @property
     def padded_tokens(self) -> int:
+        if self.token_bucket is not None:
+            return self.token_bucket
         if self.bucket_len is None or self.bucket_depth is None:
             return self.tokens
         return self.bucket_len * self.bucket_depth

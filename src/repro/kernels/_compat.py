@@ -1,0 +1,11 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels import the alias from here so one tree runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -107,7 +109,7 @@ def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((rep, LANES), jnp.float32),
             pltpu.VMEM((rep, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.reshape(b, 1).astype(jnp.int32), qg, kt, vt)

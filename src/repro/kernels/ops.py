@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attn import decode_attn as _decode_pallas
 from repro.kernels.flash_attn import flash_attn as _flash_pallas
+from repro.kernels.ragged_prefill import ragged_prefill_attn as _ragged_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _FORCE: Optional[str] = None  # None=auto, "pallas", "ref"
@@ -51,6 +52,19 @@ def mha(q, k, v, q_offsets=None, kv_lengths=None, *, causal=True,
     return ref_mod.ref_flash_attn(q, k, v, q_offsets=q_offsets,
                                   kv_lengths=kv_lengths, window=window,
                                   causal=causal)
+
+
+def ragged_mha(q, k, v, cu_seqlens, q_offsets=None, kv_lengths=None, *,
+               causal=True, block_q=128, block_k=128):
+    """Packed padding-free prefill attention.  q: (T, Hq, D) flat stream;
+    k, v: (B, S, Hkv, D).  See kernels.ragged_prefill."""
+    if _use_pallas():
+        return _ragged_pallas(q, k, v, cu_seqlens, q_offsets, kv_lengths,
+                              causal=causal, block_q=block_q,
+                              block_k=block_k, interpret=not _on_tpu())
+    return ref_mod.ref_ragged_prefill(q, k, v, cu_seqlens,
+                                      q_offsets=q_offsets,
+                                      kv_lengths=kv_lengths, causal=causal)
 
 
 def decode(q, k, v, lengths, *, block_k=512):

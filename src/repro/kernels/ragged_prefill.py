@@ -1,0 +1,191 @@
+"""Ragged (padding-free) flash attention for packed prefill batches.
+
+The packed short-prefill path concatenates every request's new tokens
+into ONE flat token stream of a bucketed total length T — no per-request
+length padding, no (L, B) shape cross-product.  This kernel is the
+attention core of that path:
+
+  * queries arrive flat: ``q (T, Hq, D)``; sequence i owns the rows
+    ``[cu_seqlens[i], cu_seqlens[i+1])`` of the stream;
+  * KV stays per-sequence: ``k/v (B, S, Hkv, D)`` — the gathered arena
+    rows with this step's new KV already written at positions
+    ``[q_offsets[i], q_offsets[i] + len_i)``;
+  * ``q_offsets (B,)`` is the re-prefill history length (absolute
+    position of each sequence's first new token), ``kv_lengths (B,)``
+    the total valid cache entries (history + new);
+  * grid = (Hq, n_q_blocks, B, n_kv_blocks) with the (B, kv) axes
+    sequential so the online-softmax accumulator for one q block scans
+    every sequence's cache in VMEM scratch;
+  * cu_seqlens / q_offsets / kv_lengths ride scalar prefetch (SMEM), so
+    block skipping is decided before any VMEM traffic: a (q_block, seq)
+    pair is skipped unless the q block intersects the sequence's row
+    range, and kv blocks past the causal frontier or the valid cache
+    length are skipped like the dense kernel's.
+
+Rows of the flat stream beyond ``cu_seqlens[-1]`` (bucket tail padding)
+belong to no sequence: they accumulate nothing and produce zeros.
+Masking at sequence boundaries is exact — a q block straddling two
+sequences contributes each row only to its own sequence's softmax.
+
+GQA reads the kv head as h // rep in the index maps, same as the dense
+kernel; accumulation is fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+            block_q: int, block_k: int, n_seqs: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    b = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(b == 0, ki == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg_start = cu_ref[b]
+    seg_end = cu_ref[b + 1]
+    offset = off_ref[b]
+    kv_len = len_ref[b]
+
+    q_start = qi * block_q                 # flat row of this q block
+    k_start = ki * block_k
+
+    # block-level skip: q block must own rows of sequence b, the kv
+    # block must hold valid cache entries, and (causal) must not lie
+    # entirely after the block's last query position
+    run = jnp.logical_and(q_start < seg_end, q_start + block_q > seg_start)
+    run = jnp.logical_and(run, k_start < kv_len)
+    if causal:
+        last_row = jnp.minimum(seg_end, q_start + block_q) - 1
+        max_qpos = offset + last_row - seg_start
+        run = jnp.logical_and(run, k_start <= max_qpos)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                           # (bq, D)
+        k = k_ref[0, 0]                                        # (bk, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)                  # flat row ids
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mine = jnp.logical_and(rows >= seg_start, rows < seg_end)
+        qpos = offset + rows - seg_start
+        mask = jnp.logical_and(mine, kpos < kv_len)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                                  # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # (bq, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jnp.logical_and(b == n_seqs - 1, ki == n_kv_blocks - 1))
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)     # rows owned by no sequence
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def ragged_prefill_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                        cu_seqlens: jax.Array,
+                        q_offsets: Optional[jax.Array] = None,
+                        kv_lengths: Optional[jax.Array] = None, *,
+                        causal: bool = True,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q: (T, Hq, D) packed stream; k, v: (B, S, Hkv, D).  Returns
+    (T, Hq, D) with zeros on rows past ``cu_seqlens[-1]``.
+
+    cu_seqlens: (B+1,) int32 row offsets of each sequence in the stream;
+    q_offsets: (B,) history length per sequence (re-prefill);
+    kv_lengths: (B,) valid KV entries per sequence (defaults to S).
+    """
+    t, hq, d = q.shape
+    b, s, hkv = k.shape[0], k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if q_offsets is None:
+        q_offsets = jnp.zeros((b,), jnp.int32)
+    if kv_lengths is None:
+        kv_lengths = jnp.full((b,), s, jnp.int32)
+
+    block_q = min(block_q, max(t, 1))
+    block_k = min(block_k, s)
+    t_pad = -(-t // block_q) * block_q
+    s_pad = -(-s // block_k) * block_k
+    qt = jnp.moveaxis(q, 1, 0)                                 # (Hq, T, D)
+    kt = jnp.moveaxis(k, 2, 1)                                 # (B, Hkv, S, D)
+    vt = jnp.moveaxis(v, 2, 1)
+    if t_pad != t:
+        qt = jnp.pad(qt, ((0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    nq, nk = t_pad // block_q, s_pad // block_k
+
+    kern = functools.partial(
+        _kernel, scale=d ** -0.5, causal=causal,
+        block_q=block_q, block_k=block_k, n_seqs=b, n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(hq, nq, b, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, bb, ki, *_: (h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda h, qi, bb, ki, *_: (bb, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda h, qi, bb, ki, *_: (bb, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda h, qi, bb, ki, *_: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hq, t_pad, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(cu_seqlens.astype(jnp.int32), q_offsets.astype(jnp.int32),
+      kv_lengths.astype(jnp.int32), qt, kt, vt)
+    return jnp.moveaxis(out[:, :t], 0, 1)

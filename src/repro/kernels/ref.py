@@ -47,6 +47,49 @@ def ref_flash_attn(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, lq, hq, d).astype(q.dtype)
 
 
+def ref_ragged_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                       cu_seqlens: jax.Array,
+                       q_offsets: Optional[jax.Array] = None,
+                       kv_lengths: Optional[jax.Array] = None, *,
+                       causal: bool = True) -> jax.Array:
+    """Oracle for kernels.ragged_prefill (packed padding-free prefill).
+
+    q: (T, Hq, D) flat packed queries — sequence i owns rows
+    [cu_seqlens[i], cu_seqlens[i+1]); k, v: (B, S, Hkv, D) per-sequence
+    KV caches.  q_offsets: (B,) history length (absolute position of
+    each sequence's first query row); kv_lengths: (B,) valid KV entries.
+    Rows beyond cu_seqlens[-1] produce zeros.  Fully traceable (cu may
+    be a traced array), so it doubles as the XLA fallback path.
+    """
+    t, hq, d = q.shape
+    b, s, hkv = k.shape[0], k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if q_offsets is None:
+        q_offsets = jnp.zeros((b,), jnp.int32)
+    if kv_lengths is None:
+        kv_lengths = jnp.full((b,), s, jnp.int32)
+    rows = jnp.arange(t)
+    seg = jnp.sum(rows[:, None] >= cu_seqlens[None, 1:], axis=1)  # (T,)
+    valid_row = rows < cu_seqlens[-1]
+    segc = jnp.clip(seg, 0, b - 1)
+    qpos = q_offsets[segc] + rows - cu_seqlens[segc]             # (T,)
+    kpos = jnp.arange(s)
+    mask = (segc[:, None, None] == jnp.arange(b)[None, :, None])  # (T,B,S)
+    mask = mask & valid_row[:, None, None]
+    mask = mask & (kpos[None, None, :] < kv_lengths[None, :, None])
+    if causal:
+        mask = mask & (kpos[None, None, :] <= qpos[:, None, None])
+    qg = q.reshape(t, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("tgrd,bsgd->tgrbs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    flat = scores.reshape(t, hkv, rep, b * s)
+    probs = jax.nn.softmax(flat, axis=-1).reshape(t, hkv, rep, b, s)
+    out = jnp.einsum("tgrbs,bsgd->tgrd", probs, v.astype(jnp.float32))
+    out = out * valid_row[:, None, None, None]   # no-sequence rows → 0
+    return out.reshape(t, hq, d).astype(q.dtype)
+
+
 def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                     lengths: jax.Array) -> jax.Array:
     """Oracle for kernels.decode_attn (single-token flash decode).

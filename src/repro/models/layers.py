@@ -266,6 +266,53 @@ def attention_layer(p: Dict, x: jax.Array, *, cfg, positions: jax.Array,
     return constrain(out, "batch", "seq", "embed_act"), updated
 
 
+def packed_attention_layer(p: Dict, x: jax.Array, *, cfg,
+                           positions: jax.Array, seg_ids: jax.Array,
+                           cu_seqlens: jax.Array, q_offsets: jax.Array,
+                           kv_lengths: jax.Array,
+                           kv: Tuple[jax.Array, jax.Array],
+                           ) -> Tuple[jax.Array, Tuple]:
+    """Attention over a packed flat token stream (padding-free prefill).
+
+    x: (T, d) — the concatenated new tokens of every sequence in the
+    batch; sequence i owns rows [cu_seqlens[i], cu_seqlens[i+1]).
+    positions: (T,) absolute position of each token in ITS sequence
+    (history offset + local index); seg_ids: (T,) cache row each token's
+    KV is written to; kv: (K, V) caches of shape (B, S, Hkv, D).
+
+    New KV is scatter-written at (seg_ids, positions), then the ragged
+    kernel attends each row to its own sequence's cache only.  Returns
+    (out (T, d), updated (K, V)).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    t = x.shape[0]
+    hd = cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(t, cfg.num_heads, hd)
+    k = k.reshape(t, cfg.num_kv_heads, hd)
+    v = v.reshape(t, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q[None], positions[None], cfg.rope_theta)[0]
+    k = apply_rope(k[None], positions[None], cfg.rope_theta)[0]
+
+    ck = kv[0].at[seg_ids, positions].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[seg_ids, positions].set(v.astype(kv[1].dtype))
+
+    out = kernel_ops.ragged_mha(q, ck, cv, cu_seqlens, q_offsets, kv_lengths,
+                                causal=cfg.causal)
+    out = out.reshape(t, cfg.num_heads * hd) @ p["wo"]
+    return out, (ck, cv)
+
+
 def write_kv_cache(cache: jax.Array, new: jax.Array, positions: jax.Array) -> jax.Array:
     """Scatter new KV rows into the cache at per-token absolute positions.
 

@@ -22,7 +22,8 @@ from repro.distributed.sharding import constrain, constrain_tree
 from repro.models import mamba as mamba_mod
 from repro.models.config import ModelConfig
 from repro.models.layers import (ParamBuilder, attention_layer, init_attention,
-                                 init_mlp, rms_norm, swiglu, write_kv_cache)
+                                 init_mlp, packed_attention_layer, rms_norm,
+                                 swiglu, write_kv_cache)
 from repro.models.moe import init_moe, moe_dense_reference, moe_layer
 
 
@@ -135,8 +136,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             s = max_len
             if cfg.sliding_window is not None:
                 s = min(max_len, cfg.sliding_window)
-            kv = jnp.zeros((g, batch, s, cfg.num_kv_heads, cfg.hdim), dtype)
-            caches.append({"k": kv, "v": kv})
+            # k and v must be DISTINCT buffers: donating an aliased pair
+            # trips "attempt to donate the same buffer twice" in XLA
+            shape = (g, batch, s, cfg.num_kv_heads, cfg.hdim)
+            caches.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
         else:
             ssm, conv = mamba_mod.init_mamba_cache(cfg, batch, dtype)
             caches.append({"ssm": jnp.broadcast_to(ssm, (g,) + ssm.shape),
@@ -190,18 +194,25 @@ def _block(cfg: ModelConfig, j: int, lp: Dict, x: jax.Array, cache, *,
         new_cache = {"ssm": upd[0], "conv": upd[1]} if upd is not None else None
     x = x + mix
     if cfg.family != "ssm":
-        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        if cfg.layer_is_moe(j):
-            if cfg.num_experts <= 8 and h.shape[0] * h.shape[1] <= 4096:
-                y, a = moe_dense_reference(lp["ffn"], h,
-                                           top_k=cfg.num_experts_per_tok)
-            else:
-                y, a = moe_layer(lp["ffn"], h, top_k=cfg.num_experts_per_tok)
-            aux = aux + a
-        else:
-            y = swiglu(lp["ffn"], h)
-        x = x + y
+        x, a = _ffn(cfg, j, lp, x)
+        aux = aux + a
     return x, new_cache, aux
+
+
+def _ffn(cfg: ModelConfig, j: int, lp: Dict, x: jax.Array
+         ) -> Tuple[jax.Array, jax.Array]:
+    """Post-mixer FFN residual for one layer.  x: (B, L, d)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.layer_is_moe(j):
+        if cfg.num_experts <= 8 and h.shape[0] * h.shape[1] <= 4096:
+            y, aux = moe_dense_reference(lp["ffn"], h,
+                                         top_k=cfg.num_experts_per_tok)
+        else:
+            y, aux = moe_layer(lp["ffn"], h, top_k=cfg.num_experts_per_tok)
+    else:
+        y = swiglu(lp["ffn"], h)
+    return x + y, aux
 
 
 def _rolling_write(cache, new, positions, *, window):
@@ -317,3 +328,85 @@ def forward(params: Dict, cfg: ModelConfig, *,
              jnp.full((vpad,), -1e9, logits.dtype)])
         logits = logits + neg
     return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------- packed
+
+
+def supports_packed(cfg: ModelConfig) -> bool:
+    """Packed (padding-free) prefill needs pure-attention mixers with a
+    full cache: SSM state and rolling SWA windows mix tokens across the
+    flat stream and stay on the dense path."""
+    return (cfg.causal and cfg.sliding_window is None
+            and all(cfg.layer_kind(j) == "attn"
+                    for j in range(pattern_period(cfg))))
+
+
+def forward_packed(params: Dict, cfg: ModelConfig, *,
+                   tokens: jax.Array,
+                   positions: jax.Array,
+                   seg_ids: jax.Array,
+                   cu_seqlens: jax.Array,
+                   q_offsets: jax.Array,
+                   kv_lengths: jax.Array,
+                   caches: List[Any],
+                   last_idx: jax.Array,
+                   ) -> Tuple[jax.Array, List[Any]]:
+    """Padding-free prefill over a packed flat token stream.
+
+    tokens/positions/seg_ids: (T,) — the concatenation of every
+    sequence's new tokens, each token carrying its absolute position
+    (history offset + local index) and its cache row; sequence i owns
+    rows [cu_seqlens[i], cu_seqlens[i+1]) of the stream.  Rows past
+    cu_seqlens[-1] are bucket tail padding (parked positions, junk row).
+    caches: from :func:`init_cache` with batch = B cache rows.
+    last_idx: (B,) flat index of each sequence's final token — the
+    TTFT logit gather.  Returns (last_logits (B, V), new_caches).
+
+    One compiled shape serves EVERY mix of request lengths summing under
+    the token bucket T — the compile-cache key space is |T buckets|, not
+    |lengths| × |depths|.
+    """
+    assert supports_packed(cfg), cfg.name
+    x = jnp.take(params["embed"], tokens, axis=0)              # (T, d)
+    p = pattern_period(cfg)
+    cache_axes = cache_logical_axes(cfg)
+
+    def body(carry, lps):
+        x, aux, cs_all, g = carry
+        for j in range(p):
+            cache_j = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, g, 0, keepdims=False), cs_all[j])
+            h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
+            mix, upd = packed_attention_layer(
+                lps[j]["mixer"], h, cfg=cfg, positions=positions,
+                seg_ids=seg_ids, cu_seqlens=cu_seqlens,
+                q_offsets=q_offsets, kv_lengths=kv_lengths,
+                kv=(cache_j["k"], cache_j["v"]))
+            x = x + mix
+            x2, a = _ffn(cfg, j, lps[j], x[None])
+            x = x2[0]
+            aux = aux + a
+            nc = {"k": upd[0], "v": upd[1]}
+            full = jax.tree.map(
+                lambda fa, u: jax.lax.dynamic_update_index_in_dim(
+                    fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
+            cs_all[j] = constrain_tree(full, cache_axes[j])
+        return (x, aux, cs_all, g + 1), None
+
+    zero = jnp.zeros((), jnp.float32)
+    carry0 = (x, zero, list(caches), jnp.zeros((), jnp.int32))
+    (x, _, new_caches, _), _ = jax.lax.scan(body, carry0, params["blocks"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
+    logits = x_last @ params["lm_head"]
+    logits = constrain(logits, "batch", "vocab")
+    vpad = cfg.padded_vocab - cfg.vocab_size
+    if vpad:
+        neg = jnp.concatenate(
+            [jnp.zeros((cfg.vocab_size,), logits.dtype),
+             jnp.full((vpad,), -1e9, logits.dtype)])
+        logits = logits + neg
+    return logits, new_caches

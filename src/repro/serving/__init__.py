@@ -1,3 +1,4 @@
 from repro.serving.kvcache import KVArena  # noqa: F401
-from repro.serving.executor import BucketExecutor  # noqa: F401
+from repro.serving.executor import (BucketExecutor,  # noqa: F401
+                                    PackedBucketExecutor)
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401

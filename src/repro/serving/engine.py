@@ -26,9 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import boundary as boundary_mod
-from repro.core.buckets import BucketGrid
+from repro.core.buckets import DEFAULT_TOKEN_BUCKETS, BucketGrid
+from repro.models import transformer as tr
 from repro.models.config import ModelConfig
-from repro.serving.executor import BucketExecutor
+from repro.serving.executor import BucketExecutor, PackedBucketExecutor
 from repro.serving.kvcache import KVArena
 
 
@@ -41,6 +42,9 @@ class EngineConfig:
     grid_depths: Tuple[int, ...] = (1, 2, 4, 8)
     pad_token: int = 0
     measure: bool = True             # collect boundary-fit samples
+    packed: bool = False             # padding-free packed prefill path
+    token_buckets: Tuple[int, ...] = DEFAULT_TOKEN_BUCKETS
+    packed_max_seqs: Optional[int] = None  # None → min(num_slots, 16)
 
 
 class Engine:
@@ -50,6 +54,13 @@ class Engine:
         self.ecfg = ecfg or EngineConfig()
         self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len)
         self.executor = BucketExecutor(cfg)
+        self.packed_executor: Optional[PackedBucketExecutor] = None
+        if self.ecfg.packed and tr.supports_packed(cfg):
+            max_seqs = self.ecfg.packed_max_seqs or min(self.ecfg.num_slots,
+                                                        16)
+            self.packed_executor = PackedBucketExecutor(
+                cfg, token_buckets=self.ecfg.token_buckets,
+                max_seqs=min(max_seqs, self.ecfg.num_slots))
         self.grid = BucketGrid(self.ecfg.grid_lengths, self.ecfg.grid_depths,
                                mem_budget_tokens=self.ecfg.num_slots
                                * self.ecfg.max_len)
@@ -109,7 +120,83 @@ class Engine:
             caches, jnp.asarray(sample_idx))
         toks = np.asarray(jnp.argmax(last, axis=-1))
         elapsed = time.perf_counter() - t0
+        self.executor.note_padding(sum(lens), pad_l * pad_b)
         # write back only the real rows
+        self.arena.scatter(slots, jax.tree.map(
+            lambda a: a[:, :n], new_caches))
+        out: Dict[int, int] = {}
+        for i, s in enumerate(sessions):
+            self.arena.set_length(s, hists[i] + lens[i])
+            out[s] = int(toks[i])
+        if self.ecfg.measure and n:
+            per = elapsed / n
+            for l, h in zip(lens, hists):
+                self.samples.append((per, float(l), float(h)))
+        return out
+
+    # ------------------------------------------------------ packed prefill
+    def prefill_packed(self, sessions: Sequence[int],
+                       token_lists: Sequence[np.ndarray],
+                       token_bucket: Optional[int] = None
+                       ) -> Dict[int, int]:
+        """Padding-free packed prefill / re-prefill.
+
+        Every request's new tokens are concatenated into ONE flat stream
+        bucketed on TOTAL tokens; per-sequence KV is scatter-written to
+        the arena rows.  The only padding is the bucket tail, and the
+        compiled-shape space grows with |token_buckets| instead of the
+        dense grid's |L| × |B|.  Falls back to the dense path when the
+        packed executor is absent or the batch is off-ladder.
+        Returns {session: first_sampled_token}."""
+        assert len(sessions) == len(token_lists)
+        n = len(sessions)
+        lens = [len(t) for t in token_lists]
+        total = sum(lens)
+        px = self.packed_executor
+        if px is None or n > px.max_seqs:
+            return self.prefill_batch(sessions, token_lists)
+        bucket = token_bucket or px.bucket_for(total)
+        if bucket is None or bucket < total:
+            return self.prefill_batch(sessions, token_lists)
+
+        slots, hists = [], []
+        for s in sessions:
+            slots.append(self.arena.alloc(s))
+            hists.append(self.arena.length(s))
+        b_max = px.max_seqs
+        # dummy cache rows (and tail-padding KV writes) reuse slot 0
+        all_slots = slots + [slots[0]] * (b_max - n)
+        park = self.arena.max_len - 1
+
+        tokens = np.full(bucket, self.ecfg.pad_token, np.int32)
+        positions = np.full(bucket, park, np.int32)       # tail → parking
+        seg_ids = np.full(bucket, n if n < b_max else 0, np.int32)
+        cu = np.full(b_max + 1, total, np.int32)
+        cu[0] = 0
+        off = np.zeros(b_max, np.int32)
+        kvl = np.zeros(b_max, np.int32)
+        last_idx = np.zeros(b_max, np.int32)
+        o = 0
+        for i, (tl, h) in enumerate(zip(token_lists, hists)):
+            l = len(tl)
+            tokens[o:o + l] = tl
+            positions[o:o + l] = h + np.arange(l)
+            seg_ids[o:o + l] = i
+            cu[i + 1] = o + l
+            off[i] = h
+            kvl[i] = h + l
+            last_idx[i] = o + l - 1
+            o += l
+
+        caches = self.arena.gather(all_slots)
+        t0 = time.perf_counter()
+        last, new_caches = px.prefill_packed(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(seg_ids), jnp.asarray(cu), jnp.asarray(off),
+            jnp.asarray(kvl), caches, jnp.asarray(last_idx))
+        toks = np.asarray(jnp.argmax(last, axis=-1))
+        elapsed = time.perf_counter() - t0
+        px.note_padding(total, bucket)
         self.arena.scatter(slots, jax.tree.map(
             lambda a: a[:, :n], new_caches))
         out: Dict[int, int] = {}
@@ -169,10 +256,23 @@ class Engine:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict:
-        return {
+        out = {
             "graph_hit_rate": self.executor.hit_rate,
             "captured_shapes": len(self.executor.compile_times),
             "capture_seconds": self.executor.capture_cost(),
             "free_slots": self.arena.free_slots,
             "fit_samples": len(self.samples),
+            "useful_tokens": self.executor.useful_tokens,
+            "padded_tokens": self.executor.padded_tokens,
+            "padding_efficiency": self.executor.padding_efficiency,
         }
+        if self.packed_executor is not None:
+            px = self.packed_executor
+            out.update({
+                "packed_shapes": len(px.compile_times),
+                "packed_hit_rate": px.hit_rate,
+                "packed_useful_tokens": px.useful_tokens,
+                "packed_padded_tokens": px.padded_tokens,
+                "packed_padding_efficiency": px.padding_efficiency,
+            })
+        return out

@@ -1,12 +1,23 @@
 """Bucketized AOT-executable cache — the TPU analogue of CUDA Graph
 capture (§3.1, DESIGN.md §2).
 
-Each (kind, L_bucket, B_bucket) shape is lowered + compiled ONCE
-(``jax.jit(...).lower(...).compile()``) and re-dispatched with zero
-retracing afterwards.  A shape miss costs a fresh compile — seconds,
-like the paper's 8–12 s per-graph capture — which is precisely why the
-scheduler pads to the captured grid.  Compile times and hit/miss
-statistics are recorded for the §4.2 cost analysis.
+Each shape is lowered + compiled ONCE (``jax.jit(...).lower(...)
+.compile()``) and re-dispatched with zero retracing afterwards.  A shape
+miss costs a fresh compile — seconds, like the paper's 8–12 s per-graph
+capture — which is precisely why the scheduler pads to the captured
+grid.  Compile times, hit/miss statistics, and padding-efficiency
+counters are recorded for the §4.2 cost analysis.
+
+Two executors share the cache machinery:
+
+  * :class:`BucketExecutor` — the dense (L, B) grid: every batch is
+    padded to a captured (length, depth) shape, so the worst-case key
+    space is |lengths| × |depths|.
+  * :class:`PackedBucketExecutor` — the padding-free packed path: all
+    requests are concatenated into one flat token stream bucketed on
+    TOTAL tokens only, so the key space is |token buckets|.  Cache rows
+    (max_seqs) and the arena S_max are fixed at construction, keeping
+    every packed shape independent of the batch composition.
 """
 from __future__ import annotations
 
@@ -16,6 +27,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.buckets import DEFAULT_TOKEN_BUCKETS, TokenBucketLadder
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
 
@@ -36,6 +48,21 @@ def make_prefill_fn(cfg: ModelConfig) -> Callable:
     return prefill_step
 
 
+def make_packed_prefill_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(T,), positions(T,), seg_ids(T,), cu_seqlens(B+1,),
+    q_offsets(B,), kv_lengths(B,), caches, last_idx(B,)) →
+    (last_logits(B,V), new_caches).  Padding-free packed prefill."""
+
+    def packed_step(params, tokens, positions, seg_ids, cu_seqlens,
+                    q_offsets, kv_lengths, caches, last_idx):
+        return tr.forward_packed(
+            params, cfg, tokens=tokens, positions=positions,
+            seg_ids=seg_ids, cu_seqlens=cu_seqlens, q_offsets=q_offsets,
+            kv_lengths=kv_lengths, caches=caches, last_idx=last_idx)
+
+    return packed_step
+
+
 def make_decode_fn(cfg: ModelConfig) -> Callable:
     def decode_step(params, tokens, positions, caches):
         logits, new_caches, _ = tr.forward(
@@ -46,21 +73,28 @@ def make_decode_fn(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
-class BucketExecutor:
-    def __init__(self, cfg: ModelConfig, donate_cache: Optional[bool] = None):
-        self.cfg = cfg
-        self._prefill = make_prefill_fn(cfg)
-        self._decode = make_decode_fn(cfg)
-        if donate_cache is None:  # buffer donation: TPU yes, CPU warns
-            donate_cache = jax.default_backend() == "tpu"
-        self._jit_prefill = jax.jit(self._prefill,
-                                    donate_argnums=(3,) if donate_cache else ())
-        self._jit_decode = jax.jit(self._decode,
-                                   donate_argnums=(3,) if donate_cache else ())
+def resolve_donation(donate_cache: Optional[bool]) -> bool:
+    """Effective cache-donation flag.
+
+    None → donate on TPU only (the conservative historical default).
+    An EXPLICIT True/False is always respected: jax supports buffer
+    donation on CPU too, so a caller's choice must not be silently
+    overridden (the old code dropped True on CPU without a trace)."""
+    if donate_cache is None:
+        return jax.default_backend() == "tpu"
+    return bool(donate_cache)
+
+
+class _ExecutorBase:
+    """Compile-once shape cache + hit/miss + padding-efficiency stats."""
+
+    def __init__(self) -> None:
         self._compiled: Dict[Tuple, Any] = {}
         self.compile_times: Dict[Tuple, float] = {}
         self.hits = 0
         self.misses = 0
+        self.useful_tokens = 0     # real prompt tokens executed
+        self.total_tokens = 0      # tokens incl. bucket/grid padding
 
     # --------------------------------------------------------------- keys
     @staticmethod
@@ -82,6 +116,46 @@ class BucketExecutor:
             self.hits += 1
         return exe
 
+    # ------------------------------------------------------------- stats
+    def note_padding(self, useful: int, total: int) -> None:
+        """Record one step's token accounting: ``useful`` real prompt
+        tokens executed inside a shape of ``total`` tokens."""
+        self.useful_tokens += int(useful)
+        self.total_tokens += int(total)
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.total_tokens - self.useful_tokens
+
+    @property
+    def padding_efficiency(self) -> float:
+        """useful / total executed tokens (1.0 = zero padding waste)."""
+        return (self.useful_tokens / self.total_tokens
+                if self.total_tokens else 1.0)
+
+    def capture_cost(self) -> float:
+        """Total 'graph capture' (compile) seconds — §4.2."""
+        return sum(self.compile_times.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class BucketExecutor(_ExecutorBase):
+    """The dense (L, B) bucket-grid executor (pads to captured shapes)."""
+
+    def __init__(self, cfg: ModelConfig, donate_cache: Optional[bool] = None):
+        super().__init__()
+        self.cfg = cfg
+        self.donate_cache = resolve_donation(donate_cache)
+        self._prefill = make_prefill_fn(cfg)
+        self._decode = make_decode_fn(cfg)
+        donate = (3,) if self.donate_cache else ()
+        self._jit_prefill = jax.jit(self._prefill, donate_argnums=donate)
+        self._jit_decode = jax.jit(self._decode, donate_argnums=donate)
+
     # ---------------------------------------------------------- dispatch
     def prefill(self, params, tokens, positions, caches, sample_idx):
         exe = self._get("prefill", self._jit_prefill,
@@ -92,16 +166,6 @@ class BucketExecutor:
         exe = self._get("decode", self._jit_decode,
                         (params, tokens, positions, caches))
         return exe(params, tokens, positions, caches)
-
-    # ------------------------------------------------------------- stats
-    def capture_cost(self) -> float:
-        """Total 'graph capture' (compile) seconds — §4.2."""
-        return sum(self.compile_times.values())
-
-    @property
-    def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
 
     def precapture(self, params, arena_gather, lengths, depths) -> float:
         """Capture the (L, B) grid at init (paper: graphs captured at
@@ -120,3 +184,75 @@ class BucketExecutor:
             self._get("decode", self._jit_decode,
                       (params, tok1, pos1, caches))
         return time.perf_counter() - t0
+
+
+class PackedBucketExecutor(_ExecutorBase):
+    """Padding-free packed prefill keyed on a 1-D total-token bucket.
+
+    Every step runs one flat (T,) token stream with ``max_seqs`` cache
+    rows gathered from the arena, so the compiled-shape space grows with
+    |token_buckets| — not with the (length × depth) cross-product of the
+    dense grid.  The only padding is the bucket tail T − Σ len_i.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 token_buckets: Tuple[int, ...] = DEFAULT_TOKEN_BUCKETS,
+                 max_seqs: int = 16,
+                 donate_cache: Optional[bool] = None):
+        super().__init__()
+        if not tr.supports_packed(cfg):
+            raise ValueError(
+                f"{cfg.name}: packed prefill needs pure-attention mixers "
+                "without sliding windows (SSM state / rolling SWA caches "
+                "mix tokens across the packed stream)")
+        self.cfg = cfg
+        self.ladder = TokenBucketLadder(token_buckets, max_seqs)
+        self.donate_cache = resolve_donation(donate_cache)
+        self._packed = make_packed_prefill_fn(cfg)
+        self._jit_packed = jax.jit(
+            self._packed, donate_argnums=(7,) if self.donate_cache else ())
+
+    # ------------------------------------------------------------ lookup
+    @property
+    def token_buckets(self) -> Tuple[int, ...]:
+        return self.ladder.buckets
+
+    @property
+    def max_seqs(self) -> int:
+        return self.ladder.max_seqs
+
+    def bucket_for(self, total_tokens: int) -> Optional[int]:
+        """Smallest token bucket ≥ total_tokens (None if off-scale)."""
+        return self.ladder.bucket_for(total_tokens)
+
+    # ---------------------------------------------------------- dispatch
+    def prefill_packed(self, params, tokens, positions, seg_ids, cu_seqlens,
+                       q_offsets, kv_lengths, caches, last_idx):
+        args = (params, tokens, positions, seg_ids, cu_seqlens,
+                q_offsets, kv_lengths, caches, last_idx)
+        exe = self._get("packed_prefill", self._jit_packed, args)
+        return exe(*args)
+
+    def precapture(self, params, arena_gather) -> float:
+        """Compile every token bucket at init — |token_buckets| shapes
+        total, vs |L|×|B| for the dense grid."""
+        t0 = time.perf_counter()
+        b = self.max_seqs
+        caches = arena_gather(list(range(b)))
+        for t in self.token_buckets:
+            tokens = jnp.zeros((t,), jnp.int32)
+            positions = jnp.zeros((t,), jnp.int32)
+            seg_ids = jnp.zeros((t,), jnp.int32)
+            cu = jnp.zeros((b + 1,), jnp.int32)
+            off = jnp.zeros((b,), jnp.int32)
+            kvl = jnp.zeros((b,), jnp.int32)
+            last = jnp.zeros((b,), jnp.int32)
+            self._get("packed_prefill", self._jit_packed,
+                      (params, tokens, positions, seg_ids, cu, off, kvl,
+                       caches, last))
+        return time.perf_counter() - t0
+
+
+__all__ = ["BucketExecutor", "PackedBucketExecutor", "DEFAULT_TOKEN_BUCKETS",
+           "make_prefill_fn", "make_packed_prefill_fn", "make_decode_fn",
+           "resolve_donation"]

@@ -73,10 +73,14 @@ class ServeLoop:
             pr = self._tokens[r.rid]
             sessions.append(r.session)
             token_lists.append(pr.tokens)
-        bucket = None
-        if batch.uses_graph:
-            bucket = (batch.bucket_len, batch.bucket_depth)
-        firsts = self.engine.prefill_batch(sessions, token_lists, bucket)
+        if batch.is_packed:
+            firsts = self.engine.prefill_packed(sessions, token_lists,
+                                                batch.token_bucket)
+        else:
+            bucket = None
+            if batch.uses_graph:
+                bucket = (batch.bucket_len, batch.bucket_depth)
+            firsts = self.engine.prefill_batch(sessions, token_lists, bucket)
         done = self.clock()
         for r in batch.requests:
             r.finish_time = done

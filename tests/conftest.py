@@ -5,7 +5,10 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings  # noqa: E402
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:  # hypothesis is optional — plain pytest runs without it
+    from hypothesis import settings  # noqa: E402
+except ImportError:
+    settings = None
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -1,6 +1,7 @@
 """Algorithm 1 (AWD) invariants — property-based."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.awd import AWDConfig, AWDScheduler

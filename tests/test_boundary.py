@@ -4,6 +4,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.boundary import (H200_QWEN32B, LatencyModel, TotalFit, fit,

@@ -1,5 +1,6 @@
 """§3.1 bucket grid properties."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.buckets import BucketGrid, greedy_length_groups

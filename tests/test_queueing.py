@@ -2,6 +2,7 @@
 single-server queue."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.queueing import (ServiceClass, hol_penalty, mixed_wait,

@@ -1,0 +1,129 @@
+"""Ragged packed-prefill kernel vs the dense reference oracle.
+
+Every case checks the Pallas kernel (interpret mode) against BOTH the
+packed oracle (ref_ragged_prefill) and a per-sequence call to the dense
+oracle (ref_flash_attn) — the latter is the correctness contract the
+dense (L, B) path already satisfies.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ragged_prefill import ragged_prefill_attn
+from repro.kernels.ref import ref_flash_attn, ref_ragged_prefill
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def make_case(lens, hists, hq, hkv, d, s, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    b, t = len(lens), int(sum(lens))
+    cu = np.zeros(b + 1, np.int32)
+    cu[1:] = np.cumsum(lens)
+    q = rng.standard_normal((t, hq, d)).astype(dtype)
+    k = rng.standard_normal((b, s, hkv, d)).astype(dtype)
+    v = rng.standard_normal((b, s, hkv, d)).astype(dtype)
+    off = np.asarray(hists, np.int32)
+    kvl = off + np.asarray(lens, np.int32)
+    return q, k, v, cu, off, kvl
+
+
+def run_kernel(q, k, v, cu, off, kvl, **kw):
+    return np.asarray(ragged_prefill_attn(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(cu),
+        jnp.asarray(off), jnp.asarray(kvl), interpret=True, **kw))
+
+
+def check_against_dense(out, q, k, v, cu, off, kvl, causal=True):
+    """Rows of each sequence must equal the dense per-sequence oracle."""
+    for i in range(len(off)):
+        qi = q[cu[i]:cu[i + 1]][None]
+        dense = np.asarray(ref_flash_attn(
+            jnp.asarray(qi), jnp.asarray(k[i:i + 1]), jnp.asarray(v[i:i + 1]),
+            q_offsets=jnp.asarray(off[i:i + 1]),
+            kv_lengths=jnp.asarray(kvl[i:i + 1]), causal=causal))[0]
+        np.testing.assert_allclose(out[cu[i]:cu[i + 1]], dense, **TOL)
+
+
+@pytest.mark.parametrize("lens,hq,hkv,d,s", [
+    ([7, 23, 61, 12], 4, 4, 16, 128),    # MHA mixed lengths
+    ([7, 23, 61, 12], 8, 2, 16, 128),    # GQA rep=4
+    ([1, 1, 1], 4, 1, 8, 32),            # single-token sequences
+    ([64], 4, 2, 16, 64),                # one block-aligned sequence
+    ([33, 31], 8, 4, 32, 64),            # boundary inside a q block
+])
+def test_ragged_matches_dense(lens, hq, hkv, d, s):
+    q, k, v, cu, off, kvl = make_case(lens, [0] * len(lens), hq, hkv, d, s)
+    out = run_kernel(q, k, v, cu, off, kvl, block_q=32, block_k=32)
+    check_against_dense(out, q, k, v, cu, off, kvl)
+
+
+def test_ragged_reprefill_offsets():
+    """Re-prefill: queries start at history offsets inside the cache."""
+    lens, hists = [5, 17, 9], [12, 0, 70]
+    q, k, v, cu, off, kvl = make_case(lens, hists, 8, 2, 16, 128, seed=3)
+    out = run_kernel(q, k, v, cu, off, kvl, block_q=16, block_k=32)
+    check_against_dense(out, q, k, v, cu, off, kvl)
+
+
+def test_ragged_noncausal():
+    lens = [6, 14]
+    q, k, v, cu, off, kvl = make_case(lens, [0, 0], 4, 4, 16, 32, seed=5)
+    out = run_kernel(q, k, v, cu, off, kvl, causal=False,
+                     block_q=8, block_k=16)
+    check_against_dense(out, q, k, v, cu, off, kvl, causal=False)
+
+
+def test_ragged_oracle_agreement():
+    """Kernel vs the packed oracle on an irregular blocking."""
+    lens, hists = [7, 23, 61, 12], [3, 0, 11, 40]
+    q, k, v, cu, off, kvl = make_case(lens, hists, 8, 4, 16, 128, seed=7)
+    out = run_kernel(q, k, v, cu, off, kvl, block_q=32, block_k=64)
+    ref = np.asarray(ref_ragged_prefill(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(cu),
+        jnp.asarray(off), jnp.asarray(kvl)))
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_ragged_bucket_tail_padding():
+    """Stream padded past cu[-1] (token-bucket tail): pad rows yield 0
+    and real rows are unaffected."""
+    lens = [7, 12]
+    q, k, v, cu, off, kvl = make_case(lens, [0, 0], 4, 2, 16, 64, seed=9)
+    t_bucket = 64                              # bucketed stream length
+    qp = np.zeros((t_bucket,) + q.shape[1:], q.dtype)
+    qp[:q.shape[0]] = q
+    qp[q.shape[0]:] = 1e3                      # poison pad rows
+    out = run_kernel(qp, k, v, cu, off, kvl, block_q=32, block_k=32)
+    check_against_dense(out[:sum(lens)], q, k, v, cu, off, kvl)
+    np.testing.assert_array_equal(out[sum(lens):], 0.0)
+
+
+def test_ragged_padded_empty_sequences():
+    """B padded with empty sequences (cu repeats): they contribute
+    nothing and break nothing — the executor pads B_max this way."""
+    lens = [9, 30]
+    q, k, v, cu, off, kvl = make_case(lens, [4, 0], 4, 2, 16, 64, seed=11)
+    b_max = 5
+    cu_p = np.concatenate([cu, np.full(b_max - len(lens), cu[-1], np.int32)])
+    k_p = np.concatenate([k, np.zeros((b_max - len(lens),) + k.shape[1:],
+                                      k.dtype)])
+    v_p = np.concatenate([v, np.zeros_like(k_p[:b_max - len(lens)])])
+    off_p = np.concatenate([off, np.zeros(b_max - len(lens), np.int32)])
+    kvl_p = np.concatenate([kvl, np.zeros(b_max - len(lens), np.int32)])
+    out = run_kernel(q, k_p, v_p, cu_p, off_p, kvl_p, block_q=16, block_k=32)
+    check_against_dense(out, q, k, v, cu, off, kvl)
+
+
+def test_ragged_bfloat16():
+    lens = [7, 23, 12]
+    q, k, v, cu, off, kvl = make_case(lens, [0, 5, 0], 8, 2, 16, 64, seed=13)
+    qb, kb, vb = (jnp.asarray(a).astype(jnp.bfloat16) for a in (q, k, v))
+    out = np.asarray(ragged_prefill_attn(
+        qb, kb, vb, jnp.asarray(cu), jnp.asarray(off), jnp.asarray(kvl),
+        block_q=16, block_k=32, interpret=True).astype(jnp.float32))
+    ref = np.asarray(ref_ragged_prefill(
+        qb, kb, vb, jnp.asarray(cu), jnp.asarray(off),
+        jnp.asarray(kvl)).astype(jnp.float32))
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)

@@ -10,10 +10,17 @@ from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,
                                         tree_shardings, use_rules, constrain)
 
 
+def make_mesh():
+    # jax < 0.5 has no jax.sharding.AxisType (all axes are Auto there)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh()
 
 
 def rules(mesh, table=TRAIN_RULES):
@@ -27,8 +34,7 @@ def test_spec_basic(mesh):
 
 
 def test_divisibility_guard():
-    big = jax.make_mesh((1, 1), ("data", "model"),
-                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    big = make_mesh()
     # fake a 16-wide model axis via rules math: use axis_size directly
     r = ShardingRules(mesh=big, rules=dict(TRAIN_RULES))
     # with axis size 1 everything divides; emulate 16 by checking the
