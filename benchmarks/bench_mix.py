@@ -1,13 +1,27 @@
 """Fig.8 — prefill throughput: PD disaggregation vs Mix-with-Decode,
-1 and 2 instances, across concurrency."""
+1 and 2 instances, across concurrency.
+
+Plus the continuous-batching scenario on the REAL smoke engine: steady
+decode load + bursty short prefills, driven (a) as the unified mixed
+tick (prefill segments + decode rows fused into one packed dispatch per
+round) and (b) as the alternating prefill/decode loop.  Reports TTFT /
+TPOT and dispatch counts, and writes BENCH_mixed.json so the perf
+trajectory accumulates across PRs.
+"""
 from __future__ import annotations
 
+import json
+import os
+import time
 from typing import Dict, List
 
 from benchmarks.common import shared_sim, routed_sim
 from repro.sim.workload import WorkloadConfig, closed_loop_clients
 
 UNTIL = 30.0
+TICKS_PER_SIM_SECOND = 10          # one scheduler round ≈ 100 ms simulated
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_mixed.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -20,6 +34,126 @@ def _run(mode: str, n_inst: int, conc: int) -> float:
     return sim.prefill_rps(UNTIL)
 
 
+def _mixed_workload(cfg, seed: int = 4):
+    """Steady decode load (4 sessions, 12 tokens each) + 8 rounds of
+    bursty short prefills (0–3 requests of 4–20 tokens)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    steady = [rng.integers(0, cfg.vocab_size, 24) for _ in range(4)]
+    bursts = []
+    for r in range(8):
+        n = int(rng.integers(0, 4)) if r % 3 else 0   # bursty, with gaps
+        bursts.append([rng.integers(0, cfg.vocab_size, int(rng.integers(4, 20)))
+                       for _ in range(n)])
+    return steady, bursts
+
+
+def _drive(unified: bool, cfg, params, decode_budget: int = 12) -> Dict:
+    """Run the mixed workload; returns dispatch/latency metrics.
+
+    unified=True: every round is ONE engine.step_mixed (prefills +
+    decode rows in one packed stream).  unified=False: the alternating
+    loop — a packed prefill step, THEN a separate decode step."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=16, max_len=64, packed=True, packed_max_seqs=8,
+        token_buckets=(64, 128)))
+    steady, bursts = _mixed_workload(cfg)
+    # warm every shape both arms will hit (64/128 packed buckets, the
+    # (4, 1) decode step) on throwaway sessions, so the timed region
+    # measures steady-state dispatch latency, not compiles
+    warm = [np.zeros(4, np.int32) for _ in range(4)]
+    wf = eng.prefill_packed([90, 91, 92, 93], warm)
+    eng.decode_batch([90, 91, 92, 93], [wf[s] for s in (90, 91, 92, 93)])
+    for s in (90, 91, 92, 93):
+        eng.close_session(s)
+    firsts = eng.prefill_packed(list(range(4)), steady)
+    st0 = eng.stats()
+    d_base = st0["packed_dispatches"] + st0["dense_dispatches"]
+    active = {s: decode_budget for s in range(4)}
+    last = dict(firsts)
+    ttfts, tpots, rounds = [], [], 0
+    sess = 100
+    queue = list(bursts)
+    t0 = time.perf_counter()
+    while active or queue:
+        burst = queue.pop(0) if queue else []
+        prefills = [(sess + i, toks) for i, toks in enumerate(burst)]
+        sess += len(burst)
+        decodes = [(s, last[s]) for s in active]
+        r0 = time.perf_counter()
+        if unified:
+            res = eng.step_mixed(prefills, decodes)
+            toks = res.tokens
+            ttft = time.perf_counter() - r0
+        else:
+            toks = {}
+            if prefills:
+                toks.update(eng.prefill_packed([s for s, _ in prefills],
+                                               [t for _, t in prefills]))
+            # first tokens are ready after the prefill dispatch alone —
+            # TTFT must not be charged for the separate decode step
+            ttft = time.perf_counter() - r0
+            if decodes:
+                dec = eng.decode_batch([s for s, _ in decodes],
+                                       [t for _, t in decodes])
+                toks.update({s: d[0] for s, d in dec.items()})
+        dt = time.perf_counter() - r0
+        ttfts.extend([ttft] * len(prefills))
+        for s, _ in prefills:          # burst requests don't decode:
+            eng.close_session(s)       # recycle their arena slots
+        for s in list(active):
+            last[s] = toks[s]
+            tpots.append(dt)
+            active[s] -= 1
+            if active[s] <= 0:
+                del active[s]
+        rounds += 1
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    dispatches = st["packed_dispatches"] + st["dense_dispatches"] - d_base
+    sim_seconds = rounds / TICKS_PER_SIM_SECOND
+    return {
+        "dispatches": dispatches,
+        "dispatches_per_sim_s": round(dispatches / sim_seconds, 2),
+        "rounds": rounds,
+        "decode_tokens_fused": st.get("decode_tokens_fused", 0),
+        "ttft_ms": round(1e3 * sum(ttfts) / max(len(ttfts), 1), 2),
+        "tpot_ms": round(1e3 * sum(tpots) / max(len(tpots), 1), 2),
+        "wall_ms": round(1e3 * wall, 1),
+        "compiled_shapes": st["packed_shapes"] + st["captured_shapes"],
+    }
+
+
+def _continuous_batching() -> List[Dict]:
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    uni = _drive(True, cfg, params)
+    alt = _drive(False, cfg, params)
+    rows = [
+        {"bench": "mixed_cb", "tag": "unified", "mean_ms": uni["tpot_ms"],
+         **uni},
+        {"bench": "mixed_cb", "tag": "alternating", "mean_ms": alt["tpot_ms"],
+         **alt},
+        {"bench": "mixed_cb", "tag": "gain", "mean_ms": 0.0,
+         "dispatch_reduction_x": round(alt["dispatches"]
+                                       / max(uni["dispatches"], 1), 2),
+         "fewer_dispatches_per_sim_s": alt["dispatches_per_sim_s"]
+         - uni["dispatches_per_sim_s"]},
+    ]
+    with open(BENCH_JSON, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -30,4 +164,5 @@ def run() -> List[Dict]:
                          "pd_rps": round(pd, 2), "mix_rps": round(mix, 2),
                          "mix_over_pd": round(mix / pd, 3) if pd else 0.0,
                          "mean_ms": 0.0})
+    rows.extend(_continuous_batching())
     return rows

@@ -51,6 +51,10 @@ class AWDConfig:
     # (TokenBucketLadder) instead of padding to the (L, B) grid
     token_buckets: Optional[Tuple[int, ...]] = None  # None → defaults
     packed_max_seqs: int = 16     # cache rows per packed step (B_max)
+    decode_window_shrink: float = 0.25  # continuous batching: every
+    # waiting decode session stalls one TPOT per tick spent filling a
+    # prefill batch, so the waiting window shrinks as the decode backlog
+    # grows — W_eff = W / (1 + shrink · n_decode)
 
 
 class AWDScheduler:
@@ -73,6 +77,14 @@ class AWDScheduler:
         self.w = self.cfg.w_max
         self.dispatches = 0
         self.graph_hits = 0
+        self.decode_backlog = 0   # active decode sessions awaiting fusion
+
+    def note_decode_backlog(self, n: int) -> None:
+        """Continuous batching: the loop reports how many in-flight
+        sessions are waiting on their next decode token.  The backlog
+        shrinks the waiting window (their TPOT stalls while we wait) and
+        reserves stream rows in packed batch formation."""
+        self.decode_backlog = max(0, int(n))
 
     # ------------------------------------------------------------ signals
     def on_arrival(self, now: float) -> None:
@@ -106,11 +118,21 @@ class AWDScheduler:
 
     def window(self, queue: Sequence[Request], now: float, depth: int) -> float:
         w = min(self.w_sla(queue, now), self.w_gr(depth))
-        return min(max(w, self.cfg.w_min), self.cfg.w_max)
+        w = min(max(w, self.cfg.w_min), self.cfg.w_max)
+        if self.decode_backlog:
+            # decode sessions stall one token per tick we spend waiting:
+            # trade batch fill for TPOT as the backlog grows (applied to
+            # the EFFECTIVE window, after the clamp, so pressure bites
+            # even when the raw window sits at w_max)
+            w = max(self.cfg.w_min,
+                    w / (1.0 + self.cfg.decode_window_shrink
+                         * self.decode_backlog))
+        return w
 
     # ----------------------------------------------------------- batching
     def _select(self, queue: Sequence[Request],
-                depth_cap: Optional[int] = None) -> List[Request]:
+                depth_cap: Optional[int] = None,
+                decode_tokens: int = 0) -> List[Request]:
         """Bucket-first greedy selection (Algorithm 1 line 6): requests
         ordered by (bucket, arrival) so same-length groups cluster and
         padding to the eventual NEARESTGRAPH shape stays minimal; filled
@@ -118,14 +140,18 @@ class AWDScheduler:
 
         Packed mode: requests cost their RAW length (no per-request
         padding exists), order is plain FCFS (packing is composition-
-        independent), and the fill target is the token-bucket ladder."""
+        independent), and the fill target is the token-bucket ladder.
+        ``decode_tokens`` active decode sessions each reserve one stream
+        row AND one cache row for continuous-batching fusion (clamped so
+        at least one prefill always fits)."""
         if not queue:
             return []
         cap = depth_cap if depth_cap is not None else self.d_target
         budget = self.mem_budget
         if self.ladder is not None:
-            cap = min(cap, self.ladder.max_seqs)
-            budget = min(budget, self.ladder.max_tokens)
+            reserve = min(decode_tokens, self.ladder.max_seqs - 1)
+            cap = min(cap, self.ladder.max_seqs - reserve)
+            budget = min(budget, self.ladder.max_tokens - reserve)
             ordered = sorted(queue, key=lambda r: r.arrival)
         else:
             ordered = sorted(
@@ -133,14 +159,21 @@ class AWDScheduler:
                                       or 10 ** 9, r.arrival))
         picked: List[Request] = []
         tokens = 0
+        seen_sessions = set()
         for r in ordered:
             if len(picked) >= cap:
                 break
+            if r.session >= 0 and r.session in seen_sessions:
+                # one step per session: a second queued turn depends on
+                # the first turn's KV writes, so it waits for the next
+                # batch (same-stream duplicates would corrupt the cache)
+                continue
             pad = self._cost(r)
             if picked and tokens + pad > budget:
                 break
             picked.append(r)
             tokens += pad
+            seen_sessions.add(r.session)
         return picked
 
     def _cost(self, r: Request) -> int:
@@ -155,11 +188,19 @@ class AWDScheduler:
 
     # ------------------------------------------------------------- decide
     def decide(self, queue: List[Request], now: float,
-               force: bool = False) -> Tuple[Optional[Batch], Optional[float]]:
+               force: bool = False,
+               decode_tokens: Optional[int] = None
+               ) -> Tuple[Optional[Batch], Optional[float]]:
         """Returns (batch_to_dispatch | None, next_wakeup_time | None).
 
         The caller removes the batch's requests from the queue on dispatch.
+        ``decode_tokens`` (None → the noted backlog) is the number of
+        in-flight decode sessions the emitted packed batch must leave
+        room for — the batch comes back with ``decode_tokens`` set to the
+        fusion capacity actually reserved inside its token bucket.
         """
+        if decode_tokens is None:
+            decode_tokens = self.decode_backlog
         if not queue:
             self._accum_since = None
             return None, None
@@ -182,7 +223,7 @@ class AWDScheduler:
                 return self._emit(batch, now), None
             return None, self._accum_since + self.cfg.idle_flush
 
-        batch = self._select(queue)
+        batch = self._select(queue, decode_tokens=decode_tokens)
         elapsed = now - self._accum_since
         w = self.window(queue, now, len(batch))
         urgent = self._sla_urgent(queue, now)
@@ -190,13 +231,14 @@ class AWDScheduler:
         if (urgent or hol >= self.cfg.t_max) and queue:
             # SLA path: flush deadline-ordered, regardless of bucket
             batch = self._flush_select(queue)
-            return self._emit(batch, now, sla_flush=True), None
+            return self._emit(batch, now, sla_flush=True,
+                              decode_tokens=decode_tokens), None
         # waiting is only rational if ≥1 more request is expected to
         # arrive inside the remaining window (napkin math: r̂·W ≥ 1)
         futile = self.r_hat * max(w - elapsed, 0.0) < 1.0
         if force or (batch and (len(batch) >= self.d_target or elapsed >= w
                                 or futile)):
-            return self._emit(batch, now), None
+            return self._emit(batch, now, decode_tokens=decode_tokens), None
         wake = self._accum_since + w
         ddls = [r.deadline - self.s_hat - self.cfg.sigma
                 for r in queue if r.deadline is not None]
@@ -210,17 +252,21 @@ class AWDScheduler:
         depth (an over-deep flush simply runs the standard kernel)."""
         picked: List[Request] = []
         tokens = 0
+        seen_sessions = set()
         for r in sorted(queue, key=lambda r: (r.deadline is None,
                                               r.deadline or r.arrival)):
+            if r.session >= 0 and r.session in seen_sessions:
+                continue          # same-session turns never share a step
             pad = self._cost(r)
             if picked and tokens + pad > self.mem_budget:
                 break
             picked.append(r)
             tokens += pad
+            seen_sessions.add(r.session)
         return picked
 
     def _emit(self, requests: List[Request], now: float,
-              sla_flush: bool = False) -> Batch:
+              sla_flush: bool = False, decode_tokens: int = 0) -> Batch:
         lengths = [r.new_tokens for r in requests]
         batch = Batch(requests=list(requests), kind="short")
         real = max(sum(lengths), 1)
@@ -228,12 +274,24 @@ class AWDScheduler:
             else self.cfg.max_pad_ratio
         if self.ladder is not None:
             # packed path: one flat stream in the total-token bucket —
-            # the profitability guard only sees the bucket tail
-            tb = self.ladder.bucket_for(sum(lengths))
+            # the profitability guard only sees the bucket tail.  Fused
+            # decode rows (continuous batching) count as real tokens:
+            # the bucket must cover them and they discount the tail.
+            # When the full reserve busts the ladder, fuse FEWER decodes
+            # rather than losing the packed path for the whole batch.
+            fused = max(0, min(decode_tokens,
+                               self.ladder.max_seqs - len(requests)))
+            tb = self.ladder.bucket_for(sum(lengths) + fused)
+            while tb is None and fused > 0:
+                fused -= 1
+                tb = self.ladder.bucket_for(sum(lengths) + fused)
             if tb is not None and len(requests) <= self.ladder.max_seqs \
-                    and tb <= ratio * real:
+                    and tb <= ratio * (real + fused):
                 batch.token_bucket = tb
                 batch.uses_graph = True
+                batch.decode_tokens = fused
+                if fused:
+                    batch.kind = "mixed"
                 self.graph_hits += 1
                 for r in requests:
                     r.used_graph = True

@@ -135,6 +135,38 @@ class TokenBucketLadder:
         return len(self.buckets)
 
 
+def fit_decodes(prefill_tokens: int, n_prefill: int, n_decodes: int,
+                ladder: TokenBucketLadder,
+                token_bucket: Optional[int] = None
+                ) -> Tuple[int, Optional[int]]:
+    """How many decode tokens can fuse into a packed step already
+    carrying ``prefill_tokens`` over ``n_prefill`` segments
+    (continuous batching, DESIGN.md §4).
+
+    Each decode costs one stream row AND one cache row, so the fit is
+    min over the token room and the sequence-row room.  Returns
+    (n_fit, bucket) — bucket is the smallest ladder rung covering the
+    fused total (or ``token_bucket`` when the caller pinned one);
+    (0, None) when even the prefill part is off-ladder.
+
+    Pure ladder arithmetic (no serving deps): the real engine's mixed
+    step and the discrete-event simulator's pricing share this exact
+    function, which is what keeps them in agreement.
+    """
+    row_room = max(0, ladder.max_seqs - n_prefill)
+    want = min(n_decodes, row_room)
+    while want >= 0:
+        total = prefill_tokens + want
+        if total == 0:
+            return 0, None
+        bucket = token_bucket if token_bucket is not None \
+            else ladder.bucket_for(total)
+        if bucket is not None and total <= bucket:
+            return want, bucket
+        want -= 1
+    return 0, None
+
+
 def greedy_length_groups(lengths: Sequence[int],
                          grid: BucketGrid) -> List[List[int]]:
     """Greedy bucket-first grouping (Algorithm 1 line 6): indices grouped

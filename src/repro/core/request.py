@@ -64,6 +64,9 @@ class Batch:
     token_bucket: Optional[int] = None   # packed path: total-token bucket T
     uses_graph: bool = False
     kind: str = "short"                  # short | long | decode | mixed
+    decode_tokens: int = 0               # decode rows fused into this step
+    # (continuous batching: each rides the packed stream as a length-1
+    # segment, sharing the dispatch + weight read with the prefills)
 
     @property
     def depth(self) -> int:
@@ -72,6 +75,11 @@ class Batch:
     @property
     def tokens(self) -> int:
         return sum(r.new_tokens for r in self.requests)
+
+    @property
+    def stream_tokens(self) -> int:
+        """Real rows of the packed stream: prefill + fused decode."""
+        return self.tokens + self.decode_tokens
 
     @property
     def is_packed(self) -> bool:

@@ -51,6 +51,11 @@ class ChunkWork:
     chunk_tokens: int
     done_tokens: int          # tokens already prefilled (acts as history)
     is_last: bool
+    decode_tokens: int = 0    # decode rows fused into the chunk's packed
+    # stream (continuous batching — the serve loop fuses the backlog
+    # into chunk steps exactly as into short batches)
+    uses_graph: bool = False  # chunk rides a captured token-bucket shape
+    # (engine.prefill_long routes C_l chunks through the packed path)
 
 
 class BasePolicy:
@@ -64,6 +69,12 @@ class BasePolicy:
         raise NotImplementedError
 
     def on_complete(self, work, now: float) -> None:
+        pass
+
+    def note_decode_backlog(self, n: int) -> None:
+        """Continuous batching: the serving loop reports how many
+        in-flight sessions await their next decode token.  Policies that
+        form packed batches reserve fusion room; others ignore it."""
         pass
 
     def backlog_tokens(self) -> int:
@@ -96,12 +107,17 @@ class FCFSPolicy(BasePolicy):
             return None, None
         batch: List[Request] = []
         tokens = 0
-        while self.queue:
-            r = self.queue[0]
+        seen = set()
+        for r in list(self.queue):
             if batch and tokens + r.new_tokens > self.mem_budget:
                 break
-            batch.append(self.queue.popleft())
+            if r.session >= 0 and r.session in seen:
+                continue    # a session's later turn waits for its earlier
+            batch.append(r)
             tokens += r.new_tokens
+            seen.add(r.session)
+        picked = {r.rid for r in batch}
+        self.queue = deque(r for r in self.queue if r.rid not in picked)
         b = Batch(requests=batch, kind="mixed")
         if self.grid is not None:
             g = self.grid.nearest_graph([r.new_tokens for r in batch],
@@ -153,6 +169,10 @@ class TemporalDisaggPolicy(BasePolicy):
         if cls == "short" and self.awd is not None:
             self.awd.on_arrival(now)
 
+    def note_decode_backlog(self, n: int) -> None:
+        if self.awd is not None:
+            self.awd.note_decode_backlog(n)
+
     # ------------------------------------------------------------- short
     def _short_work(self, now: float):
         q = list(self.dq.short)
@@ -161,18 +181,25 @@ class TemporalDisaggPolicy(BasePolicy):
         if self.awd is not None:
             batch, wake = self.awd.decide(q, now)
             if batch is not None:
-                for r in batch.requests:
-                    self.dq.short.remove(r)
+                picked = {r.rid for r in batch.requests}
+                self.dq.short = deque(r for r in self.dq.short
+                                      if r.rid not in picked)
             return batch, wake
         # DISAGG_ONLY: batch all queued shorts under budget, no window
         batch: List[Request] = []
         tokens = 0
-        while self.dq.short:
-            r = self.dq.short[0]
+        seen = set()
+        for r in list(self.dq.short):
             if batch and tokens + r.new_tokens > self.grid.mem_budget:
                 break
-            batch.append(self.dq.short.popleft())
+            if r.session >= 0 and r.session in seen:
+                continue
+            batch.append(r)
             tokens += r.new_tokens
+            seen.add(r.session)
+        picked = {r.rid for r in batch}
+        self.dq.short = deque(r for r in self.dq.short
+                              if r.rid not in picked)
         return Batch(requests=batch, kind="short"), None
 
     # -------------------------------------------------------------- long

@@ -27,6 +27,13 @@ belong to no sequence: they accumulate nothing and produce zeros.
 Masking at sequence boundaries is exact — a q block straddling two
 sequences contributes each row only to its own sequence's softmax.
 
+Decode segments (continuous batching) need no special path: a length-1
+segment with ``q_offsets[i] = H`` and ``kv_lengths[i] = H + 1`` attends
+over exactly ``H + 1`` keys — the causal frontier check caps the kv
+scan at ``offset + 1`` blocks for that row, and kv blocks past the
+valid cache length are skipped before any VMEM traffic, so a decode
+row costs O(H) kv reads, not O(S_max).
+
 GQA reads the kv head as h // rep in the index maps, same as the dense
 kernel; accumulation is fp32 via ``preferred_element_type``.
 """

@@ -352,20 +352,30 @@ def forward_packed(params: Dict, cfg: ModelConfig, *,
                    caches: List[Any],
                    last_idx: jax.Array,
                    ) -> Tuple[jax.Array, List[Any]]:
-    """Padding-free prefill over a packed flat token stream.
+    """Padding-free forward over a packed flat token stream — the
+    continuous-batching step: prefill AND decode segments side by side.
 
     tokens/positions/seg_ids: (T,) — the concatenation of every
     sequence's new tokens, each token carrying its absolute position
     (history offset + local index) and its cache row; sequence i owns
     rows [cu_seqlens[i], cu_seqlens[i+1]) of the stream.  Rows past
     cu_seqlens[-1] are bucket tail padding (parked positions, junk row).
-    caches: from :func:`init_cache` with batch = B cache rows.
-    last_idx: (B,) flat index of each sequence's final token — the
-    TTFT logit gather.  Returns (last_logits (B, V), new_caches).
 
-    One compiled shape serves EVERY mix of request lengths summing under
-    the token bucket T — the compile-cache key space is |T buckets|, not
-    |lengths| × |depths|.
+    A decode segment is simply length 1 with ``q_offsets[i] = H`` (its
+    full cached context) and ``kv_lengths[i] = H + 1``: the scatter in
+    :func:`packed_attention_layer` appends its KV at position H and the
+    ragged kernel attends it over H + 1 keys — identical math to the
+    dense decode step, inside the same dispatch as the prefills.
+
+    caches: from :func:`init_cache` with batch = B cache rows.
+    last_idx: (B,) flat index of each sequence's final token — ONE logit
+    gathered per segment (prefill TTFT and decode next-token alike).
+    Returns (last_logits (B, V), new_caches).
+
+    One compiled shape serves EVERY mix of segment kinds and lengths
+    summing under the token bucket T — the compile-cache key space is
+    |T buckets|, not |lengths| × |depths|, and prefill/decode mixes
+    don't multiply it.
     """
     assert supports_packed(cfg), cfg.name
     x = jnp.take(params["embed"], tokens, axis=0)              # (T, d)

@@ -1,4 +1,7 @@
 from repro.serving.kvcache import KVArena  # noqa: F401
+from repro.serving.packing import (SegmentSpec, MixedStream,  # noqa: F401
+                                   assemble_mixed_stream, fit_decodes)
 from repro.serving.executor import (BucketExecutor,  # noqa: F401
                                     PackedBucketExecutor)
-from repro.serving.engine import Engine, EngineConfig  # noqa: F401
+from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
+                                  MixedStepResult)

@@ -29,8 +29,19 @@ from repro.core import boundary as boundary_mod
 from repro.core.buckets import DEFAULT_TOKEN_BUCKETS, BucketGrid
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
+from repro.serving import packing
 from repro.serving.executor import BucketExecutor, PackedBucketExecutor
 from repro.serving.kvcache import KVArena
+
+
+@dataclasses.dataclass
+class MixedStepResult:
+    """Outcome of one continuous-batching tick (engine.step_mixed)."""
+    tokens: Dict[int, int]        # session → sampled next token
+    fused: bool                   # True = ONE packed dispatch served all
+    bucket: Optional[int] = None  # token bucket used (fused path)
+    n_prefill: int = 0            # prefill + chunk segments
+    n_decode: int = 0             # fused decode segments
 
 
 @dataclasses.dataclass
@@ -66,6 +77,8 @@ class Engine:
                                * self.ecfg.max_len)
         self.samples: List[Tuple[float, float, float]] = []  # (T, L, H)
         self.fitted: Optional[boundary_mod.TotalFit] = None
+        # last-step logits per session (parity harness + sampling hooks)
+        self.last_logits: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -73,6 +86,7 @@ class Engine:
 
     def close_session(self, session: int) -> None:
         self.arena.free(session)
+        self.last_logits.pop(session, None)
 
     def history(self, session: int) -> int:
         return self.arena.length(session)
@@ -124,10 +138,12 @@ class Engine:
         # write back only the real rows
         self.arena.scatter(slots, jax.tree.map(
             lambda a: a[:, :n], new_caches))
+        last_np = np.asarray(last)
         out: Dict[int, int] = {}
         for i, s in enumerate(sessions):
             self.arena.set_length(s, hists[i] + lens[i])
             out[s] = int(toks[i])
+            self.last_logits[s] = last_np[i]
         if self.ecfg.measure and n:
             per = elapsed / n
             for l, h in zip(lens, hists):
@@ -149,74 +165,128 @@ class Engine:
         packed executor is absent or the batch is off-ladder.
         Returns {session: first_sampled_token}."""
         assert len(sessions) == len(token_lists)
-        n = len(sessions)
-        lens = [len(t) for t in token_lists]
-        total = sum(lens)
-        px = self.packed_executor
-        if px is None or n > px.max_seqs:
-            return self.prefill_batch(sessions, token_lists)
-        bucket = token_bucket or px.bucket_for(total)
-        if bucket is None or bucket < total:
-            return self.prefill_batch(sessions, token_lists)
+        res = self.step_mixed(list(zip(sessions, token_lists)), [],
+                              token_bucket=token_bucket)
+        return res.tokens
 
-        slots, hists = [], []
-        for s in sessions:
-            slots.append(self.arena.alloc(s))
-            hists.append(self.arena.length(s))
+    # ------------------------------------------------- continuous batching
+    def step_mixed(self, prefills: Sequence[Tuple[int, np.ndarray]],
+                   decodes: Sequence[Tuple[int, int]],
+                   token_bucket: Optional[int] = None) -> MixedStepResult:
+        """One continuous-batching tick: short prefills, long-prefill
+        chunks, and single-token decode segments fused into ONE packed
+        flat stream — one dispatch instead of a prefill step plus a
+        decode step (DESIGN.md §4).
+
+        prefills: (session, new_tokens) — fresh prefill, re-prefill, or a
+        C_l chunk (the session's cached length is the history offset).
+        decodes: (session, last_token) — in-flight sessions advancing one
+        token each; their segment attends over ``history + 1`` keys.
+
+        Falls back to the alternating dense path (prefill batch then
+        decode batch — up to two dispatches) when the packed executor is
+        absent, the mix overflows ``max_seqs``, or the total is
+        off-ladder.  Returns a :class:`MixedStepResult`."""
+        prefills, decodes = list(prefills), list(decodes)
+        n_p, n_d = len(prefills), len(decodes)
+        assert n_p + n_d > 0, "empty mixed step"
+        sess_all = [s for s, _ in prefills] + [s for s, _ in decodes]
+        assert len(set(sess_all)) == len(sess_all), \
+            f"session appears twice in one step: {sess_all}"
+        lens = [len(t) for _, t in prefills]
+        total = sum(lens) + n_d
+        px = self.packed_executor
+        bucket = None
+        if px is not None and n_p + n_d <= px.max_seqs:
+            bucket = token_bucket or px.bucket_for(total)
+            if bucket is not None and bucket < total:
+                bucket = None
+        if bucket is None:
+            out: Dict[int, int] = {}
+            if prefills:
+                out.update(self.prefill_batch([s for s, _ in prefills],
+                                              [t for _, t in prefills]))
+            if decodes:
+                dec = self.decode_batch([s for s, _ in decodes],
+                                        [t for _, t in decodes])
+                out.update({s: toks[0] for s, toks in dec.items()})
+            return MixedStepResult(tokens=out, fused=False,
+                                   n_prefill=n_p, n_decode=n_d)
+
+        segments: List[packing.SegmentSpec] = []
+        for s, toks in prefills:
+            # arena.length is 0 for not-yet-allocated sessions; the slot
+            # itself is claimed once, inside _run_packed
+            segments.append(packing.SegmentSpec(
+                s, np.asarray(toks, np.int32), self.arena.length(s),
+                kind="prefill"))
+        for s, tok in decodes:
+            assert self.arena.slot_of(s) is not None, \
+                f"decode session {s} has no cache slot"
+            segments.append(packing.SegmentSpec(
+                s, np.asarray([tok], np.int32), self.arena.length(s),
+                kind="decode"))
+        return self._run_packed(segments, bucket)
+
+    def _run_packed(self, segments: List[packing.SegmentSpec],
+                    bucket: int) -> MixedStepResult:
+        """Dispatch an assembled segment list as one packed stream."""
+        px = self.packed_executor
+        n = len(segments)
+        slots = [self.arena.alloc(seg.session) for seg in segments]
         b_max = px.max_seqs
         # dummy cache rows (and tail-padding KV writes) reuse slot 0
         all_slots = slots + [slots[0]] * (b_max - n)
-        park = self.arena.max_len - 1
-
-        tokens = np.full(bucket, self.ecfg.pad_token, np.int32)
-        positions = np.full(bucket, park, np.int32)       # tail → parking
-        seg_ids = np.full(bucket, n if n < b_max else 0, np.int32)
-        cu = np.full(b_max + 1, total, np.int32)
-        cu[0] = 0
-        off = np.zeros(b_max, np.int32)
-        kvl = np.zeros(b_max, np.int32)
-        last_idx = np.zeros(b_max, np.int32)
-        o = 0
-        for i, (tl, h) in enumerate(zip(token_lists, hists)):
-            l = len(tl)
-            tokens[o:o + l] = tl
-            positions[o:o + l] = h + np.arange(l)
-            seg_ids[o:o + l] = i
-            cu[i + 1] = o + l
-            off[i] = h
-            kvl[i] = h + l
-            last_idx[i] = o + l - 1
-            o += l
+        stream = packing.assemble_mixed_stream(
+            segments, bucket, b_max, park_position=self.arena.max_len - 1,
+            pad_token=self.ecfg.pad_token)
 
         caches = self.arena.gather(all_slots)
         t0 = time.perf_counter()
-        last, new_caches = px.prefill_packed(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(seg_ids), jnp.asarray(cu), jnp.asarray(off),
-            jnp.asarray(kvl), caches, jnp.asarray(last_idx))
+        last, new_caches = px.mixed_step(
+            self.params, jnp.asarray(stream.tokens),
+            jnp.asarray(stream.positions), jnp.asarray(stream.seg_ids),
+            jnp.asarray(stream.cu_seqlens), jnp.asarray(stream.q_offsets),
+            jnp.asarray(stream.kv_lengths), caches,
+            jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
         toks = np.asarray(jnp.argmax(last, axis=-1))
         elapsed = time.perf_counter() - t0
-        px.note_padding(total, bucket)
+        px.note_padding(stream.total_tokens, bucket)
         self.arena.scatter(slots, jax.tree.map(
             lambda a: a[:, :n], new_caches))
+        last_np = np.asarray(last)
         out: Dict[int, int] = {}
-        for i, s in enumerate(sessions):
-            self.arena.set_length(s, hists[i] + lens[i])
-            out[s] = int(toks[i])
-        if self.ecfg.measure and n:
-            per = elapsed / n
-            for l, h in zip(lens, hists):
-                self.samples.append((per, float(l), float(h)))
-        return out
+        for i, seg in enumerate(segments):
+            self.arena.set_length(seg.session, seg.history + seg.length)
+            out[seg.session] = int(toks[i])
+            self.last_logits[seg.session] = last_np[i]
+        if self.ecfg.measure:
+            # only prefill work feeds the (T, L, H) boundary fit — decode
+            # rows are priced by the decode model, not T(L, H)
+            pre = [seg for seg in segments if seg.kind != "decode"]
+            if pre:
+                per = elapsed / len(pre)
+                for seg in pre:
+                    self.samples.append((per, float(seg.length),
+                                         float(seg.history)))
+        n_d = stream.decode_tokens
+        return MixedStepResult(tokens=out, fused=True, bucket=bucket,
+                               n_prefill=n - n_d, n_decode=n_d)
 
     # ------------------------------------------------------ long prefill
     def prefill_long(self, session: int, token_list: np.ndarray) -> int:
-        """Chunked long prefill (C_l per step).  Returns first token."""
+        """Chunked long prefill (C_l per step).  Returns first token.
+
+        Each chunk rides the packed token-bucket stream when available
+        (a re-prefill segment whose history is the tokens already done),
+        so a chunk can share a step with short requests and decode rows
+        instead of running the dense path solo; off-ladder chunks fall
+        back to the dense path inside ``prefill_packed``."""
         c = self.ecfg.chunk_tokens
         tok = None
         for start in range(0, len(token_list), c):
             chunk = token_list[start:start + c]
-            res = self.prefill_batch([session], [np.asarray(chunk)])
+            res = self.prefill_packed([session], [np.asarray(chunk)])
             tok = res[session]
         return tok
 
@@ -238,9 +308,11 @@ class Engine:
                 jnp.asarray(positions), caches)
             self.arena.scatter(slots, new_caches)
             cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            logits_np = np.asarray(logits)
             for i, s in enumerate(sessions):
                 self.arena.set_length(s, hists[i] + 1)
                 out[s].append(int(cur[i]))
+                self.last_logits[s] = logits_np[i]
         return out
 
     # ------------------------------------------------------ runtime fit
@@ -274,5 +346,9 @@ class Engine:
                 "packed_useful_tokens": px.useful_tokens,
                 "packed_padded_tokens": px.padded_tokens,
                 "packed_padding_efficiency": px.padding_efficiency,
+                "packed_dispatches": px.dispatches,
+                "mixed_steps": px.mixed_steps,
+                "decode_tokens_fused": px.decode_tokens_fused,
             })
+        out["dense_dispatches"] = self.executor.dispatches
         return out

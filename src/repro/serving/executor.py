@@ -142,6 +142,13 @@ class _ExecutorBase:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    @property
+    def dispatches(self) -> int:
+        """Total step dispatches (compile hits + misses) — the unit the
+        continuous-batching benchmark counts: fusing decode into the
+        packed stream shrinks this without shrinking work done."""
+        return self.hits + self.misses
+
 
 class BucketExecutor(_ExecutorBase):
     """The dense (L, B) bucket-grid executor (pads to captured shapes)."""
@@ -211,6 +218,11 @@ class PackedBucketExecutor(_ExecutorBase):
         self._packed = make_packed_prefill_fn(cfg)
         self._jit_packed = jax.jit(
             self._packed, donate_argnums=(7,) if self.donate_cache else ())
+        # continuous-batching counters: a mixed step fuses decode rows
+        # into the same packed stream (and the SAME compiled executable —
+        # the shape key is (token bucket, max_seqs), not the segment mix)
+        self.mixed_steps = 0
+        self.decode_tokens_fused = 0
 
     # ------------------------------------------------------------ lookup
     @property
@@ -232,6 +244,25 @@ class PackedBucketExecutor(_ExecutorBase):
                 q_offsets, kv_lengths, caches, last_idx)
         exe = self._get("packed_prefill", self._jit_packed, args)
         return exe(*args)
+
+    def mixed_step(self, params, tokens, positions, seg_ids, cu_seqlens,
+                   q_offsets, kv_lengths, caches, last_idx, *,
+                   n_decode: int = 0):
+        """One continuous-batching step: the flat stream carries prefill
+        segments AND length-1 decode segments (history offsets point each
+        decode row at its full cached context).
+
+        Dispatches through the SAME compile-cache entry as a pure
+        prefill of this (token bucket, max_seqs) shape — the executable
+        is keyed on shapes only, so prefill, decode, and every mix in
+        between share one captured step.  ``n_decode`` feeds the fusion
+        counters."""
+        if n_decode:
+            self.mixed_steps += 1
+            self.decode_tokens_fused += int(n_decode)
+        return self.prefill_packed(params, tokens, positions, seg_ids,
+                                   cu_seqlens, q_offsets, kv_lengths,
+                                   caches, last_idx)
 
     def precapture(self, params, arena_gather) -> float:
         """Compile every token bucket at init — |token_buckets| shapes

@@ -8,18 +8,29 @@ This is the production composition (launch/serve.py wraps it):
 The same policy objects run in the simulator under a virtual clock; here
 they schedule real JAX computations, TTFTs are real wall-clock, and the
 engine's (T, L, H) samples continuously re-fit the §2.1 boundary.
+
+Continuous batching (DESIGN.md §4): sessions submitted with
+``decode_tokens > 0`` keep generating after their prefill completes.
+Instead of alternating prefill and decode phases, every scheduler tick
+drives ONE mixed step — the packed flat stream carries the tick's short
+prefills (or the long-prefill chunk) plus one decode token for each
+in-flight session, so prefill and decode share a single dispatch.  The
+decode backlog is reported to the policy, which shrinks the AWD waiting
+window (a stalled window stalls every session's TPOT) and reserves
+stream rows for the fused decode segments.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.request import Batch, Request
 from repro.core.scheduler import BasePolicy, ChunkWork
 from repro.core.slo import SLOTracker
+from repro.serving import packing
 from repro.serving.engine import Engine
 
 
@@ -45,12 +56,32 @@ class ServeLoop:
         self.refit_every = refit_every
         self._since_fit = 0
         self.first_tokens: Dict[int, int] = {}
+        # continuous batching state: in-flight decode sessions
+        self.active_decodes: Dict[int, int] = {}   # session → tokens left
+        self.last_token: Dict[int, int] = {}
+        self.generated: Dict[int, List[int]] = {}
+        self.tpot_samples: List[float] = []        # s between decode tokens
+        self.max_tpot_samples = 4096               # keep the tail only
+        self._last_emit: Dict[int, float] = {}
+
+    def close_session(self, session: int) -> None:
+        """Release a finished session: its engine slot and every piece
+        of per-session loop state (transcripts, decode bookkeeping) —
+        long-running loops must not accumulate dead sessions."""
+        self.engine.close_session(session)
+        self.active_decodes.pop(session, None)
+        self.last_token.pop(session, None)
+        self.generated.pop(session, None)
+        self.first_tokens.pop(session, None)
+        self._last_emit.pop(session, None)
 
     # ------------------------------------------------------------ intake
     def submit(self, session: int, tokens: np.ndarray,
                decode_tokens: int = 0,
                deadline: Optional[float] = None) -> Request:
         now = self.clock()
+        # a new turn preempts any generation still running on the session
+        self.active_decodes.pop(session, None)
         self.engine.open_session(session)
         r = Request(new_tokens=len(tokens),
                     history_tokens=self.engine.history(session),
@@ -64,6 +95,34 @@ class ServeLoop:
         self._outstanding += 1
         return r
 
+    # ------------------------------------------------- decode bookkeeping
+    def _start_decoding(self, session: int, first_token: int,
+                        budget: int, now: float) -> None:
+        self.first_tokens[session] = first_token
+        self.generated.setdefault(session, []).append(first_token)
+        self.last_token[session] = first_token
+        self._last_emit[session] = now
+        if budget > 0:
+            self.active_decodes[session] = budget
+
+    def _record_decoded(self, session: int, token: int, now: float) -> None:
+        self.generated.setdefault(session, []).append(token)
+        self.last_token[session] = token
+        self.tpot_samples.append(now - self._last_emit.get(session, now))
+        if len(self.tpot_samples) > 2 * self.max_tpot_samples:
+            self.tpot_samples = self.tpot_samples[-self.max_tpot_samples:]
+        self._last_emit[session] = now
+        left = self.active_decodes.get(session, 0) - 1
+        if left > 0:
+            self.active_decodes[session] = left
+        else:
+            self.active_decodes.pop(session, None)
+
+    def _fusable_decodes(self, exclude: Tuple[int, ...] = ()
+                         ) -> List[Tuple[int, int]]:
+        return [(s, self.last_token[s]) for s in self.active_decodes
+                if s not in exclude]
+
     # ----------------------------------------------------------- execute
     def _run_batch(self, batch: Batch) -> None:
         now = self.clock()
@@ -73,19 +132,38 @@ class ServeLoop:
             pr = self._tokens[r.rid]
             sessions.append(r.session)
             token_lists.append(pr.tokens)
+        px = self.engine.packed_executor
         if batch.is_packed:
-            firsts = self.engine.prefill_packed(sessions, token_lists,
-                                                batch.token_bucket)
+            # the unified tick: fuse one decode token per in-flight
+            # session into the prefill stream, up to the bucket's room
+            fused: List[Tuple[int, int]] = []
+            bucket = batch.token_bucket
+            if px is not None:
+                cand = self._fusable_decodes(exclude=tuple(sessions))
+                n_fit, bucket = packing.fit_decodes(
+                    sum(len(t) for t in token_lists), len(sessions),
+                    len(cand), px.ladder, token_bucket=batch.token_bucket)
+                fused = cand[:n_fit]
+            batch.decode_tokens = len(fused)
+            res = self.engine.step_mixed(
+                list(zip(sessions, token_lists)), fused,
+                token_bucket=bucket)
+            firsts = res.tokens
+            done = self.clock()
+            for s, _ in fused:
+                self._record_decoded(s, res.tokens[s], done)
         else:
             bucket = None
             if batch.uses_graph:
                 bucket = (batch.bucket_len, batch.bucket_depth)
             firsts = self.engine.prefill_batch(sessions, token_lists, bucket)
-        done = self.clock()
+            done = self.clock()
         for r in batch.requests:
             r.finish_time = done
             self.tracker.record(r)
-            self.first_tokens[r.session] = firsts[r.session]
+            pr = self._tokens.pop(r.rid)     # prefill served: drop prompt
+            self._start_decoding(r.session, firsts[r.session],
+                                 pr.decode_tokens, done)
             self._outstanding -= 1
 
     def _run_chunk(self, work: ChunkWork) -> None:
@@ -94,19 +172,52 @@ class ServeLoop:
         if r.dispatch_time is None:
             r.dispatch_time = now
         pr = self._tokens[r.rid]
-        chunk = pr.tokens[work.done_tokens:work.done_tokens + work.chunk_tokens]
-        firsts = self.engine.prefill_batch([r.session], [np.asarray(chunk)])
+        chunk = np.asarray(
+            pr.tokens[work.done_tokens:work.done_tokens + work.chunk_tokens])
+        px = self.engine.packed_executor
+        if px is not None:
+            # a long-prefill chunk shares the packed stream with the
+            # decode backlog instead of serializing against it
+            cand = self._fusable_decodes(exclude=(r.session,))
+            n_fit, bucket = packing.fit_decodes(len(chunk), 1, len(cand),
+                                                px.ladder)
+            fused = cand[:n_fit] if bucket is not None else []
+            res = self.engine.step_mixed([(r.session, chunk)], fused,
+                                         token_bucket=bucket)
+            firsts = res.tokens
+            done = self.clock()
+            for s, _ in fused:
+                self._record_decoded(s, res.tokens[s], done)
+        else:
+            firsts = self.engine.prefill_batch([r.session], [chunk])
+            done = self.clock()
         if work.is_last:
-            r.finish_time = self.clock()
+            r.finish_time = done
             self.tracker.record(r)
-            self.first_tokens[r.session] = firsts[r.session]
+            self._tokens.pop(r.rid, None)    # all chunks served
+            self._start_decoding(r.session, firsts[r.session],
+                                 pr.decode_tokens, done)
             self._outstanding -= 1
+
+    def _run_decode_only(self) -> None:
+        """No prefill work this tick: advance every in-flight session one
+        token in a single decode dispatch."""
+        sessions = list(self.active_decodes)
+        tokens = [self.last_token[s] for s in sessions]
+        out = self.engine.decode_batch(sessions, tokens, steps=1)
+        done = self.clock()
+        for s in sessions:
+            self._record_decoded(s, out[s][0], done)
 
     # --------------------------------------------------------------- run
     def run_until_idle(self, max_wall: float = 60.0) -> None:
+        """Drive the unified tick until every prefill AND every session's
+        decode budget is drained (or max_wall elapses)."""
         start = self.clock()
-        while self._outstanding > 0 and self.clock() - start < max_wall:
+        while (self._outstanding > 0 or self.active_decodes) and \
+                self.clock() - start < max_wall:
             now = self.clock()
+            self.policy.note_decode_backlog(len(self.active_decodes))
             work, wake = self.policy.next_work(now)
             if isinstance(work, Batch) and work.requests:
                 self._run_batch(work)
@@ -114,6 +225,10 @@ class ServeLoop:
             elif isinstance(work, ChunkWork):
                 self._run_chunk(work)
                 self.policy.on_complete(work, self.clock())
+            elif self.active_decodes:
+                # the decode backlog fills what would be an idle wait —
+                # temporal sharing without a separate decode phase
+                self._run_decode_only()
             elif wake is not None:
                 time.sleep(max(0.0, min(wake - now, 0.01)))
             else:
@@ -128,6 +243,17 @@ class ServeLoop:
                     self.policy.dq.override = fit.boundary()
 
     def decode(self, session: int, steps: int) -> List[int]:
-        first = self.first_tokens.get(session, 0)
+        """Manual greedy continuation (legacy API).  Keeps the loop's
+        per-session bookkeeping coherent: ``last_token`` / ``generated``
+        advance with the engine cache, so a later unified tick fuses the
+        session from the RIGHT token (not a stale one)."""
+        first = self.last_token.get(session,
+                                    self.first_tokens.get(session, 0))
         out = self.engine.decode_batch([session], [first], steps)
-        return [first] + out[session]
+        toks = out[session]
+        if session in self.last_token or session in self.generated:
+            now = self.clock()
+            self.generated.setdefault(session, []).extend(toks)
+            self.last_token[session] = toks[-1]
+            self._last_emit[session] = now
+        return [first] + toks

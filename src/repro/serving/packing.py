@@ -1,0 +1,141 @@
+"""Mixed-stream assembly for continuous batching (DESIGN.md §4).
+
+One scheduler tick produces ONE flat (T,) token stream holding three
+segment kinds side by side:
+
+  * ``prefill`` — a short request's new tokens (history 0 or a
+    re-prefill offset);
+  * ``chunk``   — one C_l slice of a long prefill (history = tokens
+    already prefilled), so a long chunk shares the step with shorts
+    instead of running the dense path solo;
+  * ``decode``  — ONE token of an in-flight session (history = its
+    full cached context), attending over ``history + 1`` keys through
+    the ragged kernel's offset prefetch.
+
+Mechanically a decode segment is a length-1 re-prefill, so the packed
+executor serves every mix with the SAME compiled shape — prefill and
+decode share one dispatch, which is the continuous-batching point.
+
+This module is pure numpy (no JAX) so the assembly invariants — bucket
+never exceeded, segments never split, per-session token order kept,
+``cu_seqlens`` consistent — are property-testable in microseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.buckets import fit_decodes  # noqa: F401
+# fit_decodes lives in core.buckets (pure ladder arithmetic shared with
+# the JAX-free simulator) and is re-exported here for the serving side
+
+SEGMENT_KINDS = ("prefill", "chunk", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    """One sequence's slice of the mixed stream."""
+    session: int
+    tokens: np.ndarray        # (len,) int32 new tokens (decode: length 1)
+    history: int              # cached KV tokens before this step
+    kind: str = "prefill"     # prefill | chunk | decode
+
+    def __post_init__(self):
+        assert self.kind in SEGMENT_KINDS, self.kind
+        assert len(self.tokens) >= 1, "empty segment"
+        if self.kind == "decode":
+            assert len(self.tokens) == 1, "decode segments carry ONE token"
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class MixedStream:
+    """The assembled flat stream — exactly the packed executor's inputs.
+
+    Row layout per DESIGN.md §3: sequence i owns rows
+    [cu_seqlens[i], cu_seqlens[i+1]); rows past cu_seqlens[n_seqs] are
+    bucket tail (parked positions, duplicate cache row).  All arrays are
+    statically shaped on (bucket, b_max) so every mix of segment kinds
+    reuses one compiled executable.
+    """
+    tokens: np.ndarray        # (bucket,) int32
+    positions: np.ndarray     # (bucket,) int32 absolute positions
+    seg_ids: np.ndarray       # (bucket,) int32 local cache-row index
+    cu_seqlens: np.ndarray    # (b_max + 1,) int32
+    q_offsets: np.ndarray     # (b_max,) int32 history offsets
+    kv_lengths: np.ndarray    # (b_max,) int32 valid cache entries
+    last_idx: np.ndarray      # (b_max,) int32 flat index of final token
+    segments: List[SegmentSpec]
+    bucket: int
+
+    @property
+    def n_seqs(self) -> int:
+        return len(self.segments)
+
+    @property
+    def total_tokens(self) -> int:
+        return int(sum(s.length for s in self.segments))
+
+    @property
+    def decode_tokens(self) -> int:
+        return sum(s.length for s in self.segments if s.kind == "decode")
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(s.length for s in self.segments if s.kind != "decode")
+
+    @property
+    def tail_tokens(self) -> int:
+        return self.bucket - self.total_tokens
+
+
+def assemble_mixed_stream(segments: Sequence[SegmentSpec], bucket: int,
+                          b_max: int, park_position: int,
+                          pad_token: int = 0) -> MixedStream:
+    """Concatenate segments into one statically shaped packed stream.
+
+    park_position: the arena's junk KV slot (max_len - 1) — tail rows
+    and the dummy-sequence rows write there so padding never corrupts a
+    live cache entry.
+    """
+    n = len(segments)
+    assert 0 < n <= b_max, (n, b_max)
+    total = sum(s.length for s in segments)
+    assert total <= bucket, (total, bucket)
+
+    tokens = np.full(bucket, pad_token, np.int32)
+    positions = np.full(bucket, park_position, np.int32)
+    # tail rows write their junk KV into a DUPLICATE cache row (index n
+    # when a dummy row exists, else row 0) at the parked position
+    seg_ids = np.full(bucket, n if n < b_max else 0, np.int32)
+    cu = np.full(b_max + 1, total, np.int32)
+    cu[0] = 0
+    off = np.zeros(b_max, np.int32)
+    kvl = np.zeros(b_max, np.int32)
+    last_idx = np.zeros(b_max, np.int32)
+
+    o = 0
+    for i, seg in enumerate(segments):
+        l = seg.length
+        tokens[o:o + l] = seg.tokens
+        positions[o:o + l] = seg.history + np.arange(l)
+        seg_ids[o:o + l] = i
+        cu[i + 1] = o + l
+        off[i] = seg.history
+        kvl[i] = seg.history + l
+        last_idx[i] = o + l - 1
+        o += l
+
+    return MixedStream(tokens=tokens, positions=positions, seg_ids=seg_ids,
+                       cu_seqlens=cu, q_offsets=off, kv_lengths=kvl,
+                       last_idx=last_idx, segments=list(segments),
+                       bucket=bucket)
+
+
+__all__ = ["SegmentSpec", "MixedStream", "assemble_mixed_stream",
+           "fit_decodes", "SEGMENT_KINDS"]

@@ -56,7 +56,35 @@ class CostModel:
                                  self.weight_read + self.mem_time(l, h))
 
     # ------------------------------------------------------------- batch
+    def packed_batch_time(self, batch: Batch) -> float:
+        """Token-bucket pricing for packed / mixed steps.
+
+        A packed batch executes RAW per-request tokens (no per-request
+        padding) plus the bucket tail — tail rows run the linear stack
+        and a junk KV write but no useful attention, so they cost
+        β + w_tok each.  Fused decode rows (continuous batching) ride
+        the SAME dispatch: they share the per-step weight read and add
+        only their linear work plus the per-sequence decode overhead —
+        the saving vs. a separate decode step is exactly one weight
+        read + launch.  The stream runs as ONE fused kernel, so the
+        roofline max() overlap survives even for heterogeneous mixes
+        (unlike co-batched separate kernels, §2.2)."""
+        fixed = self.graph_launch + self.graph_lookup
+        comp = sum(self.comp_time(r.new_tokens, r.history_tokens)
+                   for r in batch.requests)
+        mem = self.weight_read + sum(
+            self.mem_time(r.new_tokens, r.history_tokens)
+            for r in batch.requests)
+        tail = max(0, (batch.token_bucket or 0) - batch.stream_tokens)
+        comp += self.beta * tail
+        mem += self.w_tok * tail
+        fused = batch.decode_tokens * (self.beta + self.w_tok
+                                       + self.decode_per_seq)
+        return fixed + max(comp, mem) + fused
+
     def batch_time(self, batch: Batch, long_threshold: float = 256.0) -> float:
+        if batch.is_packed:
+            return self.packed_batch_time(batch)
         if batch.uses_graph:
             fixed = self.graph_launch + self.graph_lookup
             pad = batch.bucket_len
@@ -79,11 +107,18 @@ class CostModel:
 
     def chunk_time(self, w: ChunkWork) -> float:
         """One long-prefill chunk: C_l new tokens on top of
-        (done + history) context."""
+        (done + history) context.  A chunk riding a captured token-bucket
+        shape (uses_graph) pays the graph launch, not the eager one;
+        fused decode rows share the step's weight read — same pricing as
+        :meth:`packed_batch_time`'s fusion term."""
         h = w.done_tokens + w.req.history_tokens
-        return self.launch + max(
+        fixed = self.graph_launch + self.graph_lookup if w.uses_graph \
+            else self.launch
+        fused = w.decode_tokens * (self.beta + self.w_tok
+                                   + self.decode_per_seq)
+        return fixed + max(
             self.comp_time(w.chunk_tokens, h),
-            self.weight_read + self.mem_time(w.chunk_tokens, h))
+            self.weight_read + self.mem_time(w.chunk_tokens, h)) + fused
 
     def decode_step_time(self, n_active: int) -> float:
         base = self.decode_step if self.decode_step is not None \

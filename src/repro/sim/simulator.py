@@ -127,6 +127,10 @@ class ClusterSim:
         if inst.busy or not inst.alive:
             return
         policy = self.shared if self.shared is not None else inst.policy
+        if self.cfg.mode == "mix":
+            # continuous batching: the policy reserves packed-stream rows
+            # for the decode backlog (and shrinks the AWD window)
+            policy.note_decode_backlog(len(inst.decode_sessions))
         work, wake = policy.next_work(self.now)
         if work is None:
             # MIX: run a decode-only step if sessions are active
@@ -139,12 +143,45 @@ class ClusterSim:
             elif wake is not None and wake > self.now:
                 self._push(wake, "try", inst.idx)
             return
+        if self.cfg.mode == "mix":
+            # clamp the reserved fusion room to the actual backlog before
+            # pricing — packed_batch_time / chunk_time charge each fused
+            # decode row.  Chunks fuse too (the serve loop routes C_l
+            # chunks through the packed stream) when the policy is packed.
+            if isinstance(work, Batch) and work.is_packed:
+                work.decode_tokens = min(work.decode_tokens,
+                                         len(inst.decode_sessions))
+            elif isinstance(work, ChunkWork):
+                ladder = getattr(getattr(policy, "awd", None), "ladder", None)
+                if ladder is not None:
+                    # mirror the real loop exactly: fit_decodes respects
+                    # BOTH the row room and the token-bucket room (an
+                    # off-ladder chunk fuses nothing and runs dense)
+                    from repro.core.buckets import fit_decodes
+                    n_fit, bucket = fit_decodes(
+                        work.chunk_tokens, 1, len(inst.decode_sessions),
+                        ladder)
+                    work.decode_tokens = n_fit if bucket is not None else 0
+        if isinstance(work, ChunkWork):
+            # packed engines route every on-ladder C_l chunk through a
+            # captured token-bucket shape (engine.prefill_long) — price
+            # the graph launch in every mode, not just MIX
+            ladder = getattr(getattr(policy, "awd", None), "ladder", None)
+            work.uses_graph = (ladder is not None and
+                               ladder.bucket_for(work.chunk_tokens)
+                               is not None)
         service = self.cost.work_time(work) * inst.speed
         if self.cfg.mode == "mix" and inst.decode_sessions:
-            # continuous batching: the step piggybacks a decode token for
-            # every active session
-            service += self.cost.decode_step_time(len(inst.decode_sessions)) \
-                * inst.speed
+            # decode tokens fused into a packed step already paid inside
+            # the work's pricing (they share the weight read); sessions
+            # beyond the fusion room pay the separate alternating step
+            fused = getattr(work, "decode_tokens", 0) \
+                if isinstance(work, (Batch, ChunkWork)) else 0
+            if isinstance(work, Batch) and not work.is_packed:
+                fused = 0
+            leftover = len(inst.decode_sessions) - fused
+            if leftover > 0:
+                service += self.cost.decode_step_time(leftover) * inst.speed
             inst.decode_sessions = [s - 1 for s in inst.decode_sessions if s > 1]
         if isinstance(work, Batch):
             for r in work.requests:

@@ -9,6 +9,14 @@ try:  # hypothesis is optional — plain pytest runs without it
     from hypothesis import settings  # noqa: E402
 except ImportError:
     settings = None
+    # ... except in CI, where a missing install would silently skip every
+    # property suite (batch assembly, AWD, queueing invariants).  Fail
+    # loudly instead: ci.yml pins `hypothesis` in the install step.
+    if os.environ.get("CI"):
+        raise RuntimeError(
+            "hypothesis is not installed but CI=1 — the property-based "
+            "suites would silently skip; add `hypothesis` to the CI "
+            "install (see .github/workflows/ci.yml)")
 else:
     settings.register_profile("ci", max_examples=25, deadline=None)
     settings.load_profile("ci")

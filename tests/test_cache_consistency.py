@@ -1,6 +1,8 @@
 """System invariant: staged serving (prefill → re-prefill → decode)
 produces exactly the same logits as one full forward pass — for every
-stateful architecture family, including the rolling SWA cache."""
+stateful architecture family, including the rolling SWA cache — and the
+same invariant under INTERLEAVED continuous-batching schedules (decode
+→ mid-conversation re-prefill → decode, all in mixed packed steps)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,7 @@ import pytest
 
 from repro.configs import ASSIGNED, get_smoke
 from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
 
 KEY = jax.random.key(1)
 STATEFUL = [a for a in ASSIGNED if get_smoke(a).causal]
@@ -80,3 +83,76 @@ def test_ragged_batch_positions():
     ref, _, _ = tr.forward(params, cfg, tokens=new[1:2])
     np.testing.assert_allclose(np.asarray(lo[1]), np.asarray(ref[0]),
                                atol=2e-3, rtol=1e-3)
+
+
+def test_interleaved_mixed_steps_match_dense_oracle():
+    """Cache consistency under interleaved continuous batching: a
+    session that decodes, gets RE-prefilled mid-conversation (next user
+    turn), and decodes again — every step a mixed packed step sharing
+    the stream with other sessions' work — must reproduce the dense
+    oracle's transcript and logits token for token."""
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    rng = np.random.default_rng(31)
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                           packed=True,
+                                           token_buckets=(64, 128, 256)))
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+
+    turn1 = rng.integers(0, cfg.vocab_size, 11)
+    turn2 = rng.integers(0, cfg.vocab_size, 8)
+    noise = [rng.integers(0, cfg.vocab_size, l) for l in (7, 23, 5, 9, 12)]
+
+    # --- mixed engine: session 0 interleaved with sessions 1.. traffic
+    transcript = []
+    r = eng.step_mixed([(0, turn1), (1, noise[0])], [])
+    cur = r.tokens[0]
+    transcript.append(cur)
+    for i in (1, 2):                                   # decode phase 1
+        r = eng.step_mixed([(1 + i, noise[i])], [(0, cur)])
+        cur = r.tokens[0]
+        transcript.append(cur)
+    # mid-conversation re-prefill (turn 2) fused with a decode of s3
+    r = eng.step_mixed([(0, turn2)], [(3, r.tokens[3])])
+    cur = r.tokens[0]
+    transcript.append(cur)
+    for i in (3, 4):                                   # decode phase 2
+        r = eng.step_mixed([(4 + i - 3, noise[i])], [(0, cur)])
+        cur = r.tokens[0]
+        transcript.append(cur)
+
+    # --- dense oracle: same schedule for session 0, sequential path
+    expect = []
+    tok = ora.prefill_batch([0], [turn1])[0]
+    expect.append(tok)
+    for _ in range(2):
+        tok = ora.decode_batch([0], [tok])[0][0]
+        expect.append(tok)
+    tok = ora.prefill_batch([0], [turn2])[0]
+    expect.append(tok)
+    for _ in range(2):
+        tok = ora.decode_batch([0], [tok])[0][0]
+        expect.append(tok)
+
+    assert transcript == expect
+    np.testing.assert_allclose(eng.last_logits[0], ora.last_logits[0],
+                               atol=1e-5, rtol=0)
+    # full-context greedy agreement: the mixed-path transcript equals
+    # greedy decoding over the flat concatenated conversation
+    ctx = list(turn1)
+    for i, t in enumerate(transcript):
+        lo, _, _ = tr.forward(params, cfg,
+                              tokens=jnp.asarray(ctx, jnp.int32)[None])
+        assert int(jnp.argmax(lo[0, -1])) == t, i
+        ctx.append(t)
+        if i == 2:                   # turn 2 lands after the 3rd token
+            ctx.extend(turn2)
+            ctx.pop(-len(turn2) - 1)  # last decode token replaced by turn
+    n = eng.arena.length(0)
+    assert n == ora.arena.length(0)
+    sm, so = eng.arena.slot_of(0), ora.arena.slot_of(0)
+    for cm, co in zip(eng.arena.arena, ora.arena.arena):
+        for part in ("k", "v"):
+            np.testing.assert_allclose(np.asarray(cm[part][:, sm, :n]),
+                                       np.asarray(co[part][:, so, :n]),
+                                       atol=1e-5, rtol=0)

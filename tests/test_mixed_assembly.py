@@ -1,0 +1,133 @@
+"""Property-based invariants of mixed-batch assembly (continuous
+batching): for ANY request mix, the builder never exceeds the token
+bucket, never splits a prefill segment, preserves per-session token
+order, and emits consistent ``cu_seqlens``.  Runs under hypothesis —
+CI installs it; locally the module skips when absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st
+
+from repro.core.awd import AWDConfig, AWDScheduler
+from repro.core.buckets import BucketGrid, TokenBucketLadder
+from repro.core.request import Request
+from repro.serving.packing import (SegmentSpec, assemble_mixed_stream,
+                                   fit_decodes)
+
+LADDER = TokenBucketLadder((64, 128, 256, 512), max_seqs=16)
+PARK = 127
+
+
+# ---------------------------------------------------------- strategies
+
+segment_lists = st.lists(
+    st.tuples(st.integers(1, 40),          # segment length
+              st.integers(0, 60),          # history offset
+              st.sampled_from(["prefill", "chunk", "decode"])),
+    min_size=1, max_size=12)
+
+
+def to_segments(raw):
+    segs = []
+    for i, (l, h, kind) in enumerate(raw):
+        if kind == "decode":
+            l = 1
+        toks = np.arange(1000 * i, 1000 * i + l, dtype=np.int32) % 251
+        segs.append(SegmentSpec(session=i, tokens=toks, history=h,
+                                kind=kind))
+    return segs
+
+
+# ------------------------------------------------------------ assembly
+
+
+@given(raw=segment_lists)
+def test_stream_invariants(raw):
+    segs = to_segments(raw)
+    total = sum(s.length for s in segs)
+    bucket = LADDER.bucket_for(total)
+    if bucket is None:
+        return                              # off-ladder mixes never assemble
+    b_max = LADDER.max_seqs
+    stream = assemble_mixed_stream(segs, bucket, b_max, PARK)
+    n = len(segs)
+    cu = stream.cu_seqlens
+
+    # bucket never exceeded; all arrays statically shaped on (bucket, b_max)
+    assert stream.total_tokens == total <= bucket
+    assert stream.tokens.shape == (bucket,)
+    assert cu.shape == (b_max + 1,)
+
+    # cu_seqlens: 0-based, strictly increasing over real segments,
+    # cu[n] == T, constant (empty padding sequences) afterwards
+    assert cu[0] == 0
+    assert all(cu[i] < cu[i + 1] for i in range(n))
+    assert cu[n] == total
+    assert all(cu[i] == total for i in range(n, b_max + 1))
+
+    for i, seg in enumerate(segs):
+        lo, hi = cu[i], cu[i + 1]
+        # segments are never split: contiguous rows, exact token order
+        np.testing.assert_array_equal(stream.tokens[lo:hi], seg.tokens)
+        np.testing.assert_array_equal(stream.seg_ids[lo:hi], i)
+        # positions resume at the history offset (re-prefill / decode)
+        np.testing.assert_array_equal(stream.positions[lo:hi],
+                                      seg.history + np.arange(hi - lo))
+        assert stream.q_offsets[i] == seg.history
+        assert stream.kv_lengths[i] == seg.history + seg.length
+        assert stream.last_idx[i] == hi - 1
+    # bucket tail: parked positions, no live sequence id
+    np.testing.assert_array_equal(stream.positions[total:], PARK)
+    assert stream.decode_tokens == sum(1 for s in segs if s.kind == "decode")
+    assert stream.prefill_tokens + stream.decode_tokens == total
+
+
+@given(prefill=st.integers(0, 600), n_p=st.integers(0, 16),
+       n_d=st.integers(0, 40))
+def test_fit_decodes_bounds(prefill, n_p, n_d):
+    n_fit, bucket = fit_decodes(prefill, n_p, n_d, LADDER)
+    assert 0 <= n_fit <= n_d
+    assert n_p + n_fit <= max(LADDER.max_seqs, n_p)
+    if bucket is not None:
+        assert prefill + n_fit <= bucket
+        assert bucket in LADDER.buckets
+    elif prefill + min(n_d, LADDER.max_seqs - n_p) > 0:
+        # None only when even the un-fused total is off-ladder / roomless
+        assert prefill > LADDER.max_tokens or prefill + n_fit == 0
+
+
+# ----------------------------------------------------- AWD mixed emit
+
+
+@given(lengths=st.lists(st.integers(1, 80), min_size=1, max_size=30),
+       backlog=st.integers(0, 24))
+def test_awd_mixed_batch_respects_bucket(lengths, backlog):
+    """The emitted packed batch + its reserved decode rows always fit
+    the token bucket and the cache-row budget."""
+    awd = AWDScheduler(BucketGrid(), AWDConfig(
+        packed=True, token_buckets=LADDER.buckets, packed_max_seqs=16))
+    awd.note_decode_backlog(backlog)
+    q = [Request(new_tokens=l, arrival=0.0) for l in lengths]
+    batch, _ = awd.decide(list(q), now=10.0, force=True)
+    if batch is None or not batch.is_packed:
+        return
+    assert batch.tokens + batch.decode_tokens <= batch.token_bucket
+    assert len(batch.requests) + batch.decode_tokens <= LADDER.max_seqs
+    assert batch.decode_tokens <= backlog
+    # FCFS order preserved — a packed batch never reorders arrivals
+    arr = [r.arrival for r in batch.requests]
+    assert arr == sorted(arr)
+
+
+@given(backlog=st.integers(0, 32))
+def test_awd_window_shrinks_with_decode_backlog(backlog):
+    awd = AWDScheduler(BucketGrid(), AWDConfig(
+        packed=True, w_min=0.0, w_max=1.0))
+    q = [Request(new_tokens=8, arrival=0.0, deadline=100.0)]
+    base = awd.window(q, 0.0, 1)
+    awd.note_decode_backlog(backlog)
+    shrunk = awd.window(q, 0.0, 1)
+    assert shrunk <= base
+    if backlog:
+        assert shrunk < base

@@ -1,0 +1,203 @@
+"""Continuous-batching parity: a mixed packed step (short prefills +
+long-prefill chunk + fused decode segments in ONE dispatch) must produce
+the same logits and KV caches as running prefill_batch / prefill_long /
+decode_batch sequentially on the dense path — across GQA/MHA configs,
+re-prefill history offsets, and both ragged-attention backends (XLA
+oracle and the Pallas kernel in interpret mode)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels import ops as kernel_ops
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(7)
+TOL = dict(atol=1e-5, rtol=0)
+TOL_INTERPRET = dict(atol=2e-5, rtol=0)
+
+# GQA with qk_norm, GQA with qkv bias, and plain MHA
+CONFIGS = {
+    "qwen3-4b": lambda: get_smoke("qwen3-4b"),
+    "qwen2.5-14b": lambda: get_smoke("qwen2.5-14b"),
+    "mha": lambda: get_smoke("qwen3-4b").replace(name="mha-smoke",
+                                                 num_kv_heads=4),
+}
+
+
+def build(cfg, packed: bool):
+    params, _ = tr.init_params(cfg, KEY)
+    return params, Engine(cfg, params, EngineConfig(
+        num_slots=8, max_len=128, chunk_tokens=32, packed=packed,
+        token_buckets=(64, 128, 256)))
+
+
+def pair(cfg):
+    """(mixed engine, dense oracle engine) sharing one param set."""
+    params, mixed = build(cfg, packed=True)
+    oracle = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                              chunk_tokens=32))
+    return mixed, oracle
+
+
+def assert_kv_parity(eng: Engine, ora: Engine, sessions, tol=TOL):
+    """Each session's valid cache prefix must match across engines."""
+    for s in sessions:
+        n = eng.arena.length(s)
+        assert n == ora.arena.length(s), (s, n, ora.arena.length(s))
+        sm, so = eng.arena.slot_of(s), ora.arena.slot_of(s)
+        for cm, co in zip(eng.arena.arena, ora.arena.arena):
+            for part in ("k", "v"):
+                np.testing.assert_allclose(
+                    np.asarray(cm[part][:, sm, :n]),
+                    np.asarray(co[part][:, so, :n]),
+                    err_msg=f"session {s} cache {part}", **tol)
+
+
+def stage_histories(engines, cfg, rng):
+    """Give sessions 2/3/4 cached history + a sampled token (decode
+    state) and session 5 its first long-prefill chunk — identically on
+    every engine via the dense path."""
+    hist_lens = {2: 9, 3: 5, 4: 14}
+    seqs = [rng.integers(0, cfg.vocab_size, l) for l in hist_lens.values()]
+    long_toks = rng.integers(0, cfg.vocab_size, 50)
+    firsts = None
+    for e in engines:
+        firsts = e.prefill_batch(list(hist_lens), seqs)
+        e.prefill_batch([5], [long_toks[:32]])
+    return firsts, long_toks
+
+
+@pytest.mark.parametrize("arch", list(CONFIGS))
+def test_mixed_step_parity(arch):
+    """2 prefills (one a re-prefill) + 3 decodes + 1 long chunk, fused
+    into one packed dispatch, vs the sequential dense path."""
+    cfg = CONFIGS[arch]()
+    rng = np.random.default_rng(11)
+    eng, ora = pair(cfg)
+    firsts, long_toks = stage_histories((eng, ora), cfg, rng)
+    # session 0 is a RE-prefill: 6 tokens of history before the step
+    pre0 = rng.integers(0, cfg.vocab_size, 6)
+    for e in (eng, ora):
+        e.prefill_batch([0], [pre0])
+
+    t_a = rng.integers(0, cfg.vocab_size, 7)
+    t_b = rng.integers(0, cfg.vocab_size, 12)
+    chunk2 = long_toks[32:]
+    decodes = [(s, firsts[s]) for s in (2, 3, 4)]
+
+    before = eng.packed_executor.dispatches
+    res = eng.step_mixed([(0, t_a), (1, t_b), (5, chunk2)], decodes)
+    assert res.fused and res.bucket == 64
+    assert res.n_prefill == 3 and res.n_decode == 3
+    assert eng.packed_executor.dispatches == before + 1   # ONE dispatch
+    assert eng.packed_executor.decode_tokens_fused == 3
+
+    expect = {}
+    expect.update(ora.prefill_batch([0], [t_a]))
+    expect.update(ora.prefill_batch([1], [t_b]))
+    expect.update(ora.prefill_batch([5], [chunk2]))
+    dec = ora.decode_batch([2, 3, 4], [firsts[s] for s in (2, 3, 4)])
+    expect.update({s: t[0] for s, t in dec.items()})
+
+    assert res.tokens == expect
+    for s in range(6):
+        np.testing.assert_allclose(eng.last_logits[s], ora.last_logits[s],
+                                   err_msg=f"session {s} logits", **TOL)
+    assert_kv_parity(eng, ora, range(6))
+
+
+def test_mixed_step_parity_interpret_mode():
+    """The same parity holds with the ragged Pallas kernel in interpret
+    mode — decode-length-1 segments attend over offset + 1 keys."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(13)
+    kernel_ops.set_backend("pallas")
+    try:
+        eng, ora = pair(cfg)
+        firsts, long_toks = stage_histories((eng, ora), cfg, rng)
+        t_a = rng.integers(0, cfg.vocab_size, 7)
+        chunk2 = long_toks[32:]
+        decodes = [(s, firsts[s]) for s in (2, 3, 4)]
+        res = eng.step_mixed([(0, t_a), (5, chunk2)], decodes)
+        assert res.fused and res.n_decode == 3
+
+        expect = {}
+        expect.update(ora.prefill_batch([0], [t_a]))
+        expect.update(ora.prefill_batch([5], [chunk2]))
+        dec = ora.decode_batch([2, 3, 4], [firsts[s] for s in (2, 3, 4)])
+        expect.update({s: t[0] for s, t in dec.items()})
+        assert res.tokens == expect
+        for s in (0, 2, 3, 4, 5):
+            np.testing.assert_allclose(eng.last_logits[s],
+                                       ora.last_logits[s],
+                                       err_msg=f"session {s} logits",
+                                       **TOL_INTERPRET)
+        assert_kv_parity(eng, ora, (0, 2, 3, 4, 5), tol=TOL_INTERPRET)
+    finally:
+        kernel_ops.set_backend(None)
+
+
+def test_decode_only_mixed_step():
+    """A tick with no prefill work still fuses the decode backlog into
+    one packed dispatch, matching the dense decode step."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(17)
+    eng, ora = pair(cfg)
+    firsts, _ = stage_histories((eng, ora), cfg, rng)
+    decodes = [(s, firsts[s]) for s in (2, 3, 4)]
+    res = eng.step_mixed([], decodes)
+    assert res.fused and res.n_prefill == 0 and res.n_decode == 3
+    dec = ora.decode_batch([2, 3, 4], [firsts[s] for s in (2, 3, 4)])
+    assert res.tokens == {s: t[0] for s, t in dec.items()}
+    for s in (2, 3, 4):
+        np.testing.assert_allclose(eng.last_logits[s], ora.last_logits[s],
+                                   **TOL)
+    assert_kv_parity(eng, ora, (2, 3, 4))
+
+
+def test_mixed_step_fallback_paths():
+    """Off-ladder totals and over-depth mixes fall back to the
+    alternating dense path — same results, just more dispatches."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(19)
+    params, eng = build(cfg, packed=True)
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    firsts, _ = stage_histories((eng, ora), cfg, rng)
+    # 3 × 90 prefill tokens bust the (64, 128, 256) ladder
+    bigs = [rng.integers(0, cfg.vocab_size, 90) for _ in range(3)]
+    res = eng.step_mixed(list(zip((0, 1, 6), bigs)), [(2, firsts[2])],
+                         token_bucket=None)
+    assert not res.fused
+    expect = dict(ora.prefill_batch([0, 1, 6], bigs))
+    dec = ora.decode_batch([2], [firsts[2]])
+    expect[2] = dec[2][0]
+    assert res.tokens == expect
+    assert_kv_parity(eng, ora, (0, 1, 6, 2))
+
+
+def test_mixed_step_rejects_duplicate_session():
+    cfg = CONFIGS["qwen3-4b"]()
+    _, eng = build(cfg, packed=True)
+    rng = np.random.default_rng(23)
+    t = rng.integers(0, cfg.vocab_size, 5)
+    eng.prefill_packed([0], [t])
+    with pytest.raises(AssertionError):
+        eng.step_mixed([(0, t)], [(0, 1)])
+
+
+def test_long_chunks_ride_token_buckets():
+    """prefill_long routes every C_l chunk through the packed stream:
+    the packed executor (not the dense grid) serves the chunks."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(29)
+    params, eng = build(cfg, packed=True)
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                           chunk_tokens=32))
+    long_toks = rng.integers(0, cfg.vocab_size, 80)
+    tok = eng.prefill_long(0, long_toks)
+    assert eng.packed_executor.dispatches == 3          # ceil(80 / 32)
+    assert eng.executor.dispatches == 0                 # dense untouched
+    assert tok == ora.prefill_long(0, long_toks)
+    assert_kv_parity(eng, ora, (0,))

@@ -152,6 +152,22 @@ def test_awd_packed_emits_token_buckets():
     assert all(r.used_graph and r.padded_to is None for r in batch.requests)
 
 
+def test_awd_mixed_emit_shrinks_fusion_to_fit_ladder():
+    """A near-full batch plus a decode backlog must fuse FEWER decodes
+    rather than falling off the packed path entirely: 126 prefill
+    tokens + backlog 4 busts the 128 bucket, so exactly 2 fuse."""
+    awd = AWDScheduler(BucketGrid(), AWDConfig(packed=True,
+                                               token_buckets=(64, 128),
+                                               packed_max_seqs=16))
+    awd.note_decode_backlog(4)
+    batch, _ = awd.decide([Request(new_tokens=126, arrival=0.0)], now=1.0,
+                          force=True)
+    assert batch is not None and batch.is_packed
+    assert batch.token_bucket == 128
+    assert batch.decode_tokens == 2
+    assert batch.tokens + batch.decode_tokens <= batch.token_bucket
+
+
 def test_awd_packed_profitability_guard():
     """A batch too small for the token bucket flunks max_pad_ratio and
     falls back to the dense (L, B) grid — a captured shape still beats

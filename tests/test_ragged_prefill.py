@@ -59,6 +59,39 @@ def test_ragged_matches_dense(lens, hq, hkv, d, s):
     check_against_dense(out, q, k, v, cu, off, kvl)
 
 
+def test_ragged_decode_segments():
+    """Continuous batching: length-1 decode segments with large history
+    offsets attend over exactly offset + 1 keys — mixed freely with
+    prefill segments in one stream."""
+    lens = [1, 1, 1]
+    hists = [97, 0, 41]                       # deep, fresh, mid histories
+    q, k, v, cu, off, kvl = make_case(lens, hists, 8, 2, 16, 128, seed=21)
+    out = run_kernel(q, k, v, cu, off, kvl, block_q=16, block_k=32)
+    check_against_dense(out, q, k, v, cu, off, kvl)
+    # poisoning keys past each row's offset + 1 must not change anything:
+    # the causal frontier caps the kv scan at the decode row's position
+    k2, v2 = k.copy(), v.copy()
+    for i, h in enumerate(hists):
+        k2[i, h + 1:] = 1e3
+        v2[i, h + 1:] = -1e3
+    out2 = run_kernel(q, k2, v2, cu, off, kvl, block_q=16, block_k=32)
+    np.testing.assert_allclose(out2, out, **TOL)
+
+
+def test_ragged_mixed_prefill_and_decode_segments():
+    """The mixed-step stream shape: short prefills, a re-prefill chunk,
+    and decode rows side by side in one ragged call."""
+    lens = [7, 1, 23, 1, 12, 1]
+    hists = [0, 55, 0, 9, 30, 101]            # decode rows at 1-lengths
+    q, k, v, cu, off, kvl = make_case(lens, hists, 8, 4, 16, 128, seed=23)
+    out = run_kernel(q, k, v, cu, off, kvl, block_q=32, block_k=64)
+    check_against_dense(out, q, k, v, cu, off, kvl)
+    ref = np.asarray(ref_ragged_prefill(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(cu),
+        jnp.asarray(off), jnp.asarray(kvl)))
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
 def test_ragged_reprefill_offsets():
     """Re-prefill: queries start at history offsets inside the cache."""
     lens, hists = [5, 17, 9], [12, 0, 70]

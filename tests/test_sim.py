@@ -1,9 +1,11 @@
 """End-to-end simulator behaviour: the paper's claims as tests, plus
-fault-tolerance (failure re-routing, straggler migration)."""
+fault-tolerance (failure re-routing, straggler migration) and the
+token-bucket cost model for packed / mixed batches."""
 import pytest
 
 from repro.core import (H200_QWEN32B, ControllerConfig, PressureController,
                         Variant, make_policy)
+from repro.core.request import Batch, Request
 from repro.core.scheduler import PoolPolicy
 from repro.core.slo import percentile
 from repro.sim import (ClusterSim, H200_32B, SimConfig, closed_loop_clients,
@@ -125,6 +127,40 @@ def test_workload_matches_paper_fig2():
     stats = length_stats(reqs)
     assert stats["first_lt256"] == pytest.approx(0.63, abs=0.08)
     assert stats["later_lt256"] == pytest.approx(0.81, abs=0.08)
+
+
+def test_costmodel_packed_prices_bucket_tokens():
+    """Packed-vs-grid policy comparisons must price the packed path by
+    its REAL token count + bucket tail, not the padded (L, B) shape: the
+    acceptance mix (7, 23, 61, 12) pads to 256 tokens on the dense
+    (64, 4) graph but runs 103 real + 25 tail tokens in the 128 bucket."""
+    reqs = [Request(new_tokens=l) for l in (7, 23, 61, 12)]
+    packed = Batch(requests=list(reqs), token_bucket=128, uses_graph=True)
+    dense = Batch(requests=list(reqs), bucket_len=64, bucket_depth=4,
+                  uses_graph=True)
+    assert H200_32B.batch_time(packed) < H200_32B.batch_time(dense)
+    # the bucket tail IS priced: the same batch in an oversized bucket
+    # costs more (linear-only work on the tail rows)
+    oversized = Batch(requests=list(reqs), token_bucket=512, uses_graph=True)
+    assert H200_32B.batch_time(oversized) > H200_32B.batch_time(packed)
+    # and pricing tracks real tokens, not depth × max-length
+    assert H200_32B.packed_batch_time(packed) == \
+        H200_32B.batch_time(packed)
+
+
+def test_costmodel_fused_decode_shares_weight_read():
+    """A mixed step's fused decode rows must cost LESS than a separate
+    decode step — they ride the prefill dispatch's weight read.  That
+    delta is the continuous-batching win the simulator prices."""
+    reqs = [Request(new_tokens=l) for l in (7, 23, 12)]
+    plain = Batch(requests=list(reqs), token_bucket=64, uses_graph=True)
+    mixed = Batch(requests=list(reqs), token_bucket=64, uses_graph=True,
+                  decode_tokens=4, kind="mixed")
+    extra = H200_32B.batch_time(mixed) - H200_32B.batch_time(plain)
+    assert 0 < extra < H200_32B.decode_step_time(4)
+    # alternating = packed prefill + separate decode step; fused beats it
+    alternating = H200_32B.batch_time(plain) + H200_32B.decode_step_time(4)
+    assert H200_32B.batch_time(mixed) < alternating
 
 
 def test_mix_mode_reduces_prefill_throughput():

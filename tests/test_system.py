@@ -64,6 +64,87 @@ def test_engine_measured_and_fit(served):
     assert engine.fit_boundary() is not None
 
 
+def test_unified_tick_continuous_batching():
+    """run_until_idle drives the unified mixed tick: sessions submitted
+    with decode budgets keep generating inside the SAME dispatches that
+    serve new prefills (and long chunks), decode tokens actually fuse,
+    and every transcript matches greedy decoding over the flat context."""
+    import jax.numpy as jnp
+
+    from repro.core.awd import AWDConfig
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=8, max_len=160, chunk_tokens=16, packed=True,
+        token_buckets=(64, 128)))
+    policy = make_policy(
+        Variant("pla_full"), H200_QWEN32B, threshold=24, chunk_tokens=16,
+        awd_cfg=AWDConfig(packed=True, token_buckets=(64, 128),
+                          packed_max_seqs=8))
+    loop = ServeLoop(engine, policy, slo_ttft=30.0)
+    rng = np.random.default_rng(0)
+    prompts = {}
+    for s in range(4):
+        n = 40 if s == 3 else int(rng.integers(4, 16))   # one long
+        prompts[s] = rng.integers(0, cfg.vocab_size, n)
+        loop.submit(s, prompts[s], decode_tokens=6)
+    loop.run_until_idle(max_wall=180.0)
+
+    assert loop._outstanding == 0 and not loop.active_decodes
+    assert all(len(loop.generated[s]) == 7 for s in range(4))  # first + 6
+    assert loop.tpot_samples, "no TPOT measured"
+    st = engine.stats()
+    assert st["decode_tokens_fused"] > 0, "nothing fused"
+    assert st["mixed_steps"] > 0
+
+    def greedy(seq):
+        lo, _, _ = tr.forward(params, cfg,
+                              tokens=jnp.asarray(seq, jnp.int32)[None])
+        return int(jnp.argmax(lo[0, -1]))
+
+    for s in range(4):
+        ctx = list(prompts[s])
+        for tok in loop.generated[s]:
+            assert greedy(ctx) == tok, s
+            ctx.append(tok)
+
+
+def test_two_queued_turns_same_session_serialize():
+    """Two turns of ONE session submitted back-to-back must never share
+    a batch (the second depends on the first's KV writes): the batcher
+    defers the later turn and both complete with a correct transcript."""
+    import jax.numpy as jnp
+
+    from repro.core.awd import AWDConfig
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=4, max_len=64, packed=True, token_buckets=(64, 128)))
+    policy = make_policy(
+        Variant("pla_full"), H200_QWEN32B, threshold=32,
+        awd_cfg=AWDConfig(packed=True, token_buckets=(64, 128),
+                          packed_max_seqs=4))
+    loop = ServeLoop(engine, policy, slo_ttft=30.0)
+    rng = np.random.default_rng(3)
+    t1 = rng.integers(0, cfg.vocab_size, 9)
+    t2 = rng.integers(0, cfg.vocab_size, 6)
+    loop.submit(0, t1)
+    loop.submit(0, t2)          # queued before turn 1 dispatches
+    loop.run_until_idle(max_wall=120.0)
+    assert loop._outstanding == 0
+    assert engine.history(0) == 15
+
+    def greedy(seq):
+        lo, _, _ = tr.forward(params, cfg,
+                              tokens=jnp.asarray(seq, jnp.int32)[None])
+        return int(jnp.argmax(lo[0, -1]))
+
+    assert loop.generated[0][-1] == greedy(list(t1) + list(t2))
+    assert not loop._tokens    # served requests release their prompts
+
+
 def test_serving_state_rebuild_after_failure(served):
     """Fault tolerance: a replacement engine rebuilt by re-prefilling the
     session transcript produces identical decode continuations."""
