@@ -22,6 +22,8 @@ UNTIL = 30.0
 TICKS_PER_SIM_SECOND = 10          # one scheduler round ≈ 100 ms simulated
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_mixed.json")
+BENCH_DECODE_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                 "BENCH_decode.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -72,7 +74,7 @@ def _drive(unified: bool, cfg, params, decode_budget: int = 12) -> Dict:
         eng.close_session(s)
     firsts = eng.prefill_packed(list(range(4)), steady)
     st0 = eng.stats()
-    d_base = st0["packed_dispatches"] + st0["dense_dispatches"]
+    d_base = _total_dispatches(st0)
     active = {s: decode_budget for s in range(4)}
     last = dict(firsts)
     ttfts, tpots, rounds = [], [], 0
@@ -114,7 +116,7 @@ def _drive(unified: bool, cfg, params, decode_budget: int = 12) -> Dict:
         rounds += 1
     wall = time.perf_counter() - t0
     st = eng.stats()
-    dispatches = st["packed_dispatches"] + st["dense_dispatches"] - d_base
+    dispatches = _total_dispatches(st) - d_base
     sim_seconds = rounds / TICKS_PER_SIM_SECOND
     return {
         "dispatches": dispatches,
@@ -124,8 +126,16 @@ def _drive(unified: bool, cfg, params, decode_budget: int = 12) -> Dict:
         "ttft_ms": round(1e3 * sum(ttfts) / max(len(ttfts), 1), 2),
         "tpot_ms": round(1e3 * sum(tpots) / max(len(tpots), 1), 2),
         "wall_ms": round(1e3 * wall, 1),
-        "compiled_shapes": st["packed_shapes"] + st["captured_shapes"],
+        "compiled_shapes": st["packed_shapes"] + st["captured_shapes"]
+        + st.get("decode_shapes", 0),
     }
+
+
+def _total_dispatches(st: Dict) -> int:
+    """Every executor's dispatches: packed + dense + the bucketed decode
+    executor (decode-only steps land there since the arena path)."""
+    return (st["packed_dispatches"] + st["dense_dispatches"]
+            + st.get("decode_dispatches", 0))
 
 
 def _continuous_batching() -> List[Dict]:
@@ -154,6 +164,126 @@ def _continuous_batching() -> List[Dict]:
     return rows
 
 
+def _drive_decode_heavy(arena: bool, cfg, params, n_sessions: int = 6,
+                        max_len: int = 64) -> Dict:
+    """Decode-heavy scenario: N sessions drain staggered decode budgets
+    (so the live session count passes through many distinct values)
+    while occasional short prefill bursts arrive.
+
+    arena=True: the new path — bursts fuse the decode backlog into ONE
+    mixed packed dispatch and decode-only ticks run the arena-resident
+    bucketed step.  arena=False: the dense-gather baseline — a separate
+    (B, 1) decode dispatch every round, one compiled shape per live
+    session count, whole arena slots gathered and scattered per tick."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+    from repro.sim.costmodel import decode_hbm_bytes_per_token
+
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=16, max_len=max_len, packed=arena, arena_decode=arena,
+        packed_max_seqs=8, token_buckets=(16, 32, 64),
+        decode_buckets=(1, 2, 4, 8)))
+    kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
+                    * np.dtype(cfg.np_dtype).itemsize)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 14)))
+               for _ in range(n_sessions)]
+    budgets = {s: 4 + 2 * s for s in range(n_sessions)}   # staggered drain
+
+    last = {}
+    for s in range(n_sessions):
+        last.update(eng.prefill_batch([s], [prompts[s]]))
+    base_decode = _decode_dispatches(eng, arena)
+    active = dict(budgets)
+    decode_tick_bytes, decode_tick_tokens = 0.0, 0
+    counts_seen, rounds, burst_sess = set(), 0, 100
+    t0 = time.perf_counter()
+    while active:
+        sessions = sorted(active)
+        counts_seen.add(len(sessions))
+        decodes = [(s, last[s]) for s in sessions]
+        burst = [] if rounds % 4 != 1 else \
+            [(burst_sess + i, rng.integers(0, cfg.vocab_size, 6))
+             for i in range(2)]
+        burst_sess += len(burst)
+        if burst and arena:
+            # unified tick: burst prefills + the whole decode backlog in
+            # one packed dispatch — no separate decode step this round
+            res = eng.step_mixed(burst, decodes)
+            toks = res.tokens
+        else:
+            if burst:
+                eng.prefill_batch([s for s, _ in burst],
+                                  [t for _, t in burst])
+            for s in sessions:   # decode-only tick: model the KV traffic
+                decode_tick_bytes += decode_hbm_bytes_per_token(
+                    eng.history(s), max_len, kv_row_bytes, arena=arena)
+            decode_tick_tokens += len(sessions)
+            dec = eng.decode_batch(sessions, [t for _, t in decodes])
+            toks = {s: dec[s][0] for s in sessions}
+        for s, _ in burst:
+            eng.close_session(s)
+        for s in sessions:
+            last[s] = toks[s]
+            active[s] -= 1
+            if active[s] <= 0:
+                del active[s]
+        rounds += 1
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "decode_dispatches": _decode_dispatches(eng, arena) - base_decode,
+        "decode_shapes": st["decode_shapes"] if arena else
+        eng.executor.shapes_by_kind().get("decode", 0),
+        "decode_ladder_len": len(eng.decode_executor.decode_buckets)
+        if arena else None,
+        "session_counts_seen": len(counts_seen),
+        "hbm_bytes_per_decode_token": round(
+            decode_tick_bytes / max(decode_tick_tokens, 1), 1),
+        "rounds": rounds,
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def _decode_dispatches(eng, arena: bool) -> int:
+    """Separate decode-step dispatches (fused rows ride a prefill
+    dispatch and don't count — that's the continuous-batching saving)."""
+    if arena and eng.decode_executor is not None:
+        return eng.decode_executor.dispatches
+    return (eng.executor.kind_hits.get("decode", 0)
+            + eng.executor.kind_misses.get("decode", 0))
+
+
+def decode_scenario(write: bool = True) -> List[Dict]:
+    """The BENCH_decode.json rows: arena-resident bucketed decode vs the
+    dense-gather baseline on the decode-heavy scenario."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    new = _drive_decode_heavy(True, cfg, params)
+    old = _drive_decode_heavy(False, cfg, params)
+    rows = [
+        {"bench": "decode_bucket", "tag": "arena", "mean_ms": 0.0, **new},
+        {"bench": "decode_bucket", "tag": "dense", "mean_ms": 0.0, **old},
+        {"bench": "decode_bucket", "tag": "gain", "mean_ms": 0.0,
+         "dispatch_reduction": old["decode_dispatches"]
+         - new["decode_dispatches"],
+         "shape_reduction": old["decode_shapes"] - new["decode_shapes"],
+         "hbm_reduction_x": round(
+             old["hbm_bytes_per_decode_token"]
+             / max(new["hbm_bytes_per_decode_token"], 1e-9), 2)},
+    ]
+    if write:
+        with open(BENCH_DECODE_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -165,4 +295,22 @@ def run() -> List[Dict]:
                          "mix_over_pd": round(mix / pd, 3) if pd else 0.0,
                          "mean_ms": 0.0})
     rows.extend(_continuous_batching())
+    rows.extend(decode_scenario())
     return rows
+
+
+if __name__ == "__main__":
+    # CI smoke entry (invoke with PYTHONPATH=src:.): run ONLY the
+    # decode-heavy scenario and assert the acceptance criteria — fewer
+    # decode dispatches, a compile cache bounded by the decode ladder,
+    # strictly lower modeled HBM bytes/token than the dense baseline
+    rows = decode_scenario()
+    for r in rows:
+        print(r)
+    new, old = rows[0], rows[1]
+    assert new["decode_dispatches"] < old["decode_dispatches"], \
+        (new["decode_dispatches"], old["decode_dispatches"])
+    assert new["decode_shapes"] <= new["decode_ladder_len"], rows[0]
+    assert new["hbm_bytes_per_decode_token"] < \
+        old["hbm_bytes_per_decode_token"], (new, old)
+    print("decode-bucket smoke OK")

@@ -6,13 +6,21 @@ from the dry-run artifacts and identify the hillclimb candidates.
     collective term = collective_bytes / (chips × link bw)
 
 Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also home of the β_tail calibration hook: the cost model charges bucket
+tail rows and decode-ladder pad rows a linear-only coefficient β_tail
+(defaulting to β); :func:`fit_beta_tail` least-squares-fits it from
+measured (tail_rows, step_seconds) samples on real hardware.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
+
+from repro.sim.costmodel import CostModel
+import dataclasses
 
 
 def load_cells(report_dir: str = "reports/dryrun") -> List[Dict]:
@@ -75,6 +83,34 @@ def hillclimb_candidates(cells: List[Dict]) -> List[Dict]:
                     "roofline_fraction": round(frac(c), 4),
                     "coll_frac": round(coll_frac(c), 3), "mean_ms": 0.0})
     return out
+
+
+def fit_beta_tail(samples: Sequence[Tuple[int, float]],
+                  base: CostModel) -> CostModel:
+    """Calibrate β_tail from measured steps (ROADMAP: 'calibrate β_tail
+    against real tail-row cost on TPU').
+
+    samples: (tail_rows, measured_step_seconds) pairs from steps whose
+    ONLY varying term is the padding tail — e.g. the same packed batch
+    dispatched into successive bucket rungs, or a fixed decode batch
+    padded up the decode ladder.  Fits the slope of the measured-time
+    residual (vs. ``base`` with a zero tail) over tail rows by least
+    squares through the origin, and returns the re-parameterized model.
+    Zero/negative fits clamp to 0.0 — a tail row can't cost less than
+    nothing, and on hardware with free pad lanes it genuinely can cost
+    ~nothing.
+    """
+    pts = sorted(samples)
+    if len(pts) < 2:
+        return base
+    # the base work is identical across samples, so it cancels in the
+    # deltas against the smallest-tail sample — the slope IS β_tail
+    t0, s0 = pts[0]
+    den = sum((t - t0) ** 2 for t, _ in pts[1:])
+    if den == 0:
+        return base        # one tail width only — no slope to fit
+    num = sum((t - t0) * (s - s0) for t, s in pts[1:])
+    return dataclasses.replace(base, beta_tail=max(num / den, 0.0))
 
 
 def run() -> List[Dict]:

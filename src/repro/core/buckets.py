@@ -14,6 +14,7 @@ from typing import List, Optional, Sequence, Tuple
 DEFAULT_LENGTHS = (8, 16, 32, 64, 128, 256)
 DEFAULT_DEPTHS = (1, 2, 4, 8, 16, 32, 64)
 DEFAULT_TOKEN_BUCKETS = (64, 128, 256, 512)
+DEFAULT_DECODE_BUCKETS = (1, 2, 4, 8, 16, 32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +131,49 @@ class TokenBucketLadder:
         if b is None or b == 0:
             return 0.0
         return 1.0 - total / b
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+
+class DecodeBucketLadder:
+    """The decode-seqs ladder: a decode-only tick pads its BATCH axis to
+    a small power-of-two rung, so the compiled-shape space for decode is
+    O(log max_seqs) — not one executable per live session count (the
+    §3.1 shape-cache blowup, in its decode form).
+
+    Rungs above ``max_seqs`` (the arena depth) are dropped and the arena
+    depth itself becomes the top rung — whether the configured ladder
+    overshoots the arena OR stops short of it — so a full-arena decode
+    tick always lands on the ladder and never falls back to the dense
+    per-count path.
+    """
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_DECODE_BUCKETS,
+                 max_seqs: Optional[int] = None):
+        assert buckets, "decode ladder needs at least one rung"
+        rungs = sorted(set(buckets))
+        if max_seqs is not None:
+            rungs = [r for r in rungs if r < max_seqs] + [max_seqs]
+        self.buckets = tuple(rungs)
+
+    @property
+    def max_seqs(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, n_seqs: int) -> Optional[int]:
+        """Smallest rung ≥ n_seqs (None when the tick overflows)."""
+        if n_seqs <= 0:
+            return None
+        i = bisect.bisect_left(self.buckets, n_seqs)
+        return self.buckets[i] if i < len(self.buckets) else None
+
+    def covers(self, n_seqs: int) -> bool:
+        return 0 < n_seqs <= self.buckets[-1]
+
+    def pad_rows(self, n_seqs: int) -> int:
+        b = self.bucket_for(n_seqs)
+        return b - n_seqs if b is not None else 0
 
     def __len__(self) -> int:
         return len(self.buckets)

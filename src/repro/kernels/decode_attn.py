@@ -1,14 +1,31 @@
-"""Flash-decode Pallas kernel: one new token attending to a KV cache.
+"""Flash-decode Pallas kernels: one new token attending to a KV cache.
 
 The decode step is memory-bound (the paper's short-request regime): the
-whole KV cache is streamed HBM→VMEM once; arithmetic is a (rep × D) ·
+valid KV prefix is streamed HBM→VMEM once; arithmetic is a (rep × D) ·
 (D × block_k) GEMV-like matmul per block.  Grid = (B, Hkv, n_kv_blocks)
 with the kv axis sequential; the online-softmax state for the ``rep``
 query heads of one KV group sits in VMEM scratch.
 
+Two entry points share the kernel math:
+
+  * :func:`decode_attn` — the batch-cache form: k/v are (B, S, Hkv, D)
+    rows already gathered out of the arena (the legacy dense path);
+  * :func:`decode_attn_arena` — the arena-resident form: k/v are the
+    WHOLE KV arena (N_slots, S, Hkv, D) and a scalar-prefetched
+    ``slot_map`` selects each batch row's slot inside the BlockSpec
+    index maps, so a decode tick streams only the valid cache prefixes
+    of its live sessions — no whole-slot gather/scatter round-trip, no
+    O(S_max) HBM copies per generated token.  KV blocks past a row's
+    valid length are clamped to the last valid block in the index map
+    (a repeated block index skips the DMA) and their compute is skipped.
+
 Layout note: q rows per program = rep (GQA group fan-out, 1–8).  On real
 TPUs rows < 8 under-fill sublanes; production layout would fold multiple
 KV heads per program — kept simple here and validated in interpret mode.
+The arena form reads (1, block_k, 1, D) blocks straight from the arena's
+native (slots, S, Hkv, D) layout, trading sublane fill for zero arena
+reshuffling (a transpose would copy the whole arena and defeat the
+in-place point).
 """
 from __future__ import annotations
 
@@ -23,6 +40,15 @@ from repro.kernels._compat import CompilerParams
 
 NEG_INF = -1e30
 LANES = 128
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest block size ≤ cap dividing n (arena S is never padded —
+    padding would copy the whole arena)."""
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -113,4 +139,111 @@ def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.reshape(b, 1).astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)
+
+
+def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, block_k: int,
+                  n_kv_blocks: int):
+    del slot_ref                     # consumed by the BlockSpec index maps
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    kv_len = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0]                                        # (rep, D)
+        k = k_ref[0, :, 0, :]                                  # (bk, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (rep, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
+                      slot_map: jax.Array, lengths: jax.Array, *,
+                      block_k: int = 512,
+                      interpret: bool = True) -> jax.Array:
+    """Arena-resident flash decode.
+
+    q: (B, Hq, D); k, v: (N_slots, S, Hkv, D) — the FULL per-layer KV
+    arena, untouched; slot_map: (B,) arena slot of each batch row;
+    lengths: (B,) valid cache entries (history + the new row, which the
+    caller scatter-wrote before this call).
+
+    Returns (B, Hq, D).  The arena slot axis is indexed inside the
+    BlockSpec index maps via scalar prefetch, so only ``lengths[b]``
+    cache rows per sequence move HBM→VMEM — never whole slots and never
+    slots the batch doesn't own.
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    block_k = _largest_divisor(s, block_k)
+    nk = s // block_k
+    qg = q.reshape(b, hkv, rep, d)
+
+    def kv_map(bb, g, ki, slot_ref, len_ref):
+        # clamp past-the-length blocks to the last valid one: a repeated
+        # block index is not re-fetched, so invalid blocks cost no DMA
+        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        return (slot_ref[bb], jnp.minimum(ki, last), g, 0)
+
+    kern = functools.partial(_arena_kernel, scale=d ** -0.5,
+                             block_k=block_k, n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki, *_: (bb, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bb, g, ki, *_: (bb, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(slot_map.astype(jnp.int32), lengths.astype(jnp.int32), qg, k, v)
     return out.reshape(b, hq, d)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attn import decode_attn as _decode_pallas
+from repro.kernels.decode_attn import decode_attn_arena as _decode_arena_pallas
 from repro.kernels.flash_attn import flash_attn as _flash_pallas
 from repro.kernels.ragged_prefill import ragged_prefill_attn as _ragged_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -73,6 +74,17 @@ def decode(q, k, v, lengths, *, block_k=512):
         return _decode_pallas(q, k, v, lengths, block_k=block_k,
                               interpret=not _on_tpu())
     return ref_mod.ref_decode_attn(q, k, v, lengths)
+
+
+def decode_arena(q, k, v, slot_map, lengths, *, block_k=512):
+    """Arena-resident single-token flash decode.  q: (B, Hq, D);
+    k, v: (N_slots, S, Hkv, D) full arenas; slot_map/lengths: (B,).
+    See kernels.decode_attn.decode_attn_arena."""
+    if _use_pallas():
+        return _decode_arena_pallas(q, k, v, slot_map, lengths,
+                                    block_k=block_k,
+                                    interpret=not _on_tpu())
+    return ref_mod.ref_decode_attn_arena(q, k, v, slot_map, lengths)
 
 
 def ssd(x, dt, a, bmat, cmat, init_state, *, chunk=128):

@@ -109,6 +109,19 @@ def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def ref_decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
+                          slot_map: jax.Array,
+                          lengths: jax.Array) -> jax.Array:
+    """Oracle for kernels.decode_attn_arena (arena-resident decode).
+
+    q: (B, Hq, D); k, v: (N_slots, S, Hkv, D) full arenas; slot_map: (B,)
+    arena slot per batch row; lengths: (B,) valid KV entries.  The
+    gather here is the ORACLE's convenience — the kernel indexes the
+    slot axis in place.  Doubles as the XLA fallback off-TPU.
+    """
+    return ref_decode_attn(q, k[slot_map], v[slot_map], lengths)
+
+
 def ref_ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
                  cmat: jax.Array,
                  init_state: Optional[jax.Array] = None):

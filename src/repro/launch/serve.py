@@ -48,6 +48,12 @@ def main():
         depths=(1, 2, 4))
     print(f"[serve] captured {len(engine.executor.compile_times)} shapes "
           f"in {cap:.1f}s at init")
+    if engine.decode_executor is not None:
+        # §5: compile every decode-ladder rung up front too, so no live
+        # decode tick pays a first-rung compile
+        dcap = engine.decode_executor.precapture(params, engine.arena.arena)
+        print(f"[serve] captured {len(engine.decode_executor.compile_times)}"
+              f" decode rungs in {dcap:.1f}s at init")
     loop = ServeLoop(engine, policy, slo_ttft=args.slo)
 
     rng = np.random.default_rng(args.seed)

@@ -313,6 +313,53 @@ def packed_attention_layer(p: Dict, x: jax.Array, *, cfg,
     return out, (ck, cv)
 
 
+def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
+                       slot_map: jax.Array, positions: jax.Array,
+                       kv_lengths: jax.Array,
+                       kv: Tuple[jax.Array, jax.Array],
+                       ) -> Tuple[jax.Array, Tuple]:
+    """Attention for one arena-resident decode tick.
+
+    x: (B, d) — ONE new token per batch row; kv: (K, V) FULL arena
+    buffers of shape (N_slots, S, Hkv, D); slot_map: (B,) arena slot of
+    each row; positions: (B,) absolute write position of the new token
+    (its cached history length; pad rows park at S-1); kv_lengths: (B,)
+    valid cache entries including the new row.
+
+    The single new KV row is scatter-written at (slot_map, positions) —
+    O(B) rows, in place under buffer donation — and the arena-resident
+    kernel attends each row over its own valid prefix only.  No whole
+    slots are gathered or scattered.  Returns (out (B, d), updated
+    (K, V) arenas).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    b = x.shape[0]
+    hd = cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, cfg.num_heads, hd)
+    k = k.reshape(b, cfg.num_kv_heads, hd)
+    v = v.reshape(b, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+
+    ck = kv[0].at[slot_map, positions].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[slot_map, positions].set(v.astype(kv[1].dtype))
+
+    out = kernel_ops.decode_arena(q, ck, cv, slot_map, kv_lengths)
+    out = out.reshape(b, cfg.num_heads * hd) @ p["wo"]
+    return out, (ck, cv)
+
+
 def write_kv_cache(cache: jax.Array, new: jax.Array, positions: jax.Array) -> jax.Array:
     """Scatter new KV rows into the cache at per-token absolute positions.
 

@@ -21,9 +21,10 @@ import jax.numpy as jnp
 from repro.distributed.sharding import constrain, constrain_tree
 from repro.models import mamba as mamba_mod
 from repro.models.config import ModelConfig
-from repro.models.layers import (ParamBuilder, attention_layer, init_attention,
-                                 init_mlp, packed_attention_layer, rms_norm,
-                                 swiglu, write_kv_cache)
+from repro.models.layers import (ParamBuilder, arena_decode_layer,
+                                 attention_layer, init_attention, init_mlp,
+                                 packed_attention_layer, rms_norm, swiglu,
+                                 write_kv_cache)
 from repro.models.moe import init_moe, moe_dense_reference, moe_layer
 
 
@@ -420,3 +421,74 @@ def forward_packed(params: Dict, cfg: ModelConfig, *,
              jnp.full((vpad,), -1e9, logits.dtype)])
         logits = logits + neg
     return logits, new_caches
+
+
+# ------------------------------------------------------- arena decode
+
+
+def forward_decode_arena(params: Dict, cfg: ModelConfig, *,
+                         tokens: jax.Array,
+                         slot_map: jax.Array,
+                         write_pos: jax.Array,
+                         kv_lengths: jax.Array,
+                         arena: List[Any],
+                         ) -> Tuple[jax.Array, List[Any]]:
+    """One arena-resident decode tick: B sessions advance one token each
+    against the KV arena IN PLACE.
+
+    tokens: (B,) int32 — last sampled token per row; slot_map: (B,)
+    arena slot each row owns; write_pos: (B,) absolute position of the
+    new token (the row's cached history; pad rows park at S_max − 1);
+    kv_lengths: (B,) valid cache entries INCLUDING the new row
+    (history + 1; pad rows 1).
+
+    arena: the KVArena pytree itself — per pattern position
+    {"k"/"v": (G, N_slots, S_max, Hkv, D)}.  Each layer scatter-writes
+    the single new KV row at (slot, write_pos) and the arena-resident
+    kernel streams only valid cache prefixes, so per-token HBM traffic
+    is O(cached_len) — not the O(S_max) whole-slot gather + scatter of
+    the dense path.  Under buffer donation the arena updates in place;
+    the caller swaps the returned pytree back into the KVArena.
+
+    Returns (logits (B, V), new_arena).  B is a decode-ladder bucket,
+    so the compiled-shape space is O(|ladder|), not O(#session-counts).
+    """
+    assert supports_packed(cfg), cfg.name
+    x = jnp.take(params["embed"], tokens, axis=0)              # (B, d)
+    p = pattern_period(cfg)
+    cache_axes = cache_logical_axes(cfg)
+
+    def body(carry, lps):
+        x, cs_all, g = carry
+        for j in range(p):
+            cache_j = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, g, 0, keepdims=False), cs_all[j])
+            h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
+            mix, upd = arena_decode_layer(
+                lps[j]["mixer"], h, cfg=cfg, slot_map=slot_map,
+                positions=write_pos, kv_lengths=kv_lengths,
+                kv=(cache_j["k"], cache_j["v"]))
+            x = x + mix
+            x2, _ = _ffn(cfg, j, lps[j], x[None])
+            x = x2[0]
+            nc = {"k": upd[0], "v": upd[1]}
+            full = jax.tree.map(
+                lambda fa, u: jax.lax.dynamic_update_index_in_dim(
+                    fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
+            cs_all[j] = constrain_tree(full, cache_axes[j])
+        return (x, cs_all, g + 1), None
+
+    carry0 = (x, list(arena), jnp.zeros((), jnp.int32))
+    (x, new_arena, _), _ = jax.lax.scan(body, carry0, params["blocks"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, "batch", "vocab")
+    vpad = cfg.padded_vocab - cfg.vocab_size
+    if vpad:
+        neg = jnp.concatenate(
+            [jnp.zeros((cfg.vocab_size,), logits.dtype),
+             jnp.full((vpad,), -1e9, logits.dtype)])
+        logits = logits + neg
+    return logits, new_arena

@@ -1,7 +1,10 @@
 from repro.serving.kvcache import KVArena  # noqa: F401
 from repro.serving.packing import (SegmentSpec, MixedStream,  # noqa: F401
-                                   assemble_mixed_stream, fit_decodes)
+                                   assemble_mixed_stream, fit_decodes,
+                                   DecodeRows, pad_decode_rows)
 from repro.serving.executor import (BucketExecutor,  # noqa: F401
+                                    DecodeBucketExecutor,
                                     PackedBucketExecutor)
+from repro.serving.sampling import SamplingParams, GREEDY  # noqa: F401
 from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
                                   MixedStepResult)

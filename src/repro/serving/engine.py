@@ -26,12 +26,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import boundary as boundary_mod
-from repro.core.buckets import DEFAULT_TOKEN_BUCKETS, BucketGrid
+from repro.core.buckets import (DEFAULT_DECODE_BUCKETS, DEFAULT_TOKEN_BUCKETS,
+                                BucketGrid)
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
 from repro.serving import packing
-from repro.serving.executor import BucketExecutor, PackedBucketExecutor
+from repro.serving import sampling as sampling_mod
+from repro.serving.executor import (BucketExecutor, DecodeBucketExecutor,
+                                    PackedBucketExecutor)
 from repro.serving.kvcache import KVArena
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -56,6 +60,8 @@ class EngineConfig:
     packed: bool = False             # padding-free packed prefill path
     token_buckets: Tuple[int, ...] = DEFAULT_TOKEN_BUCKETS
     packed_max_seqs: Optional[int] = None  # None → min(num_slots, 16)
+    arena_decode: bool = True        # in-place bucketed decode (§5)
+    decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS
 
 
 class Engine:
@@ -72,6 +78,11 @@ class Engine:
             self.packed_executor = PackedBucketExecutor(
                 cfg, token_buckets=self.ecfg.token_buckets,
                 max_seqs=min(max_seqs, self.ecfg.num_slots))
+        self.decode_executor: Optional[DecodeBucketExecutor] = None
+        if self.ecfg.arena_decode and tr.supports_packed(cfg):
+            self.decode_executor = DecodeBucketExecutor(
+                cfg, decode_buckets=self.ecfg.decode_buckets,
+                max_seqs=self.ecfg.num_slots)
         self.grid = BucketGrid(self.ecfg.grid_lengths, self.ecfg.grid_depths,
                                mem_budget_tokens=self.ecfg.num_slots
                                * self.ecfg.max_len)
@@ -79,6 +90,9 @@ class Engine:
         self.fitted: Optional[boundary_mod.TotalFit] = None
         # last-step logits per session (parity harness + sampling hooks)
         self.last_logits: Dict[int, np.ndarray] = {}
+        # per-session sampling options (greedy argmax when absent)
+        self.sampling: Dict[int, SamplingParams] = {}
+        self._rngs: Dict[int, np.random.Generator] = {}
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -87,9 +101,30 @@ class Engine:
     def close_session(self, session: int) -> None:
         self.arena.free(session)
         self.last_logits.pop(session, None)
+        self.sampling.pop(session, None)
+        self._rngs.pop(session, None)
 
     def history(self, session: int) -> int:
         return self.arena.length(session)
+
+    # ----------------------------------------------------------- sampling
+    def set_sampling(self, session: int,
+                     params: Optional[SamplingParams]) -> None:
+        """Attach per-session sampling options (None → greedy argmax).
+        Every path that emits a token for the session — prefill TTFT,
+        fused mixed-step rows, arena/dense decode — samples under them."""
+        if params is None or params.is_greedy:
+            self.sampling.pop(session, None)
+            self._rngs.pop(session, None)
+            return
+        self.sampling[session] = params
+        self._rngs[session] = sampling_mod.make_rng(session, params)
+
+    def _sample_rows(self, sessions: Sequence[int],
+                     logits: np.ndarray) -> np.ndarray:
+        """One token per (session, logits row) under its options."""
+        return sampling_mod.sample_batch(logits, sessions, self.sampling,
+                                         self._rngs)
 
     # ------------------------------------------------- bucketized prefill
     def prefill_batch(self, sessions: Sequence[int],
@@ -132,13 +167,13 @@ class Engine:
         last, new_caches = self.executor.prefill(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             caches, jnp.asarray(sample_idx))
-        toks = np.asarray(jnp.argmax(last, axis=-1))
+        last_np = np.asarray(last)
+        toks = self._sample_rows(sessions, last_np)
         elapsed = time.perf_counter() - t0
         self.executor.note_padding(sum(lens), pad_l * pad_b)
         # write back only the real rows
         self.arena.scatter(slots, jax.tree.map(
             lambda a: a[:, :n], new_caches))
-        last_np = np.asarray(last)
         out: Dict[int, int] = {}
         for i, s in enumerate(sessions):
             self.arena.set_length(s, hists[i] + lens[i])
@@ -249,12 +284,12 @@ class Engine:
             jnp.asarray(stream.cu_seqlens), jnp.asarray(stream.q_offsets),
             jnp.asarray(stream.kv_lengths), caches,
             jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
-        toks = np.asarray(jnp.argmax(last, axis=-1))
+        last_np = np.asarray(last)
+        toks = self._sample_rows([seg.session for seg in segments], last_np)
         elapsed = time.perf_counter() - t0
         px.note_padding(stream.total_tokens, bucket)
         self.arena.scatter(slots, jax.tree.map(
             lambda a: a[:, :n], new_caches))
-        last_np = np.asarray(last)
         out: Dict[int, int] = {}
         for i, seg in enumerate(segments):
             self.arena.set_length(seg.session, seg.history + seg.length)
@@ -294,7 +329,52 @@ class Engine:
     def decode_batch(self, sessions: Sequence[int],
                      tokens: Sequence[int], steps: int = 1
                      ) -> Dict[int, List[int]]:
-        """Greedy decode ``steps`` tokens for each session."""
+        """Decode ``steps`` tokens for each session (per-session sampling
+        options apply; greedy argmax by default).
+
+        Routed through the arena-resident bucketed path when available:
+        the batch axis pads to a decode-ladder rung (compile cache keyed
+        on the BUCKET, not the session count) and the KV arena is read
+        in place — no whole-slot gather/scatter.  Falls back to the
+        dense gather path for non-attention architectures or ticks that
+        overflow the ladder."""
+        dx = self.decode_executor
+        bucket = dx.bucket_for(len(sessions)) if dx is not None else None
+        if bucket is None:
+            return self._decode_batch_dense(sessions, tokens, steps)
+
+        n = len(sessions)
+        slots = [self.arena.slot_of(s) for s in sessions]
+        assert all(sl is not None for sl in slots), \
+            f"decode session without a cache slot: {list(sessions)}"
+        park = self.arena.max_len - 1
+        cur = np.asarray(tokens, np.int32)
+        out: Dict[int, List[int]] = {s: [] for s in sessions}
+        for _ in range(steps):
+            hists = [self.arena.length(s) for s in sessions]
+            rows = packing.pad_decode_rows(
+                slots, hists, cur, bucket, park_position=park,
+                pad_token=self.ecfg.pad_token)
+            logits, new_arena = dx.decode(
+                self.params, jnp.asarray(rows.tokens),
+                jnp.asarray(rows.slot_map), jnp.asarray(rows.write_pos),
+                jnp.asarray(rows.kv_lengths), self.arena.arena)
+            self.arena.replace(new_arena)
+            dx.note_padding(n, bucket)
+            logits_np = np.asarray(logits)[:n]
+            cur = self._sample_rows(sessions, logits_np).astype(np.int32)
+            for i, s in enumerate(sessions):
+                self.arena.set_length(s, hists[i] + 1)
+                out[s].append(int(cur[i]))
+                self.last_logits[s] = logits_np[i]
+        return out
+
+    def _decode_batch_dense(self, sessions: Sequence[int],
+                            tokens: Sequence[int], steps: int = 1
+                            ) -> Dict[int, List[int]]:
+        """Dense fallback: gather whole arena slots, run the (B, 1)
+        decode step, scatter the slots back — O(S_max) HBM per token
+        and one compiled shape per session count."""
         n = len(sessions)
         slots = [self.arena.slot_of(s) for s in sessions]
         cur = np.asarray(tokens, np.int32)
@@ -307,8 +387,9 @@ class Engine:
                 self.params, jnp.asarray(cur[:, None]),
                 jnp.asarray(positions), caches)
             self.arena.scatter(slots, new_caches)
-            cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self.executor.note_padding(n, n)
             logits_np = np.asarray(logits)
+            cur = self._sample_rows(sessions, logits_np).astype(np.int32)
             for i, s in enumerate(sessions):
                 self.arena.set_length(s, hists[i] + 1)
                 out[s].append(int(cur[i]))
@@ -337,7 +418,18 @@ class Engine:
             "useful_tokens": self.executor.useful_tokens,
             "padded_tokens": self.executor.padded_tokens,
             "padding_efficiency": self.executor.padding_efficiency,
+            "hit_rate_by_kind": self.executor.hit_rate_by_kind,
         }
+        if self.decode_executor is not None:
+            dx = self.decode_executor
+            out.update({
+                "decode_shapes": len(dx.compile_times),
+                "decode_dispatches": dx.dispatches,
+                "decode_hit_rate": dx.hit_rate,
+                "decode_useful_rows": dx.useful_tokens,
+                "decode_pad_rows": dx.padded_tokens,
+                "decode_padding_efficiency": dx.padding_efficiency,
+            })
         if self.packed_executor is not None:
             px = self.packed_executor
             out.update({

@@ -27,7 +27,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.buckets import DEFAULT_TOKEN_BUCKETS, TokenBucketLadder
+from repro.core.buckets import (DEFAULT_DECODE_BUCKETS, DEFAULT_TOKEN_BUCKETS,
+                                DecodeBucketLadder, TokenBucketLadder)
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
 
@@ -73,6 +74,20 @@ def make_decode_fn(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+def make_arena_decode_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(B,), slot_map(B,), write_pos(B,), kv_lengths(B,),
+    arena) → (logits(B,V), new_arena).  Arena-resident decode: the KV
+    arena is read in place (slot axis indexed inside the kernel) and
+    only the single new KV row per session is written."""
+
+    def decode_step(params, tokens, slot_map, write_pos, kv_lengths, arena):
+        return tr.forward_decode_arena(
+            params, cfg, tokens=tokens, slot_map=slot_map,
+            write_pos=write_pos, kv_lengths=kv_lengths, arena=arena)
+
+    return decode_step
+
+
 def resolve_donation(donate_cache: Optional[bool]) -> bool:
     """Effective cache-donation flag.
 
@@ -95,6 +110,11 @@ class _ExecutorBase:
         self.misses = 0
         self.useful_tokens = 0     # real prompt tokens executed
         self.total_tokens = 0      # tokens incl. bucket/grid padding
+        # per-kind dispatch accounting ("prefill" / "decode" / ...):
+        # the aggregate hit rate hides a cold decode path behind a warm
+        # prefill path, so each kind reports its own
+        self.kind_hits: Dict[str, int] = {}
+        self.kind_misses: Dict[str, int] = {}
 
     # --------------------------------------------------------------- keys
     @staticmethod
@@ -108,12 +128,14 @@ class _ExecutorBase:
         exe = self._compiled.get(key)
         if exe is None:
             self.misses += 1
+            self.kind_misses[kind] = self.kind_misses.get(kind, 0) + 1
             t0 = time.perf_counter()
             exe = jitted.lower(*args).compile()
             self.compile_times[key] = time.perf_counter() - t0
             self._compiled[key] = exe
         else:
             self.hits += 1
+            self.kind_hits[kind] = self.kind_hits.get(kind, 0) + 1
         return exe
 
     # ------------------------------------------------------------- stats
@@ -141,6 +163,23 @@ class _ExecutorBase:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    @property
+    def hit_rate_by_kind(self) -> Dict[str, float]:
+        """Per-dispatch-kind compile-cache hit rates."""
+        out: Dict[str, float] = {}
+        for kind in set(self.kind_hits) | set(self.kind_misses):
+            h = self.kind_hits.get(kind, 0)
+            m = self.kind_misses.get(kind, 0)
+            out[kind] = h / (h + m) if (h + m) else 0.0
+        return out
+
+    def shapes_by_kind(self) -> Dict[str, int]:
+        """Compile-cache size per dispatch kind (key[0] is the kind)."""
+        out: Dict[str, int] = {}
+        for key in self.compile_times:
+            out[key[0]] = out.get(key[0], 0) + 1
+        return out
 
     @property
     def dispatches(self) -> int:
@@ -284,6 +323,72 @@ class PackedBucketExecutor(_ExecutorBase):
         return time.perf_counter() - t0
 
 
-__all__ = ["BucketExecutor", "PackedBucketExecutor", "DEFAULT_TOKEN_BUCKETS",
+class DecodeBucketExecutor(_ExecutorBase):
+    """Arena-resident bucketed decode (mirrors :class:`PackedBucketExecutor`
+    for the decode regime).
+
+    A decode-only tick runs ONE executable whose batch axis is padded to
+    a small decode-seqs ladder rung (default 1/2/4/8/16/32, capped at
+    the arena depth), so the compile cache is keyed on the BUCKET — not
+    the live session count.  N sessions draining at staggered rates
+    compile at most |ladder| shapes instead of one per distinct count.
+
+    The KV arena is an ARGUMENT, read in place: the kernel indexes the
+    slot axis through a scalar-prefetched slot map and streams only
+    valid cache prefixes, and the step writes back one KV row per
+    session — no whole-slot gather/scatter.  Under donation the arena
+    buffers update in place; the caller swaps the returned pytree into
+    its KVArena.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS,
+                 max_seqs: Optional[int] = None,
+                 donate_cache: Optional[bool] = None):
+        super().__init__()
+        if not tr.supports_packed(cfg):
+            raise ValueError(
+                f"{cfg.name}: arena-resident decode needs pure-attention "
+                "mixers without sliding windows (SSM state / rolling SWA "
+                "caches stay on the dense decode path)")
+        self.cfg = cfg
+        self.ladder = DecodeBucketLadder(decode_buckets, max_seqs)
+        self.donate_cache = resolve_donation(donate_cache)
+        self._decode = make_arena_decode_fn(cfg)
+        self._jit_decode = jax.jit(
+            self._decode, donate_argnums=(5,) if self.donate_cache else ())
+
+    # ------------------------------------------------------------ lookup
+    @property
+    def decode_buckets(self) -> Tuple[int, ...]:
+        return self.ladder.buckets
+
+    def bucket_for(self, n_seqs: int) -> Optional[int]:
+        """Smallest ladder rung ≥ n_seqs (None → dense fallback)."""
+        return self.ladder.bucket_for(n_seqs)
+
+    # ---------------------------------------------------------- dispatch
+    def decode(self, params, tokens, slot_map, write_pos, kv_lengths,
+               arena):
+        args = (params, tokens, slot_map, write_pos, kv_lengths, arena)
+        exe = self._get("arena_decode", self._jit_decode, args)
+        return exe(*args)
+
+    def precapture(self, params, arena) -> float:
+        """Compile every decode rung at init — |ladder| shapes total, vs
+        one per live session count on the dense path.  Lower + compile
+        only; the arena is never executed against (nor donated away)."""
+        t0 = time.perf_counter()
+        for b in self.decode_buckets:
+            tokens = jnp.zeros((b,), jnp.int32)
+            rows = jnp.zeros((b,), jnp.int32)
+            lens = jnp.ones((b,), jnp.int32)
+            self._get("arena_decode", self._jit_decode,
+                      (params, tokens, rows, rows, lens, arena))
+        return time.perf_counter() - t0
+
+
+__all__ = ["BucketExecutor", "PackedBucketExecutor", "DecodeBucketExecutor",
+           "DEFAULT_TOKEN_BUCKETS", "DEFAULT_DECODE_BUCKETS",
            "make_prefill_fn", "make_packed_prefill_fn", "make_decode_fn",
-           "resolve_donation"]
+           "make_arena_decode_fn", "resolve_donation"]

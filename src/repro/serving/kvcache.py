@@ -6,11 +6,17 @@ position with a leading slot dimension —
   attention:  k/v  (G, slots, S_max, Hkv, D)
   mamba:      ssm  (G, slots, NH, HD, DS) fp32, conv (G, slots, W-1, C)
 
-Sessions own slots; a batch is assembled by gathering its slot rows and
-written back by scatter.  Statically shaped throughout (S_max fixed), so
-every bucketized step compiles once — the paged-KV pointer chasing of
-GPU systems is replaced by whole-slot gathers, which XLA turns into
-efficient dynamic-slice DMAs.
+Sessions own slots; a prefill batch is assembled by gathering its slot
+rows and written back by scatter.  Statically shaped throughout (S_max
+fixed), so every bucketized step compiles once — the paged-KV pointer
+chasing of GPU systems is replaced by whole-slot gathers, which XLA
+turns into efficient dynamic-slice DMAs.
+
+Decode-only ticks skip even the gather: the arena-resident decode path
+(DESIGN.md §5) hands the arena pytree itself to the executor, the
+kernel indexes the slot axis through a scalar-prefetched slot map, and
+:meth:`KVArena.replace` swaps the (donated, in-place) result back —
+per-token HBM traffic is O(cached_len), not O(S_max) slot copies.
 """
 from __future__ import annotations
 
@@ -79,3 +85,14 @@ class KVArena:
         self.arena = jax.tree.map(
             lambda a, b: a.at[:, idx].set(b.astype(a.dtype)),
             self.arena, batch_cache)
+
+    # ------------------------------------------------------- in-place use
+    def replace(self, new_arena: Any) -> None:
+        """Swap in the arena pytree returned by an arena-resident step.
+
+        The arena-resident decode path reads the arena IN PLACE (the
+        kernel indexes the slot axis through a slot map) and returns the
+        updated buffers — under donation the same memory, just a new
+        handle.  No gather/scatter bookkeeping happens here; lengths are
+        advanced by the engine per session."""
+        self.arena = new_arena

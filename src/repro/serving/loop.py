@@ -32,6 +32,7 @@ from repro.core.scheduler import BasePolicy, ChunkWork
 from repro.core.slo import SLOTracker
 from repro.serving import packing
 from repro.serving.engine import Engine
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -78,11 +79,17 @@ class ServeLoop:
     # ------------------------------------------------------------ intake
     def submit(self, session: int, tokens: np.ndarray,
                decode_tokens: int = 0,
-               deadline: Optional[float] = None) -> Request:
+               deadline: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None) -> Request:
+        """Queue one turn.  ``sampling`` attaches per-session decode
+        options (temperature / top-k); None or temperature 0 is greedy.
+        They apply to the TTFT token and every generated token, on the
+        fused mixed path and the bucketed decode path alike."""
         now = self.clock()
         # a new turn preempts any generation still running on the session
         self.active_decodes.pop(session, None)
         self.engine.open_session(session)
+        self.engine.set_sampling(session, sampling)
         r = Request(new_tokens=len(tokens),
                     history_tokens=self.engine.history(session),
                     arrival=now,
@@ -201,7 +208,9 @@ class ServeLoop:
 
     def _run_decode_only(self) -> None:
         """No prefill work this tick: advance every in-flight session one
-        token in a single decode dispatch."""
+        token in a single decode dispatch — the arena-resident bucketed
+        path when the engine supports it (batch padded to a decode-ladder
+        rung, KV read in place), else the dense gather step."""
         sessions = list(self.active_decodes)
         tokens = [self.last_token[s] for s in sessions]
         out = self.engine.decode_batch(sessions, tokens, steps=1)

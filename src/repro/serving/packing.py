@@ -137,5 +137,50 @@ def assemble_mixed_stream(segments: Sequence[SegmentSpec], bucket: int,
                        bucket=bucket)
 
 
+@dataclasses.dataclass
+class DecodeRows:
+    """One arena-resident decode tick's padded row arrays — exactly the
+    DecodeBucketExecutor's inputs.  Rows [0, n) are the live sessions in
+    submission order; rows [n, bucket) are ladder padding that writes
+    junk KV at the park position of row 0's slot and attends over one
+    garbage key (output discarded)."""
+    tokens: np.ndarray        # (bucket,) int32 last sampled token per row
+    slot_map: np.ndarray      # (bucket,) int32 arena slot per row
+    write_pos: np.ndarray     # (bucket,) int32 new-KV position (pad: park)
+    kv_lengths: np.ndarray    # (bucket,) int32 valid entries (pad: 1)
+    n: int                    # live rows
+    bucket: int
+
+    @property
+    def pad_rows(self) -> int:
+        return self.bucket - self.n
+
+
+def pad_decode_rows(slots: Sequence[int], histories: Sequence[int],
+                    tokens: Sequence[int], bucket: int,
+                    park_position: int, pad_token: int = 0) -> DecodeRows:
+    """Pad one decode tick's rows to the ladder ``bucket``.
+
+    The live rows keep their submission order and exact values — the
+    bucket choice never drops or reorders sessions (property-tested).
+    Pad rows reuse slot 0's arena row but write at ``park_position``
+    (the arena's designated junk slot), so padding never corrupts a
+    live cache entry.
+    """
+    n = len(slots)
+    assert 0 < n <= bucket, (n, bucket)
+    assert len(histories) == n and len(tokens) == n
+    tok = np.full(bucket, pad_token, np.int32)
+    tok[:n] = tokens
+    sm = np.full(bucket, slots[0], np.int32)
+    sm[:n] = slots
+    wp = np.full(bucket, park_position, np.int32)
+    wp[:n] = histories
+    kl = np.ones(bucket, np.int32)
+    kl[:n] = np.asarray(histories, np.int32) + 1
+    return DecodeRows(tokens=tok, slot_map=sm, write_pos=wp, kv_lengths=kl,
+                      n=n, bucket=bucket)
+
+
 __all__ = ["SegmentSpec", "MixedStream", "assemble_mixed_stream",
-           "fit_decodes", "SEGMENT_KINDS"]
+           "DecodeRows", "pad_decode_rows", "fit_decodes", "SEGMENT_KINDS"]

@@ -1,0 +1,78 @@
+"""Per-session token sampling (ROADMAP PR-2 follow-up).
+
+Every serving path ends in one `(B, V)` logits gather — prefill TTFT
+tokens, fused mixed-step rows, and arena-decode rows alike.  This module
+turns those rows into tokens under per-session options: greedy argmax
+(the default, temperature 0), temperature scaling, and top-k truncation.
+
+Pure numpy on host-side logits: the sampled token feeds the NEXT step's
+token stream, which is assembled on host anyway, so sampling adds no
+device dispatch.  Determinism: each session owns a Generator seeded from
+``SamplingParams.seed`` (or the session id), so a replayed request
+stream reproduces its tokens exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-session decode options.  temperature <= 0 means greedy."""
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def make_rng(session: int, params: SamplingParams) -> np.random.Generator:
+    seed = params.seed if params.seed is not None else session
+    return np.random.default_rng(seed)
+
+
+def sample_token(logits: np.ndarray, params: SamplingParams,
+                 rng: Optional[np.random.Generator] = None) -> int:
+    """Sample one token from a (V,) logits row."""
+    if params.is_greedy or rng is None:
+        return int(np.argmax(logits))
+    scaled = logits.astype(np.float64) / params.temperature
+    if params.top_k is not None and 0 < params.top_k < scaled.size:
+        kth = np.partition(scaled, -params.top_k)[-params.top_k]
+        scaled = np.where(scaled < kth, -np.inf, scaled)
+    scaled = scaled - scaled.max()
+    probs = np.exp(scaled)
+    probs /= probs.sum()
+    return int(rng.choice(scaled.size, p=probs))
+
+
+def sample_batch(logits: np.ndarray, sessions: Sequence[int],
+                 params: Dict[int, SamplingParams],
+                 rngs: Dict[int, np.random.Generator]) -> np.ndarray:
+    """Sample one token per row of a (n, V) logits block.
+
+    Greedy rows (no per-session params) share one vectorized argmax;
+    sampled rows draw from their session's Generator.  Row order is the
+    caller's ``sessions`` order — the segment/batch layout is never
+    reordered by sampling.
+    """
+    n = len(sessions)
+    assert logits.shape[0] >= n, (logits.shape, n)
+    out = np.argmax(logits[:n], axis=-1).astype(np.int64)
+    for i, s in enumerate(sessions):
+        sp = params.get(s)
+        if sp is not None and not sp.is_greedy:
+            out[i] = sample_token(logits[i], sp, rngs.get(s))
+    return out
+
+
+__all__ = ["SamplingParams", "GREEDY", "make_rng", "sample_token",
+           "sample_batch"]

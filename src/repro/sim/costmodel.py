@@ -22,7 +22,7 @@ of this model is what core.boundary fits at runtime.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.core.request import Batch
 from repro.core.scheduler import ChunkWork
@@ -40,8 +40,17 @@ class CostModel:
     graph_lookup: float = 5.0e-5   # §4.2 per-step graph lookup/selection
     decode_step: Optional[float] = None   # defaults to weight_read
     decode_per_seq: float = 1.0e-4
+    # s/token for linear-only tail/pad rows (packed bucket tails, decode
+    # ladder pad rows).  Calibratable against real tail-row cost — see
+    # benchmarks.roofline.fit_beta_tail; None falls back to β.
+    beta_tail: Optional[float] = None
 
     # ------------------------------------------------------------ pieces
+    @property
+    def tail_coef(self) -> float:
+        """Linear cost of one tail/pad row (β_tail, falling back to β)."""
+        return self.beta if self.beta_tail is None else self.beta_tail
+
     def comp_time(self, l: int, h: int = 0, padded: Optional[int] = None) -> float:
         lp = padded if padded is not None else l
         return self.alpha * lp * (lp + 2 * h) + self.beta * lp
@@ -76,7 +85,7 @@ class CostModel:
             self.mem_time(r.new_tokens, r.history_tokens)
             for r in batch.requests)
         tail = max(0, (batch.token_bucket or 0) - batch.stream_tokens)
-        comp += self.beta * tail
+        comp += self.tail_coef * tail
         mem += self.w_tok * tail
         fused = batch.decode_tokens * (self.beta + self.w_tok
                                        + self.decode_per_seq)
@@ -121,14 +130,58 @@ class CostModel:
             self.weight_read + self.mem_time(w.chunk_tokens, h)) + fused
 
     def decode_step_time(self, n_active: int) -> float:
+        """Legacy decode pricing: per-step weight read + per-seq launch
+        overhead, blind to context lengths.  Kept for callers without
+        length bookkeeping; prefer :meth:`decode_bucket_time`."""
         base = self.decode_step if self.decode_step is not None \
             else self.weight_read
         return base + self.decode_per_seq * n_active
+
+    def decode_bucket_time(self, cached_lens: Sequence[int],
+                           bucket: Optional[int] = None) -> float:
+        """Arena-resident bucketed decode tick (DESIGN.md §5).
+
+        Billed on ACTUAL cached lengths: one weight read per BUCKETED
+        step (not per session count — the captured executable amortizes
+        it across the rung), γ_r per cached token streamed in place,
+        one new KV row written (w_tok) per session, β linear per live
+        row and β_tail per ladder pad row.  The dense-gather path this
+        replaces moved O(S_max) arena rows per session per token; here
+        HBM traffic follows the valid prefixes only."""
+        n = len(cached_lens)
+        if n == 0:
+            return 0.0
+        b = bucket if bucket is not None else n
+        comp = self.beta * n + self.tail_coef * max(0, b - n)
+        mem = self.weight_read + sum(self.gamma_r * h + self.w_tok
+                                     for h in cached_lens)
+        return self.graph_launch + self.graph_lookup \
+            + max(comp, mem) + self.decode_per_seq * n
 
     def work_time(self, work) -> float:
         if isinstance(work, ChunkWork):
             return self.chunk_time(work)
         return self.batch_time(work)
+
+
+def decode_hbm_bytes_per_token(cached_len: int, s_max: int,
+                               kv_row_bytes: float, *,
+                               arena: bool) -> float:
+    """Modeled KV HBM traffic to generate ONE token for one session.
+
+    arena=False (dense gather/scatter): the session's whole (S_max,)
+    arena slot is gathered out, attention reads the valid prefix, and
+    the whole slot is scattered back — 2·S_max slot-copy rows plus the
+    attended prefix and the new row.  arena=True (in-place): only the
+    valid prefix is streamed and one new row is written.
+
+    kv_row_bytes: bytes of one cached token's K+V across all layers
+    (2 · layers · Hkv · D · dtype_bytes).  Pure arithmetic so the
+    benchmark, the simulator, and the docs all quote the same number.
+    """
+    if arena:
+        return kv_row_bytes * (cached_len + 1)
+    return kv_row_bytes * (2 * s_max + cached_len + 1)
 
 
 def _scaled(params_b: float) -> CostModel:

@@ -20,6 +20,7 @@ import heapq
 import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.buckets import DEFAULT_DECODE_BUCKETS, DecodeBucketLadder
 from repro.core.controller import (InstanceStats, Migration,
                                    PressureController)
 from repro.core.request import Batch, Request
@@ -36,6 +37,10 @@ class SimConfig:
     slo_ttft: Optional[float] = 0.4
     seed: int = 0
     max_events: int = 5_000_000
+    # decode-only ticks price through the arena-resident decode ladder
+    # (DESIGN.md §5), mirroring the real engine's DecodeBucketExecutor;
+    # overflow falls back to the dense per-count pricing like the engine
+    decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS
 
 
 class _Instance:
@@ -48,10 +53,23 @@ class _Instance:
         self.alive = True
         self.busy_time = 0.0
         self.busy_mark = 0.0          # busy_time at last control period
-        self.decode_sessions: List[int] = []
+        # (tokens remaining, cached context length) per in-flight session:
+        # decode pricing follows the ACTUAL cached lengths, which grow by
+        # one with every generated token
+        self.decode_sessions: List[Tuple[int, int]] = []
         self.recent_dev: List[float] = []
         self.prefill_done = 0
         self.current = None
+
+    def advance_decodes(self) -> None:
+        """Every in-flight session emitted one token: budgets shrink,
+        cached contexts grow."""
+        self.decode_sessions = [(r - 1, h + 1)
+                                for r, h in self.decode_sessions if r > 1]
+
+    @property
+    def decode_ctx_lens(self) -> List[int]:
+        return [h for _, h in self.decode_sessions]
 
 
 class ClusterSim:
@@ -71,6 +89,7 @@ class ClusterSim:
             _Instance(i, None if shared_policy is not None else policy_factory(i))
             for i in range(n_instances)]
         self.pools = pools or {}
+        self._decode_ladder = DecodeBucketLadder(self.cfg.decode_buckets)
         self.tracker = SLOTracker(self.cfg.slo_ttft)
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
@@ -123,6 +142,16 @@ class ClusterSim:
         return None  # shared
 
     # ------------------------------------------------------------- engine
+    def _decode_tick_time(self, ctx_lens: List[int]) -> float:
+        """One decode-only tick, mirroring the real engine's routing:
+        on-ladder counts run the arena-resident bucketed step billed on
+        actual cached lengths; ladder overflow falls back to the dense
+        gather path's per-count pricing (the engine does exactly this)."""
+        bucket = self._decode_ladder.bucket_for(len(ctx_lens))
+        if bucket is None:
+            return self.cost.decode_step_time(len(ctx_lens))
+        return self.cost.decode_bucket_time(ctx_lens, bucket)
+
     def _try(self, inst: _Instance) -> None:
         if inst.busy or not inst.alive:
             return
@@ -133,9 +162,10 @@ class ClusterSim:
             policy.note_decode_backlog(len(inst.decode_sessions))
         work, wake = policy.next_work(self.now)
         if work is None:
-            # MIX: run a decode-only step if sessions are active
+            # MIX: run a decode-only step if sessions are active — priced
+            # as one arena-resident bucketed tick over actual contexts
             if self.cfg.mode == "mix" and inst.decode_sessions:
-                dt = self.cost.decode_step_time(len(inst.decode_sessions)) \
+                dt = self._decode_tick_time(inst.decode_ctx_lens) \
                     * inst.speed
                 inst.busy = True
                 inst.current = "decode"
@@ -181,8 +211,11 @@ class ClusterSim:
                 fused = 0
             leftover = len(inst.decode_sessions) - fused
             if leftover > 0:
-                service += self.cost.decode_step_time(leftover) * inst.speed
-            inst.decode_sessions = [s - 1 for s in inst.decode_sessions if s > 1]
+                # sessions beyond the fusion room advance in a separate
+                # bucketed decode tick, billed on their cached contexts
+                service += self._decode_tick_time(
+                    inst.decode_ctx_lens[fused:]) * inst.speed
+            inst.advance_decodes()
         if isinstance(work, Batch):
             for r in work.requests:
                 if r.dispatch_time is None:
@@ -200,7 +233,7 @@ class ClusterSim:
         inst.busy = False
         inst.current = None
         if work == "decode":
-            inst.decode_sessions = [s - 1 for s in inst.decode_sessions if s > 1]
+            inst.advance_decodes()
             return
         policy = self.shared if self.shared is not None else inst.policy
         policy.on_complete(work, self.now)
@@ -219,7 +252,7 @@ class ClusterSim:
         if r.deadline is not None:
             inst.recent_dev.append(max(0.0, (r.finish_time or 0.0) - r.deadline))
         if self.cfg.mode == "mix" and r.decode_tokens > 0:
-            inst.decode_sessions.append(r.decode_tokens)
+            inst.decode_sessions.append((r.decode_tokens, r.total_context))
         if 0 <= r.session < len(self.clients) and \
                 self._client_busy.get(r.session, False):
             self._client_busy[r.session] = False

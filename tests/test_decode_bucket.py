@@ -1,0 +1,253 @@
+"""Arena-resident bucketed decode (DESIGN.md §5): kernel-level parity of
+the slot-map flash-decode against the dense oracle (GQA/MHA/MQA, ragged
+cache lengths incl. cached_len == S_max), engine-level parity of the
+bucketed path vs the dense gather/scatter oracle (logits + KV to 1e-5,
+interpret mode included), decode-ladder / pad-row invariants, and the
+per-session sampling options riding the same logits gather."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.buckets import DecodeBucketLadder
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attn_arena
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.packing import pad_decode_rows
+from repro.serving.sampling import make_rng, sample_token
+
+KEY = jax.random.key(21)
+TOL = dict(atol=1e-5, rtol=0)
+TOL_INTERPRET = dict(atol=2e-5, rtol=0)
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ----------------------------------------------------------- kernel level
+
+
+@pytest.mark.parametrize("b,nslots,s,hq,hkv,d,bk", [
+    (3, 8, 64, 8, 2, 32, 16),     # GQA
+    (2, 5, 100, 4, 4, 64, 32),    # MHA, S not a multiple of block_k
+    (4, 6, 32, 8, 1, 16, 32),     # MQA
+])
+def test_arena_kernel_matches_oracle(b, nslots, s, hq, hkv, d, bk):
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, hq, d))
+    k = rand(ks[1], (nslots, s, hkv, d))
+    v = rand(ks[2], (nslots, s, hkv, d))
+    slot = jax.random.permutation(ks[3], nslots)[:b]
+    lens = jax.random.randint(ks[4], (b,), 1, s + 1)
+    out = decode_attn_arena(q, k, v, slot, lens, block_k=bk)
+    want = ref.ref_decode_attn_arena(q, k, v, slot, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_arena_kernel_full_cache():
+    """cached_len == S_max: the deepest session still reads every valid
+    block and nothing past the arena edge."""
+    ks = jax.random.split(KEY, 4)
+    b, nslots, s, hq, hkv, d = 2, 4, 48, 4, 2, 32
+    q = rand(ks[0], (b, hq, d))
+    k = rand(ks[1], (nslots, s, hkv, d))
+    v = rand(ks[2], (nslots, s, hkv, d))
+    slot = jnp.array([3, 0], jnp.int32)
+    lens = jnp.array([s, 1], jnp.int32)
+    out = decode_attn_arena(q, k, v, slot, lens, block_k=16)
+    want = ref.ref_decode_attn_arena(q, k, v, slot, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ----------------------------------------------------------- engine level
+
+CONFIGS = {
+    "qwen3-4b": lambda: get_smoke("qwen3-4b"),
+    "mha": lambda: get_smoke("qwen3-4b").replace(name="mha-smoke",
+                                                 num_kv_heads=4),
+}
+
+
+def pair(cfg):
+    """(bucketed-decode engine, dense-gather oracle) on shared params."""
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           decode_buckets=(1, 2, 4)))
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           arena_decode=False))
+    return eng, ora
+
+
+def assert_kv_parity(eng, ora, sessions, tol=TOL):
+    for s in sessions:
+        n = eng.arena.length(s)
+        assert n == ora.arena.length(s), (s, n, ora.arena.length(s))
+        sm, so = eng.arena.slot_of(s), ora.arena.slot_of(s)
+        for cm, co in zip(eng.arena.arena, ora.arena.arena):
+            for part in ("k", "v"):
+                np.testing.assert_allclose(
+                    np.asarray(cm[part][:, sm, :n]),
+                    np.asarray(co[part][:, so, :n]),
+                    err_msg=f"session {s} cache {part}", **tol)
+
+
+@pytest.mark.parametrize("arch", list(CONFIGS))
+def test_decode_bucket_parity(arch):
+    """Bucketed arena decode over ragged cached lengths == the dense
+    gather/scatter oracle, token for token, while the live session count
+    shrinks across ladder rungs."""
+    cfg = CONFIGS[arch]()
+    rng = np.random.default_rng(31)
+    eng, ora = pair(cfg)
+    lens = [5, 12, 23]
+    prompts = [rng.integers(0, cfg.vocab_size, l) for l in lens]
+    f1 = eng.prefill_batch([0, 1, 2], prompts)
+    f2 = ora.prefill_batch([0, 1, 2], prompts)
+    assert f1 == f2
+    last1, last2 = dict(f1), dict(f2)
+    for active in ([0, 1, 2], [0, 1, 2], [2, 0], [0]):   # shrinking set
+        d1 = eng.decode_batch(active, [last1[s] for s in active])
+        d2 = ora.decode_batch(active, [last2[s] for s in active])
+        assert d1 == d2
+        for s in active:
+            last1[s], last2[s] = d1[s][0], d2[s][0]
+            np.testing.assert_allclose(eng.last_logits[s],
+                                       ora.last_logits[s],
+                                       err_msg=f"session {s} logits", **TOL)
+    assert_kv_parity(eng, ora, (0, 1, 2))
+    # the dense decode path was never touched on the bucketed engine
+    assert eng.executor.shapes_by_kind().get("decode", 0) == 0
+    assert eng.decode_executor.dispatches == 4
+
+
+def test_decode_bucket_deep_cache_parity():
+    """A session one row short of the arena edge (the parked junk row)
+    still decodes in place correctly."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(37)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=32,
+                                           decode_buckets=(1, 2)))
+    ora = Engine(cfg, params, EngineConfig(num_slots=4, max_len=32,
+                                           arena_decode=False))
+    toks = rng.integers(0, cfg.vocab_size, 29)
+    f1 = eng.prefill_batch([0], [toks])
+    f2 = ora.prefill_batch([0], [toks])
+    assert f1 == f2
+    assert eng.decode_batch([0], [f1[0]]) == ora.decode_batch([0], [f2[0]])
+    assert eng.arena.length(0) == 30                     # max_len - 2
+    assert_kv_parity(eng, ora, (0,))
+
+
+def test_decode_bucket_parity_interpret_mode():
+    """Same parity with the Pallas kernel in interpret mode: the slot-map
+    index maps and the length-clamped block fetches match the oracle."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(41)
+    kernel_ops.set_backend("pallas")
+    try:
+        eng, ora = pair(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, l) for l in (7, 18)]
+        f1 = eng.prefill_batch([0, 1], prompts)
+        f2 = ora.prefill_batch([0, 1], prompts)
+        d1 = eng.decode_batch([0, 1], [f1[0], f1[1]], steps=2)
+        d2 = ora.decode_batch([0, 1], [f2[0], f2[1]], steps=2)
+        assert d1 == d2
+        for s in (0, 1):
+            np.testing.assert_allclose(eng.last_logits[s],
+                                       ora.last_logits[s], **TOL_INTERPRET)
+        assert_kv_parity(eng, ora, (0, 1), tol=TOL_INTERPRET)
+    finally:
+        kernel_ops.set_backend(None)
+
+
+def test_decode_ladder_tops_out_at_arena_depth_in_engine():
+    """A configured ladder stopping short of the arena depth is topped
+    by the arena depth itself, so a full-arena tick still runs the
+    bucketed path — never the dense per-count fallback."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(43)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           decode_buckets=(1, 2)))
+    assert eng.decode_executor.decode_buckets == (1, 2, 8)
+    prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(3)]
+    f = eng.prefill_batch([0, 1, 2], prompts)
+    d = eng.decode_batch([0, 1, 2], [f[s] for s in (0, 1, 2)])
+    assert set(d) == {0, 1, 2}
+    assert eng.decode_executor.dispatches == 1           # 3 → top rung 8
+    assert eng.executor.shapes_by_kind().get("decode", 0) == 0
+
+
+# ------------------------------------------------------- ladder / padding
+
+
+def test_decode_ladder_caps_at_arena_depth():
+    lad = DecodeBucketLadder((1, 2, 4, 8, 16, 32), max_seqs=6)
+    assert lad.buckets == (1, 2, 4, 6)
+    assert lad.bucket_for(5) == 6
+    assert lad.bucket_for(7) is None
+    assert DecodeBucketLadder((1, 2, 4)).bucket_for(3) == 4
+    # deep arenas get the arena depth as a top rung too
+    deep = DecodeBucketLadder((1, 2, 4, 8, 16, 32), max_seqs=64)
+    assert deep.buckets == (1, 2, 4, 8, 16, 32, 64)
+    assert deep.bucket_for(40) == 64
+
+
+def test_decode_pad_rows_counters():
+    """ExecutorStats track the decode bucket's pad rows (note_padding
+    fires on the decode path) and report per-kind hit rates."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(47)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           decode_buckets=(1, 2, 4)))
+    f = eng.prefill_batch([0, 1, 2], [rng.integers(0, cfg.vocab_size, 4)
+                                      for _ in range(3)])
+    eng.decode_batch([0, 1, 2], [f[s] for s in (0, 1, 2)])   # 3 → bucket 4
+    dx = eng.decode_executor
+    assert dx.useful_tokens == 3 and dx.total_tokens == 4
+    assert dx.padded_tokens == 1
+    st = eng.stats()
+    assert st["decode_pad_rows"] == 1
+    assert st["decode_shapes"] == 1
+    assert "arena_decode" in dx.hit_rate_by_kind
+    assert "prefill" in st["hit_rate_by_kind"]
+
+
+# -------------------------------------------------------------- sampling
+
+
+def test_sampling_greedy_default_matches_argmax():
+    logits = np.array([0.1, 2.0, -1.0, 0.5])
+    assert sample_token(logits, SamplingParams()) == 1
+
+
+def test_sampling_temperature_topk_support():
+    rng = make_rng(0, SamplingParams(temperature=1.0, top_k=2, seed=9))
+    logits = np.array([5.0, 4.0, -50.0, -60.0])
+    draws = {sample_token(logits, SamplingParams(temperature=1.0, top_k=2,
+                                                 seed=9), rng)
+             for _ in range(50)}
+    assert draws <= {0, 1} and len(draws) == 2     # top-k truncates support
+
+
+def test_sampling_seeded_reproducible_in_engine():
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(53)
+    params, _ = tr.init_params(cfg, KEY)
+    toks = rng.integers(0, cfg.vocab_size, 6)
+    runs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64,
+                                               decode_buckets=(1, 2)))
+        eng.open_session(0)
+        eng.set_sampling(0, SamplingParams(temperature=0.9, top_k=8,
+                                           seed=123))
+        f = eng.prefill_batch([0], [toks])
+        runs.append(eng.decode_batch([0], [f[0]], steps=4)[0])
+    assert runs[0] == runs[1]                      # same seed, same stream

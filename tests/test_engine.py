@@ -85,6 +85,38 @@ def test_executor_capture_and_reuse(qwen):
     assert st["capture_seconds"] > 0
 
 
+def test_decode_bucket_compile_cache(qwen):
+    """Decode-only serving of N sessions compiles at most |decode_ladder|
+    executables on the arena-resident path — vs one per live session
+    count on the dense-gather baseline (the §3.1 shape blowup in its
+    decode form)."""
+    cfg, params = qwen
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           decode_buckets=(1, 2, 4, 8)))
+    base = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                            arena_decode=False))
+    rng = np.random.default_rng(7)
+    n = 5
+    prompts = [rng.integers(0, cfg.vocab_size, 4) for _ in range(n)]
+    f1 = eng.prefill_batch(list(range(n)), prompts)
+    f2 = base.prefill_batch(list(range(n)), prompts)
+    last1, last2 = dict(f1), dict(f2)
+    active = list(range(n))
+    while active:                      # drain through every session count
+        d1 = eng.decode_batch(active, [last1[s] for s in active])
+        d2 = base.decode_batch(active, [last2[s] for s in active])
+        assert d1 == d2                # tokens agree at every count
+        for s in active:
+            last1[s], last2[s] = d1[s][0], d2[s][0]
+        active.pop()
+    dx = eng.decode_executor
+    assert len(dx.compile_times) <= len(dx.decode_buckets)
+    assert len(dx.compile_times) < n   # counts 5..1 collapse onto rungs
+    assert eng.executor.shapes_by_kind().get("decode", 0) == 0
+    # the dense baseline compiled one decode shape per session count
+    assert base.executor.shapes_by_kind()["decode"] == n
+
+
 def test_runtime_boundary_fit(qwen):
     cfg, params = qwen
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))

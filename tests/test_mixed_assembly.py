@@ -10,10 +10,10 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.awd import AWDConfig, AWDScheduler
-from repro.core.buckets import BucketGrid, TokenBucketLadder
+from repro.core.buckets import BucketGrid, DecodeBucketLadder, TokenBucketLadder
 from repro.core.request import Request
 from repro.serving.packing import (SegmentSpec, assemble_mixed_stream,
-                                   fit_decodes)
+                                   fit_decodes, pad_decode_rows)
 
 LADDER = TokenBucketLadder((64, 128, 256, 512), max_seqs=16)
 PARK = 127
@@ -118,6 +118,44 @@ def test_awd_mixed_batch_respects_bucket(lengths, backlog):
     # FCFS order preserved — a packed batch never reorders arrivals
     arr = [r.arrival for r in batch.requests]
     assert arr == sorted(arr)
+
+
+# ------------------------------------------------- decode bucket rows
+
+
+@given(rows=st.lists(st.tuples(st.integers(0, 15),     # arena slot
+                               st.integers(0, 60),     # cached history
+                               st.integers(0, 250)),   # last token
+                     min_size=1, max_size=32),
+       ladder_max=st.integers(1, 32))
+def test_decode_bucket_never_drops_or_reorders(rows, ladder_max):
+    """For ANY live session set and ladder, the decode-bucket choice
+    keeps every session, in submission order, with its exact (slot,
+    history, token) — padding only ever APPENDS rows, and pad rows park
+    at the junk position with a 1-entry attention window."""
+    ladder = DecodeBucketLadder((1, 2, 4, 8, 16, 32), max_seqs=ladder_max)
+    n = len(rows)
+    bucket = ladder.bucket_for(n)
+    if bucket is None:
+        assert n > ladder.max_seqs       # overflow is the ONLY None case
+        return
+    assert n <= bucket <= ladder.max_seqs
+    slots = [s for s, _, _ in rows]
+    hists = [h for _, h, _ in rows]
+    toks = [t for _, _, t in rows]
+    park = 63
+    dr = pad_decode_rows(slots, hists, toks, bucket, park_position=park)
+    # live rows: exact values, original order
+    np.testing.assert_array_equal(dr.slot_map[:n], slots)
+    np.testing.assert_array_equal(dr.write_pos[:n], hists)
+    np.testing.assert_array_equal(dr.tokens[:n], toks)
+    np.testing.assert_array_equal(dr.kv_lengths[:n],
+                                  np.asarray(hists) + 1)
+    # pad rows: park position, slot 0's row, single-entry window
+    assert dr.pad_rows == bucket - n
+    np.testing.assert_array_equal(dr.slot_map[n:], slots[0])
+    np.testing.assert_array_equal(dr.write_pos[n:], park)
+    np.testing.assert_array_equal(dr.kv_lengths[n:], 1)
 
 
 @given(backlog=st.integers(0, 32))
