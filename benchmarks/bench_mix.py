@@ -24,6 +24,8 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_mixed.json")
 BENCH_DECODE_JSON = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_decode.json")
+BENCH_PREFILL_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                  "BENCH_prefill.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -284,6 +286,108 @@ def decode_scenario(write: bool = True) -> List[Dict]:
     return rows
 
 
+def _drive_prefill_flood(arena: bool, cfg, params, rounds: int = 8,
+                         max_len: int = 64) -> Dict:
+    """Short-prefill flood (the paper's hot regime): every round packs
+    2–3 fresh short requests plus one re-prefill of a persistent chat
+    session into ONE packed tick, and a 40-token prompt advances through
+    C_l = 16 chunk ticks — prefill, re-prefill, AND chunk work all on
+    the packed stream.
+
+    arena=True: the §6 path — KV reads/writes route through the slot
+    map, zero whole-slot gather/scatter.  arena=False: the legacy
+    gathered-cache baseline — every tick copies b_max whole (S_max,)
+    arena slots out and scatters them back, O(b_max · S_max) HBM per
+    step regardless of how few tokens the bucket holds."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+    from repro.sim.costmodel import packed_hbm_bytes_per_step
+
+    rng = np.random.default_rng(7)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=16, max_len=max_len, chunk_tokens=16, packed=True,
+        arena_prefill=arena, packed_max_seqs=8, token_buckets=(32, 64)))
+    px = eng.packed_executor
+    kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
+                    * np.dtype(cfg.np_dtype).itemsize)
+    hbm_bytes, steps = 0.0, 0
+
+    def packed_tick(sessions, lists):
+        """One packed dispatch, with its modeled KV traffic recorded
+        BEFORE the histories advance."""
+        nonlocal hbm_bytes, steps
+        hists = [eng.history(s) for s in sessions]
+        hbm_bytes += packed_hbm_bytes_per_step(
+            [len(t) for t in lists], hists, max_len, px.max_seqs,
+            kv_row_bytes, arena=arena)
+        steps += 1
+        return eng.prefill_packed(sessions, lists)
+
+    # two persistent chat sessions seed re-prefill history
+    for s in (0, 1):
+        packed_tick([s], [rng.integers(0, cfg.vocab_size, 8)])
+    t0 = time.perf_counter()
+    burst_sess = 100
+    for r in range(rounds):
+        mix = [(0 if r % 2 else 1,
+                rng.integers(0, cfg.vocab_size, 4))]     # re-prefill turn
+        for i in range(2 + r % 2):                       # 2–3 fresh shorts
+            mix.append((burst_sess + i,
+                        rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(4, 9)))))
+        packed_tick([s for s, _ in mix], [t for _, t in mix])
+        for s, _ in mix:
+            if s >= 100:
+                eng.close_session(s)                     # recycle slots
+        burst_sess += len(mix)
+    # one long prompt advanced in C_l chunks on the same stream
+    long_toks = rng.integers(0, cfg.vocab_size, 40)
+    for start in range(0, 40, 16):
+        packed_tick([50], [long_toks[start:start + 16]])
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "packed_dispatches": st["packed_dispatches"],
+        "dense_dispatches": st["dense_dispatches"],
+        "arena_gathers": st["arena_gathers"],
+        "arena_scatters": st["arena_scatters"],
+        "hbm_bytes_per_step": round(hbm_bytes / max(steps, 1), 1),
+        "steps": steps,
+        "compiled_shapes": st["packed_shapes"] + st["captured_shapes"],
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def prefill_scenario(write: bool = True) -> List[Dict]:
+    """The BENCH_prefill.json rows: arena-resident packed prefill (§6)
+    vs the whole-slot gather/scatter baseline on a short-prefill
+    flood."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    new = _drive_prefill_flood(True, cfg, params)
+    old = _drive_prefill_flood(False, cfg, params)
+    rows = [
+        {"bench": "prefill_arena", "tag": "arena", "mean_ms": 0.0, **new},
+        {"bench": "prefill_arena", "tag": "gather", "mean_ms": 0.0, **old},
+        {"bench": "prefill_arena", "tag": "gain", "mean_ms": 0.0,
+         "hbm_reduction_x": round(
+             old["hbm_bytes_per_step"]
+             / max(new["hbm_bytes_per_step"], 1e-9), 2),
+         "slot_copies_removed": old["arena_gathers"]
+         + old["arena_scatters"]},
+    ]
+    if write:
+        with open(BENCH_PREFILL_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -296,14 +400,31 @@ def run() -> List[Dict]:
                          "mean_ms": 0.0})
     rows.extend(_continuous_batching())
     rows.extend(decode_scenario())
+    rows.extend(prefill_scenario())
     return rows
 
 
-if __name__ == "__main__":
-    # CI smoke entry (invoke with PYTHONPATH=src:.): run ONLY the
-    # decode-heavy scenario and assert the acceptance criteria — fewer
-    # decode dispatches, a compile cache bounded by the decode ladder,
-    # strictly lower modeled HBM bytes/token than the dense baseline
+def _prefill_smoke() -> None:
+    """CI smoke: the short-prefill-flood acceptance criteria — zero
+    whole-slot gather/scatter on the arena arm, identical dispatch
+    schedule, and ≥ 5× lower modeled HBM bytes/step than the gathered
+    baseline."""
+    rows = prefill_scenario()
+    for r in rows:
+        print(r)
+    new, old, gain = rows
+    assert new["arena_gathers"] == 0 and new["arena_scatters"] == 0, new
+    assert old["arena_gathers"] > 0 and old["arena_scatters"] > 0, old
+    assert new["packed_dispatches"] == old["packed_dispatches"], (new, old)
+    assert new["dense_dispatches"] == 0, new
+    assert gain["hbm_reduction_x"] >= 5.0, gain
+    print("packed-arena prefill smoke OK")
+
+
+def _decode_smoke() -> None:
+    """CI smoke: decode-heavy scenario — fewer decode dispatches, a
+    compile cache bounded by the decode ladder, strictly lower modeled
+    HBM bytes/token than the dense-gather baseline."""
     rows = decode_scenario()
     for r in rows:
         print(r)
@@ -314,3 +435,14 @@ if __name__ == "__main__":
     assert new["hbm_bytes_per_decode_token"] < \
         old["hbm_bytes_per_decode_token"], (new, old)
     print("decode-bucket smoke OK")
+
+
+if __name__ == "__main__":
+    # CI smoke entries (invoke with PYTHONPATH=src:.): `prefill` runs
+    # the short-prefill-flood scenario, anything else the decode-heavy
+    # one — each asserting its acceptance criteria
+    import sys
+    if "prefill" in sys.argv[1:]:
+        _prefill_smoke()
+    else:
+        _decode_smoke()

@@ -20,6 +20,8 @@ from repro.kernels.decode_attn import decode_attn as _decode_pallas
 from repro.kernels.decode_attn import decode_attn_arena as _decode_arena_pallas
 from repro.kernels.flash_attn import flash_attn as _flash_pallas
 from repro.kernels.ragged_prefill import ragged_prefill_attn as _ragged_pallas
+from repro.kernels.ragged_prefill import \
+    ragged_prefill_arena as _ragged_arena_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _FORCE: Optional[str] = None  # None=auto, "pallas", "ref"
@@ -66,6 +68,23 @@ def ragged_mha(q, k, v, cu_seqlens, q_offsets=None, kv_lengths=None, *,
     return ref_mod.ref_ragged_prefill(q, k, v, cu_seqlens,
                                       q_offsets=q_offsets,
                                       kv_lengths=kv_lengths, causal=causal)
+
+
+def ragged_mha_arena(q, k, v, slot_map, cu_seqlens, q_offsets=None,
+                     kv_lengths=None, *, causal=True, block_q=128,
+                     block_k=128):
+    """Arena-resident packed prefill attention.  q: (T, Hq, D) flat
+    stream; k, v: (N_slots, S_max, Hkv, D) full arenas; slot_map: (B,)
+    arena slot per segment.  See kernels.ragged_prefill."""
+    if _use_pallas():
+        return _ragged_arena_pallas(q, k, v, slot_map, cu_seqlens,
+                                    q_offsets, kv_lengths, causal=causal,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=not _on_tpu())
+    return ref_mod.ref_ragged_prefill_arena(q, k, v, slot_map, cu_seqlens,
+                                            q_offsets=q_offsets,
+                                            kv_lengths=kv_lengths,
+                                            causal=causal)
 
 
 def decode(q, k, v, lengths, *, block_k=512):

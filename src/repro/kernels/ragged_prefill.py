@@ -27,6 +27,22 @@ belong to no sequence: they accumulate nothing and produce zeros.
 Masking at sequence boundaries is exact — a q block straddling two
 sequences contributes each row only to its own sequence's softmax.
 
+Two entry points share the kernel math:
+
+  * :func:`ragged_prefill_attn` — the batch-cache form: k/v are
+    (B, S, Hkv, D) rows already gathered out of the arena;
+  * :func:`ragged_prefill_arena` — the arena-resident form: k/v are the
+    WHOLE KV arena (N_slots, S_max, Hkv, D) and a scalar-prefetched
+    ``slot_map (B,)`` routes each segment's KV blocks through its arena
+    slot inside the BlockSpec index maps.  KV blocks past a segment's
+    valid length clamp to the last valid block (a repeated block index
+    skips the DMA), so a packed prefill / mixed / chunk tick streams
+    only the valid cache prefixes of its live sessions — no whole-slot
+    gather before the step and no scatter after it, killing the
+    O(b_max · S_max) HBM round-trip of the gathered path.  Blocks read
+    (1, block_k, 1, D) straight from the arena's native layout — a
+    transpose would copy the arena and defeat the in-place point.
+
 Decode segments (continuous batching) need no special path: a length-1
 segment with ``q_offsets[i] = H`` and ``kv_lengths[i] = H + 1`` attends
 over exactly ``H + 1`` keys — the causal frontier check caps the kv
@@ -48,6 +64,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.decode_attn import _largest_divisor
 
 NEG_INF = -1e30
 LANES = 128
@@ -195,4 +212,161 @@ def ragged_prefill_attn(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(cu_seqlens.astype(jnp.int32), q_offsets.astype(jnp.int32),
       kv_lengths.astype(jnp.int32), qt, kt, vt)
+    return jnp.moveaxis(out[:, :t], 0, 1)
+
+
+def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                  block_q: int, block_k: int, n_seqs: int, n_kv_blocks: int):
+    del slot_ref                     # consumed by the BlockSpec index maps
+    qi = pl.program_id(1)
+    b = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(b == 0, ki == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg_start = cu_ref[b]
+    seg_end = cu_ref[b + 1]
+    offset = off_ref[b]
+    kv_len = len_ref[b]
+
+    q_start = qi * block_q                 # flat row of this q block
+    k_start = ki * block_k
+
+    # block-level skip, identical to the gathered kernel's: the q block
+    # must own rows of segment b, the kv block must hold valid cache
+    # entries (clamped blocks re-read the last valid one and are skipped
+    # here), and causally it must not lie past the block's last query
+    run = jnp.logical_and(q_start < seg_end, q_start + block_q > seg_start)
+    run = jnp.logical_and(run, k_start < kv_len)
+    if causal:
+        last_row = jnp.minimum(seg_end, q_start + block_q) - 1
+        max_qpos = offset + last_row - seg_start
+        run = jnp.logical_and(run, k_start <= max_qpos)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                           # (bq, D)
+        k = k_ref[0, :, 0, :]                                  # (bk, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)                  # flat row ids
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mine = jnp.logical_and(rows >= seg_start, rows < seg_end)
+        qpos = offset + rows - seg_start
+        mask = jnp.logical_and(mine, kpos < kv_len)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                                  # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # (bq, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jnp.logical_and(b == n_seqs - 1, ki == n_kv_blocks - 1))
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)     # rows owned by no segment
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
+                         slot_map: jax.Array, cu_seqlens: jax.Array,
+                         q_offsets: Optional[jax.Array] = None,
+                         kv_lengths: Optional[jax.Array] = None, *,
+                         causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Arena-resident ragged prefill flash attention.
+
+    q: (T, Hq, D) packed flat stream; k, v: (N_slots, S_max, Hkv, D) —
+    the FULL per-layer KV arenas with this step's new KV already
+    scatter-written at each token's (slot, position); slot_map: (B,)
+    arena slot of each segment (pad segments point at any live slot —
+    they own no stream rows, so the block is fetched at most once and
+    never computed on); cu_seqlens: (B+1,) flat row offsets;
+    q_offsets: (B,) history length per segment; kv_lengths: (B,) valid
+    cache entries (history + new).
+
+    Returns (T, Hq, D) with zeros on rows past ``cu_seqlens[-1]``.  The
+    arena slot axis is indexed inside the BlockSpec index maps via
+    scalar prefetch and kv blocks past ``kv_lengths[b]`` clamp to the
+    last valid block, so one packed step streams only the valid cache
+    prefixes of the segments it serves — never whole slots and never
+    slots the step doesn't own.
+    """
+    t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    b = slot_map.shape[0]
+    rep = hq // hkv
+    if q_offsets is None:
+        q_offsets = jnp.zeros((b,), jnp.int32)
+    if kv_lengths is None:
+        kv_lengths = jnp.full((b,), s, jnp.int32)
+
+    block_q = min(block_q, max(t, 1))
+    # the arena's S axis is never padded (padding would copy the arena)
+    block_k = _largest_divisor(s, block_k)
+    t_pad = -(-t // block_q) * block_q
+    qt = jnp.moveaxis(q, 1, 0)                                 # (Hq, T, D)
+    if t_pad != t:
+        qt = jnp.pad(qt, ((0, 0), (0, t_pad - t), (0, 0)))
+    nq, nk = t_pad // block_q, s // block_k
+
+    def kv_map(h, qi, bb, ki, slot_ref, cu_ref, off_ref, len_ref):
+        # clamp past-the-length blocks to the last valid one: a repeated
+        # block index is not re-fetched, so invalid blocks cost no DMA
+        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        return (slot_ref[bb], jnp.minimum(ki, last), h // rep, 0)
+
+    kern = functools.partial(
+        _arena_kernel, scale=d ** -0.5, causal=causal,
+        block_q=block_q, block_k=block_k, n_seqs=b, n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(hq, nq, b, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, bb, ki, *_: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda h, qi, bb, ki, *_: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hq, t_pad, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(slot_map.astype(jnp.int32), cu_seqlens.astype(jnp.int32),
+      q_offsets.astype(jnp.int32), kv_lengths.astype(jnp.int32), qt, k, v)
     return jnp.moveaxis(out[:, :t], 0, 1)

@@ -90,6 +90,24 @@ def ref_ragged_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(t, hq, d).astype(q.dtype)
 
 
+def ref_ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
+                             slot_map: jax.Array, cu_seqlens: jax.Array,
+                             q_offsets: Optional[jax.Array] = None,
+                             kv_lengths: Optional[jax.Array] = None, *,
+                             causal: bool = True) -> jax.Array:
+    """Oracle for kernels.ragged_prefill_arena (arena-resident packed
+    prefill).
+
+    q: (T, Hq, D) flat packed stream; k, v: (N_slots, S_max, Hkv, D)
+    full arenas; slot_map: (B,) arena slot per segment.  The gather here
+    is the ORACLE's convenience — the kernel indexes the slot axis in
+    place.  Doubles as the XLA fallback off-TPU.
+    """
+    return ref_ragged_prefill(q, k[slot_map], v[slot_map], cu_seqlens,
+                              q_offsets=q_offsets, kv_lengths=kv_lengths,
+                              causal=causal)
+
+
 def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                     lengths: jax.Array) -> jax.Array:
     """Oracle for kernels.decode_attn (single-token flash decode).

@@ -34,26 +34,46 @@ def main():
     ap.add_argument("--decode-steps", type=int, default=4)
     ap.add_argument("--slo", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--packed", action="store_true",
+                    help="packed token-bucket stream, arena-resident (§6)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params, _ = tr.init_params(cfg, jax.random.key(args.seed))
     engine = Engine(cfg, params, EngineConfig(
-        num_slots=max(8, args.sessions), max_len=192, chunk_tokens=32))
+        num_slots=max(8, args.sessions), max_len=192, chunk_tokens=32,
+        packed=args.packed))
+    awd_cfg = None
+    if args.packed and engine.packed_executor is not None:
+        from repro.core.awd import AWDConfig
+        awd_cfg = AWDConfig(packed=True,
+                            token_buckets=engine.ecfg.token_buckets,
+                            packed_max_seqs=engine.packed_executor.max_seqs)
     policy = make_policy(Variant(args.variant), H200_QWEN32B, threshold=48,
-                         chunk_tokens=32)
-    # §3.1: capture the (L, B) executable grid at system initialization
-    cap = engine.executor.precapture(
-        params, engine.arena.gather, lengths=(8, 16, 32, 64),
-        depths=(1, 2, 4))
-    print(f"[serve] captured {len(engine.executor.compile_times)} shapes "
-          f"in {cap:.1f}s at init")
+                         chunk_tokens=32, awd_cfg=awd_cfg)
+    if engine.packed_executor is None:
+        # §3.1: capture the (L, B) executable grid at system init.  A
+        # packed-arena engine skips this — the dense grid is only its
+        # SSM/off-ladder fallback, and its warmup gathers would muddy
+        # the zero-slot-copy proof counters (§6)
+        cap = engine.executor.precapture(
+            params, engine.arena.gather, lengths=(8, 16, 32, 64),
+            depths=(1, 2, 4))
+        print(f"[serve] captured {len(engine.executor.compile_times)} "
+              f"shapes in {cap:.1f}s at init")
     if engine.decode_executor is not None:
         # §5: compile every decode-ladder rung up front too, so no live
         # decode tick pays a first-rung compile
         dcap = engine.decode_executor.precapture(params, engine.arena.arena)
         print(f"[serve] captured {len(engine.decode_executor.compile_times)}"
               f" decode rungs in {dcap:.1f}s at init")
+    if engine.packed_executor is not None and engine.ecfg.arena_prefill:
+        # §6: compile every token bucket's arena-resident packed step —
+        # the hot path for every prefill/mixed/chunk tick
+        pcap = engine.packed_executor.precapture_arena(params,
+                                                      engine.arena.arena)
+        print(f"[serve] captured {len(engine.packed_executor.token_buckets)}"
+              f" packed-arena buckets in {pcap:.1f}s at init")
     loop = ServeLoop(engine, policy, slo_ttft=args.slo)
 
     rng = np.random.default_rng(args.seed)

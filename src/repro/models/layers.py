@@ -313,6 +313,59 @@ def packed_attention_layer(p: Dict, x: jax.Array, *, cfg,
     return out, (ck, cv)
 
 
+def packed_arena_attention_layer(p: Dict, x: jax.Array, *, cfg,
+                                 positions: jax.Array, seg_slots: jax.Array,
+                                 slot_map: jax.Array,
+                                 cu_seqlens: jax.Array, q_offsets: jax.Array,
+                                 kv_lengths: jax.Array,
+                                 kv: Tuple[jax.Array, jax.Array],
+                                 ) -> Tuple[jax.Array, Tuple]:
+    """Attention over a packed flat stream, arena-resident (DESIGN.md §6).
+
+    x: (T, d) — the concatenated new tokens of every segment in the
+    step; kv: (K, V) FULL arena buffers of shape (N_slots, S_max, Hkv,
+    D); positions: (T,) absolute position of each token in ITS sequence
+    (tail rows park at S_max − 1); seg_slots: (T,) arena slot each
+    token's KV is written to (tail rows reuse a live slot but write at
+    the park position — the scratch row, never live data); slot_map:
+    (B,) arena slot per segment for the kernel's KV routing.
+
+    The new KV rows are scatter-written at (seg_slots, positions) —
+    O(T) rows, in place under buffer donation — and the arena-resident
+    ragged kernel attends each stream row to its own segment's valid
+    cache prefix only.  No whole slots are gathered or scattered.
+    Returns (out (T, d), updated (K, V) arenas).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    t = x.shape[0]
+    hd = cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(t, cfg.num_heads, hd)
+    k = k.reshape(t, cfg.num_kv_heads, hd)
+    v = v.reshape(t, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q[None], positions[None], cfg.rope_theta)[0]
+    k = apply_rope(k[None], positions[None], cfg.rope_theta)[0]
+
+    ck = kv[0].at[seg_slots, positions].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[seg_slots, positions].set(v.astype(kv[1].dtype))
+
+    out = kernel_ops.ragged_mha_arena(q, ck, cv, slot_map, cu_seqlens,
+                                      q_offsets, kv_lengths,
+                                      causal=cfg.causal)
+    out = out.reshape(t, cfg.num_heads * hd) @ p["wo"]
+    return out, (ck, cv)
+
+
 def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
                        slot_map: jax.Array, positions: jax.Array,
                        kv_lengths: jax.Array,

@@ -23,6 +23,7 @@ from repro.models import mamba as mamba_mod
 from repro.models.config import ModelConfig
 from repro.models.layers import (ParamBuilder, arena_decode_layer,
                                  attention_layer, init_attention, init_mlp,
+                                 packed_arena_attention_layer,
                                  packed_attention_layer, rms_norm, swiglu,
                                  write_kv_cache)
 from repro.models.moe import init_moe, moe_dense_reference, moe_layer
@@ -334,6 +335,64 @@ def forward(params: Dict, cfg: ModelConfig, *,
 # ---------------------------------------------------------------- packed
 
 
+def _lm_head_logits(params: Dict, cfg: ModelConfig,
+                    x: jax.Array) -> jax.Array:
+    """Final-norm'd (B, d) rows → (B, V) logits with the padded-vocab
+    columns masked (argmax/softmax safety).  ONE implementation shared
+    by every serving step that emits one logit row per sequence — the
+    packed, packed-arena, and arena-decode paths must never diverge
+    here, they are parity-tested against each other."""
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, "batch", "vocab")
+    vpad = cfg.padded_vocab - cfg.vocab_size
+    if vpad:
+        neg = jnp.concatenate(
+            [jnp.zeros((cfg.vocab_size,), logits.dtype),
+             jnp.full((vpad,), -1e9, logits.dtype)])
+        logits = logits + neg
+    return logits
+
+
+def _scan_serving_stack(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                        caches: List[Any], mix_fn
+                        ) -> Tuple[jax.Array, List[Any]]:
+    """Shared layer-scan scaffold for the flat-stream serving steps
+    (packed prefill, arena packed prefill, arena decode): embed →
+    per-group {norm → mix_fn → FFN → cache writeback} → final norm.
+
+    mix_fn(layer_params, h, cache_j) → (mix, (k, v)) supplies the
+    attention variant; everything else — including the cache
+    constrain_tree pinning — is identical across the paths and lives
+    exactly once.  Returns (final-normed activations, new caches)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    p = pattern_period(cfg)
+    cache_axes = cache_logical_axes(cfg)
+
+    def body(carry, lps):
+        x, aux, cs_all, g = carry
+        for j in range(p):
+            cache_j = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, g, 0, keepdims=False), cs_all[j])
+            h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
+            mix, upd = mix_fn(lps[j]["mixer"], h, cache_j)
+            x = x + mix
+            x2, a = _ffn(cfg, j, lps[j], x[None])
+            x = x2[0]
+            aux = aux + a
+            nc = {"k": upd[0], "v": upd[1]}
+            full = jax.tree.map(
+                lambda fa, u: jax.lax.dynamic_update_index_in_dim(
+                    fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
+            cs_all[j] = constrain_tree(full, cache_axes[j])
+        return (x, aux, cs_all, g + 1), None
+
+    zero = jnp.zeros((), jnp.float32)
+    carry0 = (x, zero, list(caches), jnp.zeros((), jnp.int32))
+    (x, _, new_caches, _), _ = jax.lax.scan(body, carry0, params["blocks"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+
+
 def supports_packed(cfg: ModelConfig) -> bool:
     """Packed (padding-free) prefill needs pure-attention mixers with a
     full cache: SSM state and rolling SWA windows mix tokens across the
@@ -379,48 +438,62 @@ def forward_packed(params: Dict, cfg: ModelConfig, *,
     don't multiply it.
     """
     assert supports_packed(cfg), cfg.name
-    x = jnp.take(params["embed"], tokens, axis=0)              # (T, d)
-    p = pattern_period(cfg)
-    cache_axes = cache_logical_axes(cfg)
 
-    def body(carry, lps):
-        x, aux, cs_all, g = carry
-        for j in range(p):
-            cache_j = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, g, 0, keepdims=False), cs_all[j])
-            h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
-            mix, upd = packed_attention_layer(
-                lps[j]["mixer"], h, cfg=cfg, positions=positions,
-                seg_ids=seg_ids, cu_seqlens=cu_seqlens,
-                q_offsets=q_offsets, kv_lengths=kv_lengths,
-                kv=(cache_j["k"], cache_j["v"]))
-            x = x + mix
-            x2, a = _ffn(cfg, j, lps[j], x[None])
-            x = x2[0]
-            aux = aux + a
-            nc = {"k": upd[0], "v": upd[1]}
-            full = jax.tree.map(
-                lambda fa, u: jax.lax.dynamic_update_index_in_dim(
-                    fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
-            cs_all[j] = constrain_tree(full, cache_axes[j])
-        return (x, aux, cs_all, g + 1), None
+    def mix_fn(lp, h, cache_j):
+        return packed_attention_layer(
+            lp, h, cfg=cfg, positions=positions, seg_ids=seg_ids,
+            cu_seqlens=cu_seqlens, q_offsets=q_offsets,
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
 
-    zero = jnp.zeros((), jnp.float32)
-    carry0 = (x, zero, list(caches), jnp.zeros((), jnp.int32))
-    (x, _, new_caches, _), _ = jax.lax.scan(body, carry0, params["blocks"])
-
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x, new_caches = _scan_serving_stack(params, cfg, tokens, caches, mix_fn)
     x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
-    logits = x_last @ params["lm_head"]
-    logits = constrain(logits, "batch", "vocab")
-    vpad = cfg.padded_vocab - cfg.vocab_size
-    if vpad:
-        neg = jnp.concatenate(
-            [jnp.zeros((cfg.vocab_size,), logits.dtype),
-             jnp.full((vpad,), -1e9, logits.dtype)])
-        logits = logits + neg
-    return logits, new_caches
+    return _lm_head_logits(params, cfg, x_last), new_caches
+
+
+# ------------------------------------------------- arena packed prefill
+
+
+def forward_packed_arena(params: Dict, cfg: ModelConfig, *,
+                         tokens: jax.Array,
+                         positions: jax.Array,
+                         seg_slots: jax.Array,
+                         slot_map: jax.Array,
+                         cu_seqlens: jax.Array,
+                         q_offsets: jax.Array,
+                         kv_lengths: jax.Array,
+                         arena: List[Any],
+                         last_idx: jax.Array,
+                         ) -> Tuple[jax.Array, List[Any]]:
+    """Arena-resident packed forward: the :func:`forward_packed` step
+    with the KV arena read and written IN PLACE (DESIGN.md §6).
+
+    Same flat-stream contract as :func:`forward_packed` — prefill,
+    chunk, and decode segments side by side, one logit gathered per
+    segment via ``last_idx`` — but the cache argument is the KVArena
+    pytree itself (per pattern position {"k"/"v": (G, N_slots, S_max,
+    Hkv, D)}), not a gathered (B, S, Hkv, D) batch.  ``seg_slots (T,)``
+    carries each token's arena slot (tail rows reuse a live slot but
+    park at S_max − 1, the scratch row); ``slot_map (B,)`` routes each
+    segment's KV reads through the kernel's scalar-prefetched index
+    maps.  Each layer scatter-writes ONLY the step's new KV rows, so
+    per-step HBM traffic is O(history + new) — not the O(b_max · S_max)
+    whole-slot gather/scatter of the batch-cache path.  Under buffer
+    donation the arena updates in place; the caller swaps the returned
+    pytree back into the KVArena.
+
+    Returns (last_logits (B, V), new_arena).
+    """
+    assert supports_packed(cfg), cfg.name
+
+    def mix_fn(lp, h, cache_j):
+        return packed_arena_attention_layer(
+            lp, h, cfg=cfg, positions=positions, seg_slots=seg_slots,
+            slot_map=slot_map, cu_seqlens=cu_seqlens, q_offsets=q_offsets,
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+
+    x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
+    x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
+    return _lm_head_logits(params, cfg, x_last), new_arena
 
 
 # ------------------------------------------------------- arena decode
@@ -454,41 +527,11 @@ def forward_decode_arena(params: Dict, cfg: ModelConfig, *,
     so the compiled-shape space is O(|ladder|), not O(#session-counts).
     """
     assert supports_packed(cfg), cfg.name
-    x = jnp.take(params["embed"], tokens, axis=0)              # (B, d)
-    p = pattern_period(cfg)
-    cache_axes = cache_logical_axes(cfg)
 
-    def body(carry, lps):
-        x, cs_all, g = carry
-        for j in range(p):
-            cache_j = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, g, 0, keepdims=False), cs_all[j])
-            h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
-            mix, upd = arena_decode_layer(
-                lps[j]["mixer"], h, cfg=cfg, slot_map=slot_map,
-                positions=write_pos, kv_lengths=kv_lengths,
-                kv=(cache_j["k"], cache_j["v"]))
-            x = x + mix
-            x2, _ = _ffn(cfg, j, lps[j], x[None])
-            x = x2[0]
-            nc = {"k": upd[0], "v": upd[1]}
-            full = jax.tree.map(
-                lambda fa, u: jax.lax.dynamic_update_index_in_dim(
-                    fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
-            cs_all[j] = constrain_tree(full, cache_axes[j])
-        return (x, cs_all, g + 1), None
+    def mix_fn(lp, h, cache_j):
+        return arena_decode_layer(
+            lp, h, cfg=cfg, slot_map=slot_map, positions=write_pos,
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
 
-    carry0 = (x, list(arena), jnp.zeros((), jnp.int32))
-    (x, new_arena, _), _ = jax.lax.scan(body, carry0, params["blocks"])
-
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["lm_head"]
-    logits = constrain(logits, "batch", "vocab")
-    vpad = cfg.padded_vocab - cfg.vocab_size
-    if vpad:
-        neg = jnp.concatenate(
-            [jnp.zeros((cfg.vocab_size,), logits.dtype),
-             jnp.full((vpad,), -1e9, logits.dtype)])
-        logits = logits + neg
-    return logits, new_arena
+    x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
+    return _lm_head_logits(params, cfg, x), new_arena

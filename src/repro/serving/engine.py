@@ -3,8 +3,11 @@
 Composes the substrate — KVArena (slots) + BucketExecutor (captured
 shapes) + models.transformer — under the paper's scheduling primitives:
 
-  * short-prefill batches padded to the (L, B) bucket grid, executed as
-    one captured step (§3.1);
+  * short-prefill batches on the packed token-bucket stream —
+    arena-resident by default (DESIGN.md §6): KV reads and writes route
+    through a slot map inside the kernel, zero whole-slot
+    gather/scatter — with the dense (L, B) bucket grid kept for SSM/SWA
+    architectures, pinned graph buckets, and off-ladder batches (§3.1);
   * re-prefill: new tokens written on top of the session's cached
     history (positions carry the offset);
   * long prefills advanced in fixed chunks C_l (§3.2);
@@ -62,6 +65,7 @@ class EngineConfig:
     packed_max_seqs: Optional[int] = None  # None → min(num_slots, 16)
     arena_decode: bool = True        # in-place bucketed decode (§5)
     decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS
+    arena_prefill: bool = True       # in-place packed prefill (§6)
 
 
 class Engine:
@@ -112,13 +116,19 @@ class Engine:
                      params: Optional[SamplingParams]) -> None:
         """Attach per-session sampling options (None → greedy argmax).
         Every path that emits a token for the session — prefill TTFT,
-        fused mixed-step rows, arena/dense decode — samples under them."""
-        if params is None or params.is_greedy:
+        fused mixed-step rows, arena/dense decode — samples under them.
+        Greedy sessions WITH a logit bias keep their params (the bias
+        applies before argmax); only fully-default options are dropped
+        back to the vectorized argmax row."""
+        if params is None or params.is_default:
             self.sampling.pop(session, None)
             self._rngs.pop(session, None)
             return
         self.sampling[session] = params
-        self._rngs[session] = sampling_mod.make_rng(session, params)
+        if params.is_greedy:
+            self._rngs.pop(session, None)
+        else:
+            self._rngs[session] = sampling_mod.make_rng(session, params)
 
     def _sample_rows(self, sessions: Sequence[int],
                      logits: np.ndarray) -> np.ndarray:
@@ -131,9 +141,28 @@ class Engine:
                       token_lists: Sequence[np.ndarray],
                       bucket: Optional[Tuple[int, int]] = None
                       ) -> Dict[int, int]:
-        """Short-prefill / re-prefill batch.  Pads to ``bucket`` (L, B)
-        when given (graph path), else to max length (standard path).
+        """Short-prefill / re-prefill batch.
+
+        With a packed executor and no pinned (L, B) ``bucket``, the
+        batch rides the packed token-bucket stream — arena-resident by
+        default (§6), zero whole-slot gather/scatter — via
+        :meth:`step_mixed` (which itself falls back to the dense path
+        for off-ladder totals or over-depth batches).  An explicit
+        ``bucket`` pins the dense (L, B) graph path.
         Returns {session: first_sampled_token}."""
+        if bucket is None and self.packed_executor is not None:
+            return self.step_mixed(list(zip(sessions, token_lists)),
+                                   []).tokens
+        return self._prefill_batch_dense(sessions, token_lists, bucket)
+
+    def _prefill_batch_dense(self, sessions: Sequence[int],
+                             token_lists: Sequence[np.ndarray],
+                             bucket: Optional[Tuple[int, int]] = None
+                             ) -> Dict[int, int]:
+        """Dense (L, B) grid prefill: pads to ``bucket`` when given
+        (graph path), else to max length; gathers whole arena slots and
+        scatters them back.  The fallback for SSM/SWA architectures,
+        pinned grid buckets, and off-ladder packed batches."""
         assert len(sessions) == len(token_lists)
         n = len(sessions)
         lens = [len(t) for t in token_lists]
@@ -239,8 +268,8 @@ class Engine:
         if bucket is None:
             out: Dict[int, int] = {}
             if prefills:
-                out.update(self.prefill_batch([s for s, _ in prefills],
-                                              [t for _, t in prefills]))
+                out.update(self._prefill_batch_dense(
+                    [s for s, _ in prefills], [t for _, t in prefills]))
             if decodes:
                 dec = self.decode_batch([s for s, _ in decodes],
                                         [t for _, t in decodes])
@@ -265,31 +294,58 @@ class Engine:
 
     def _run_packed(self, segments: List[packing.SegmentSpec],
                     bucket: int) -> MixedStepResult:
-        """Dispatch an assembled segment list as one packed stream."""
+        """Dispatch an assembled segment list as one packed stream.
+
+        Arena-resident by default (§6): the step reads cached history
+        and writes new KV rows directly in the arena through the slot
+        map — zero whole-slot gather/scatter.  ``arena_prefill=False``
+        keeps the legacy gathered-cache dispatch (the measurement
+        baseline)."""
         px = self.packed_executor
         n = len(segments)
         slots = [self.arena.alloc(seg.session) for seg in segments]
         b_max = px.max_seqs
-        # dummy cache rows (and tail-padding KV writes) reuse slot 0
+        # dummy cache rows (and tail-padding KV writes) reuse slot 0 —
+        # confined to the scratch row at S_max − 1 by their positions
         all_slots = slots + [slots[0]] * (b_max - n)
         stream = packing.assemble_mixed_stream(
             segments, bucket, b_max, park_position=self.arena.max_len - 1,
             pad_token=self.ecfg.pad_token)
+        sessions = [seg.session for seg in segments]
 
-        caches = self.arena.gather(all_slots)
-        t0 = time.perf_counter()
-        last, new_caches = px.mixed_step(
-            self.params, jnp.asarray(stream.tokens),
-            jnp.asarray(stream.positions), jnp.asarray(stream.seg_ids),
-            jnp.asarray(stream.cu_seqlens), jnp.asarray(stream.q_offsets),
-            jnp.asarray(stream.kv_lengths), caches,
-            jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
+        if self.ecfg.arena_prefill:
+            slot_map = np.asarray(all_slots, np.int32)
+            seg_slots = slot_map[stream.seg_ids]   # per-token arena slot
+            t0 = time.perf_counter()
+            last, new_arena = px.mixed_step_arena(
+                self.params, jnp.asarray(stream.tokens),
+                jnp.asarray(stream.positions), jnp.asarray(seg_slots),
+                jnp.asarray(slot_map), jnp.asarray(stream.cu_seqlens),
+                jnp.asarray(stream.q_offsets),
+                jnp.asarray(stream.kv_lengths), self.arena.arena,
+                jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
+
+            def writeback():
+                self.arena.replace(new_arena)
+        else:
+            caches = self.arena.gather(all_slots)
+            t0 = time.perf_counter()
+            last, new_caches = px.mixed_step(
+                self.params, jnp.asarray(stream.tokens),
+                jnp.asarray(stream.positions), jnp.asarray(stream.seg_ids),
+                jnp.asarray(stream.cu_seqlens),
+                jnp.asarray(stream.q_offsets),
+                jnp.asarray(stream.kv_lengths), caches,
+                jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
+
+            def writeback():
+                self.arena.scatter(slots, jax.tree.map(
+                    lambda a: a[:, :n], new_caches))
         last_np = np.asarray(last)
-        toks = self._sample_rows([seg.session for seg in segments], last_np)
+        toks = self._sample_rows(sessions, last_np)
         elapsed = time.perf_counter() - t0
         px.note_padding(stream.total_tokens, bucket)
-        self.arena.scatter(slots, jax.tree.map(
-            lambda a: a[:, :n], new_caches))
+        writeback()
         out: Dict[int, int] = {}
         for i, seg in enumerate(segments):
             self.arena.set_length(seg.session, seg.history + seg.length)
@@ -419,6 +475,9 @@ class Engine:
             "padded_tokens": self.executor.padded_tokens,
             "padding_efficiency": self.executor.padding_efficiency,
             "hit_rate_by_kind": self.executor.hit_rate_by_kind,
+            # whole-slot copy proof: the §5/§6 arena paths keep both at 0
+            "arena_gathers": self.arena.gather_calls,
+            "arena_scatters": self.arena.scatter_calls,
         }
         if self.decode_executor is not None:
             dx = self.decode_executor
@@ -439,6 +498,7 @@ class Engine:
                 "packed_padded_tokens": px.padded_tokens,
                 "packed_padding_efficiency": px.padding_efficiency,
                 "packed_dispatches": px.dispatches,
+                "packed_shapes_by_kind": px.shapes_by_kind(),
                 "mixed_steps": px.mixed_steps,
                 "decode_tokens_fused": px.decode_tokens_fused,
             })

@@ -64,6 +64,24 @@ def make_packed_prefill_fn(cfg: ModelConfig) -> Callable:
     return packed_step
 
 
+def make_packed_arena_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(T,), positions(T,), seg_slots(T,), slot_map(B,),
+    cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,), arena, last_idx(B,))
+    → (last_logits(B,V), new_arena).  Arena-resident packed prefill: the
+    KV arena is read in place (slot axis indexed inside the kernel) and
+    only the step's new KV rows are written."""
+
+    def packed_step(params, tokens, positions, seg_slots, slot_map,
+                    cu_seqlens, q_offsets, kv_lengths, arena, last_idx):
+        return tr.forward_packed_arena(
+            params, cfg, tokens=tokens, positions=positions,
+            seg_slots=seg_slots, slot_map=slot_map, cu_seqlens=cu_seqlens,
+            q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+            last_idx=last_idx)
+
+    return packed_step
+
+
 def make_decode_fn(cfg: ModelConfig) -> Callable:
     def decode_step(params, tokens, positions, caches):
         logits, new_caches, _ = tr.forward(
@@ -257,6 +275,12 @@ class PackedBucketExecutor(_ExecutorBase):
         self._packed = make_packed_prefill_fn(cfg)
         self._jit_packed = jax.jit(
             self._packed, donate_argnums=(7,) if self.donate_cache else ())
+        # arena-resident form (DESIGN.md §6): the KV arena rides as an
+        # in-place argument (donated) instead of gathered cache rows
+        self._packed_arena = make_packed_arena_fn(cfg)
+        self._jit_packed_arena = jax.jit(
+            self._packed_arena,
+            donate_argnums=(8,) if self.donate_cache else ())
         # continuous-batching counters: a mixed step fuses decode rows
         # into the same packed stream (and the SAME compiled executable —
         # the shape key is (token bucket, max_seqs), not the segment mix)
@@ -303,6 +327,34 @@ class PackedBucketExecutor(_ExecutorBase):
                                    cu_seqlens, q_offsets, kv_lengths,
                                    caches, last_idx)
 
+    def prefill_packed_arena(self, params, tokens, positions, seg_slots,
+                             slot_map, cu_seqlens, q_offsets, kv_lengths,
+                             arena, last_idx):
+        args = (params, tokens, positions, seg_slots, slot_map, cu_seqlens,
+                q_offsets, kv_lengths, arena, last_idx)
+        exe = self._get("packed_arena", self._jit_packed_arena, args)
+        return exe(*args)
+
+    def mixed_step_arena(self, params, tokens, positions, seg_slots,
+                         slot_map, cu_seqlens, q_offsets, kv_lengths,
+                         arena, last_idx, *, n_decode: int = 0):
+        """One arena-resident continuous-batching step (DESIGN.md §6):
+        same flat stream and fusion semantics as :meth:`mixed_step`, but
+        the KV arena is an ARGUMENT read in place — the kernel routes
+        each segment's KV blocks through ``slot_map`` and the step
+        writes only the new rows, so there is no whole-slot gather
+        before it and no scatter after it.  The compile cache stays
+        keyed on the token bucket (the arena shape is a constant); under
+        donation the arena buffers update in place and the caller swaps
+        the returned pytree into its KVArena."""
+        if n_decode:
+            self.mixed_steps += 1
+            self.decode_tokens_fused += int(n_decode)
+        return self.prefill_packed_arena(params, tokens, positions,
+                                         seg_slots, slot_map, cu_seqlens,
+                                         q_offsets, kv_lengths, arena,
+                                         last_idx)
+
     def precapture(self, params, arena_gather) -> float:
         """Compile every token bucket at init — |token_buckets| shapes
         total, vs |L|×|B| for the dense grid."""
@@ -320,6 +372,26 @@ class PackedBucketExecutor(_ExecutorBase):
             self._get("packed_prefill", self._jit_packed,
                       (params, tokens, positions, seg_ids, cu, off, kvl,
                        caches, last))
+        return time.perf_counter() - t0
+
+    def precapture_arena(self, params, arena) -> float:
+        """Compile every token bucket's arena-resident step at init —
+        |token_buckets| shapes total.  Lower + compile only; the arena
+        is never executed against (nor donated away)."""
+        t0 = time.perf_counter()
+        b = self.max_seqs
+        for t in self.token_buckets:
+            tokens = jnp.zeros((t,), jnp.int32)
+            positions = jnp.zeros((t,), jnp.int32)
+            seg_slots = jnp.zeros((t,), jnp.int32)
+            slot_map = jnp.zeros((b,), jnp.int32)
+            cu = jnp.zeros((b + 1,), jnp.int32)
+            off = jnp.zeros((b,), jnp.int32)
+            kvl = jnp.zeros((b,), jnp.int32)
+            last = jnp.zeros((b,), jnp.int32)
+            self._get("packed_arena", self._jit_packed_arena,
+                      (params, tokens, positions, seg_slots, slot_map, cu,
+                       off, kvl, arena, last))
         return time.perf_counter() - t0
 
 
@@ -390,5 +462,6 @@ class DecodeBucketExecutor(_ExecutorBase):
 
 __all__ = ["BucketExecutor", "PackedBucketExecutor", "DecodeBucketExecutor",
            "DEFAULT_TOKEN_BUCKETS", "DEFAULT_DECODE_BUCKETS",
-           "make_prefill_fn", "make_packed_prefill_fn", "make_decode_fn",
+           "make_prefill_fn", "make_packed_prefill_fn",
+           "make_packed_arena_fn", "make_decode_fn",
            "make_arena_decode_fn", "resolve_donation"]

@@ -17,6 +17,11 @@ Decode-only ticks skip even the gather: the arena-resident decode path
 kernel indexes the slot axis through a scalar-prefetched slot map, and
 :meth:`KVArena.replace` swaps the (donated, in-place) result back —
 per-token HBM traffic is O(cached_len), not O(S_max) slot copies.
+Packed prefill / mixed / chunk ticks do the same (DESIGN.md §6): the
+whole-slot gather/scatter survives only as the dense fallback for
+SSM/SWA architectures and off-ladder batches, and the
+``gather_calls`` / ``scatter_calls`` counters prove the hot paths
+never touch it.
 """
 from __future__ import annotations
 
@@ -41,6 +46,11 @@ class KVArena:
         self._free: List[int] = list(range(num_slots))
         self._session_slot: Dict[int, int] = {}
         self.lengths: Dict[int, int] = {}          # session -> tokens cached
+        # whole-slot copy counters: the arena-resident paths (decode §5,
+        # packed prefill §6) must keep these at ZERO on their hot ticks
+        # — the acceptance proof that no O(S_max) round-trips survive
+        self.gather_calls = 0
+        self.scatter_calls = 0
 
     # ----------------------------------------------------------- slots
     def alloc(self, session: int) -> int:
@@ -77,10 +87,12 @@ class KVArena:
 
     # ---------------------------------------------------------- gather
     def gather(self, slots: List[int]) -> Any:
+        self.gather_calls += 1
         idx = jnp.asarray(slots, jnp.int32)
         return jax.tree.map(lambda a: jnp.take(a, idx, axis=1), self.arena)
 
     def scatter(self, slots: List[int], batch_cache: Any) -> None:
+        self.scatter_calls += 1
         idx = jnp.asarray(slots, jnp.int32)
         self.arena = jax.tree.map(
             lambda a, b: a.at[:, idx].set(b.astype(a.dtype)),

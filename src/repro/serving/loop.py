@@ -82,9 +82,11 @@ class ServeLoop:
                deadline: Optional[float] = None,
                sampling: Optional[SamplingParams] = None) -> Request:
         """Queue one turn.  ``sampling`` attaches per-session decode
-        options (temperature / top-k); None or temperature 0 is greedy.
-        They apply to the TTFT token and every generated token, on the
-        fused mixed path and the bucketed decode path alike."""
+        options (temperature / top-k / top-p / logit-bias); None or
+        temperature 0 without a bias is greedy.  They apply to the TTFT
+        token and every generated token, on the fused mixed path and
+        the bucketed decode path alike — every path ends in the same
+        logits gather."""
         now = self.clock()
         # a new turn preempts any generation still running on the session
         self.active_decodes.pop(session, None)

@@ -3,7 +3,10 @@
 Every serving path ends in one `(B, V)` logits gather — prefill TTFT
 tokens, fused mixed-step rows, and arena-decode rows alike.  This module
 turns those rows into tokens under per-session options: greedy argmax
-(the default, temperature 0), temperature scaling, and top-k truncation.
+(the default, temperature 0), temperature scaling, top-k truncation,
+top-p (nucleus) truncation, and additive logit bias.  Logit bias applies
+BEFORE everything else — including greedy argmax, so a biased session
+can force/ban tokens even at temperature 0.
 
 Pure numpy on host-side logits: the sampled token feeds the NEXT step's
 token stream, which is assembled on host anyway, so sampling adds no
@@ -14,21 +17,37 @@ stream reproduces its tokens exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+BiasSpec = Union[Dict[int, float], Tuple[Tuple[int, float], ...]]
 
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """Per-session decode options.  temperature <= 0 means greedy."""
+    """Per-session decode options.  temperature <= 0 means greedy
+    (logit_bias still applies — biased argmax)."""
     temperature: float = 0.0
     top_k: Optional[int] = None
+    top_p: Optional[float] = None
     seed: Optional[int] = None
+    logit_bias: Optional[BiasSpec] = None   # {token_id: additive bias}
+
+    def __post_init__(self):
+        # normalize dict → sorted tuple so params stay hashable/frozen
+        if isinstance(self.logit_bias, dict):
+            object.__setattr__(self, "logit_bias",
+                               tuple(sorted(self.logit_bias.items())))
 
     @property
     def is_greedy(self) -> bool:
         return self.temperature <= 0.0
+
+    @property
+    def is_default(self) -> bool:
+        """True when plain vectorized argmax already does the job."""
+        return self.is_greedy and not self.logit_bias
 
 
 GREEDY = SamplingParams()
@@ -39,15 +58,38 @@ def make_rng(session: int, params: SamplingParams) -> np.random.Generator:
     return np.random.default_rng(seed)
 
 
+def _apply_bias(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
+    """Additive per-token bias, IN PLACE (out-of-range ids are ignored).
+    Callers pass a private float64 copy — no second allocation here."""
+    if not params.logit_bias:
+        return logits
+    for tok, bias in params.logit_bias:
+        if 0 <= int(tok) < logits.size:
+            logits[int(tok)] += bias
+    return logits
+
+
 def sample_token(logits: np.ndarray, params: SamplingParams,
                  rng: Optional[np.random.Generator] = None) -> int:
     """Sample one token from a (V,) logits row."""
+    scaled = _apply_bias(np.array(logits, np.float64), params)  # one copy
     if params.is_greedy or rng is None:
-        return int(np.argmax(logits))
-    scaled = logits.astype(np.float64) / params.temperature
+        return int(np.argmax(scaled))
+    scaled = scaled / params.temperature
     if params.top_k is not None and 0 < params.top_k < scaled.size:
         kth = np.partition(scaled, -params.top_k)[-params.top_k]
         scaled = np.where(scaled < kth, -np.inf, scaled)
+    if params.top_p is not None and 0.0 < params.top_p < 1.0:
+        # nucleus: keep the smallest prob-mass set covering top_p — a
+        # token survives iff the mass STRICTLY BEFORE it (descending
+        # order) is < top_p, so the first token always survives
+        shifted = scaled - scaled.max()
+        probs = np.exp(shifted)
+        probs /= probs.sum()
+        order = np.argsort(probs)[::-1]
+        before = np.cumsum(probs[order]) - probs[order]
+        drop = order[before >= params.top_p]
+        scaled[drop] = -np.inf
     scaled = scaled - scaled.max()
     probs = np.exp(scaled)
     probs /= probs.sum()
@@ -59,17 +101,18 @@ def sample_batch(logits: np.ndarray, sessions: Sequence[int],
                  rngs: Dict[int, np.random.Generator]) -> np.ndarray:
     """Sample one token per row of a (n, V) logits block.
 
-    Greedy rows (no per-session params) share one vectorized argmax;
-    sampled rows draw from their session's Generator.  Row order is the
-    caller's ``sessions`` order — the segment/batch layout is never
-    reordered by sampling.
+    Default rows (no per-session params) share one vectorized argmax;
+    rows with options go through :func:`sample_token` — bias, then
+    greedy argmax or the temperature / top-k / top-p draw from their
+    session's Generator.  Row order is the caller's ``sessions`` order —
+    the segment/batch layout is never reordered by sampling.
     """
     n = len(sessions)
     assert logits.shape[0] >= n, (logits.shape, n)
     out = np.argmax(logits[:n], axis=-1).astype(np.int64)
     for i, s in enumerate(sessions):
         sp = params.get(s)
-        if sp is not None and not sp.is_greedy:
+        if sp is not None and not sp.is_default:
             out[i] = sample_token(logits[i], sp, rngs.get(s))
     return out
 

@@ -65,7 +65,7 @@ class CostModel:
                                  self.weight_read + self.mem_time(l, h))
 
     # ------------------------------------------------------------- batch
-    def packed_batch_time(self, batch: Batch) -> float:
+    def packed_batch_time(self, batch: Batch, gather_rows: int = 0) -> float:
         """Token-bucket pricing for packed / mixed steps.
 
         A packed batch executes RAW per-request tokens (no per-request
@@ -77,7 +77,13 @@ class CostModel:
         the saving vs. a separate decode step is exactly one weight
         read + launch.  The stream runs as ONE fused kernel, so the
         roofline max() overlap survives even for heterogeneous mixes
-        (unlike co-batched separate kernels, §2.2)."""
+        (unlike co-batched separate kernels, §2.2).
+
+        The arena-resident step (§6) moves O(history + new) KV rows —
+        exactly the mem term above.  ``gather_rows`` bills the LEGACY
+        gathered-cache path: the whole-slot copies (2 · b_max · S_max
+        rows per step, gather out + scatter back) that the slot-map
+        kernel eliminated, at γ_r per row; 0 on the arena path."""
         fixed = self.graph_launch + self.graph_lookup
         comp = sum(self.comp_time(r.new_tokens, r.history_tokens)
                    for r in batch.requests)
@@ -86,14 +92,15 @@ class CostModel:
             for r in batch.requests)
         tail = max(0, (batch.token_bucket or 0) - batch.stream_tokens)
         comp += self.tail_coef * tail
-        mem += self.w_tok * tail
+        mem += self.w_tok * tail + self.gamma_r * gather_rows
         fused = batch.decode_tokens * (self.beta + self.w_tok
                                        + self.decode_per_seq)
         return fixed + max(comp, mem) + fused
 
-    def batch_time(self, batch: Batch, long_threshold: float = 256.0) -> float:
+    def batch_time(self, batch: Batch, long_threshold: float = 256.0,
+                   gather_rows: int = 0) -> float:
         if batch.is_packed:
-            return self.packed_batch_time(batch)
+            return self.packed_batch_time(batch, gather_rows)
         if batch.uses_graph:
             fixed = self.graph_launch + self.graph_lookup
             pad = batch.bucket_len
@@ -114,12 +121,14 @@ class CostModel:
             return fixed + comp + mem
         return fixed + max(comp, mem)
 
-    def chunk_time(self, w: ChunkWork) -> float:
+    def chunk_time(self, w: ChunkWork, gather_rows: int = 0) -> float:
         """One long-prefill chunk: C_l new tokens on top of
         (done + history) context.  A chunk riding a captured token-bucket
         shape (uses_graph) pays the graph launch, not the eager one;
         fused decode rows share the step's weight read — same pricing as
-        :meth:`packed_batch_time`'s fusion term."""
+        :meth:`packed_batch_time`'s fusion term.  ``gather_rows`` bills
+        the legacy whole-slot gather/scatter (γ_r per copied row) that
+        the arena-resident step (§6) eliminated; 0 on the arena path."""
         h = w.done_tokens + w.req.history_tokens
         fixed = self.graph_launch + self.graph_lookup if w.uses_graph \
             else self.launch
@@ -127,7 +136,8 @@ class CostModel:
                                    + self.decode_per_seq)
         return fixed + max(
             self.comp_time(w.chunk_tokens, h),
-            self.weight_read + self.mem_time(w.chunk_tokens, h)) + fused
+            self.weight_read + self.mem_time(w.chunk_tokens, h)
+            + self.gamma_r * gather_rows) + fused
 
     def decode_step_time(self, n_active: int) -> float:
         """Legacy decode pricing: per-step weight read + per-seq launch
@@ -158,10 +168,10 @@ class CostModel:
         return self.graph_launch + self.graph_lookup \
             + max(comp, mem) + self.decode_per_seq * n
 
-    def work_time(self, work) -> float:
+    def work_time(self, work, gather_rows: int = 0) -> float:
         if isinstance(work, ChunkWork):
-            return self.chunk_time(work)
-        return self.batch_time(work)
+            return self.chunk_time(work, gather_rows)
+        return self.batch_time(work, gather_rows=gather_rows)
 
 
 def decode_hbm_bytes_per_token(cached_len: int, s_max: int,
@@ -182,6 +192,32 @@ def decode_hbm_bytes_per_token(cached_len: int, s_max: int,
     if arena:
         return kv_row_bytes * (cached_len + 1)
     return kv_row_bytes * (2 * s_max + cached_len + 1)
+
+
+def packed_hbm_bytes_per_step(new_tokens: Sequence[int],
+                              histories: Sequence[int], s_max: int,
+                              n_rows: int, kv_row_bytes: float, *,
+                              arena: bool) -> float:
+    """Modeled KV HBM traffic of ONE packed prefill / mixed / chunk step
+    (the prefill sibling of :func:`decode_hbm_bytes_per_token`).
+
+    Every step reads each segment's attended prefix (history + new) and
+    writes its new rows.  arena=False (legacy gathered-cache path): the
+    step ALSO copies ``n_rows`` whole (S_max,) arena slots out before
+    the dispatch and scatters them back after — 2 · n_rows · S_max
+    slot-copy rows regardless of how few tokens the bucket holds, the
+    exact O(b_max · S_max) round-trip the slot-map kernel (§6) kills.
+    arena=True: only the O(history + new) rows move.
+
+    kv_row_bytes: bytes of one cached token's K+V across all layers
+    (2 · layers · Hkv · D · dtype_bytes).  Pure arithmetic so the
+    benchmark, the simulator, and the docs all quote the same number.
+    """
+    useful = sum(h + l for h, l in zip(histories, new_tokens))  # reads
+    useful += sum(new_tokens)                                   # writes
+    if arena:
+        return kv_row_bytes * useful
+    return kv_row_bytes * (useful + 2 * n_rows * s_max)
 
 
 def _scaled(params_b: float) -> CostModel:

@@ -41,6 +41,13 @@ class SimConfig:
     # (DESIGN.md §5), mirroring the real engine's DecodeBucketExecutor;
     # overflow falls back to the dense per-count pricing like the engine
     decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS
+    # packed prefill / mixed / chunk ticks run arena-resident (§6):
+    # O(history + new) KV rows per step.  arena_prefill=False mirrors
+    # the legacy engine — every packed step pays the whole-slot
+    # gather/scatter round-trip of 2 · packed_seqs · arena_s_max rows
+    arena_prefill: bool = True
+    packed_seqs: int = 16          # gathered cache rows (b_max)
+    arena_s_max: int = 256         # arena slot depth S_max
 
 
 class _Instance:
@@ -200,7 +207,16 @@ class ClusterSim:
             work.uses_graph = (ladder is not None and
                                ladder.bucket_for(work.chunk_tokens)
                                is not None)
-        service = self.cost.work_time(work) * inst.speed
+        # §6 routing: packed/mixed/chunk ticks are arena-resident (no
+        # slot copies); the legacy config bills the gather/scatter
+        # round-trip the slot-map kernel eliminated
+        gather_rows = 0
+        if not self.cfg.arena_prefill and (
+                (isinstance(work, Batch) and work.is_packed)
+                or (isinstance(work, ChunkWork) and work.uses_graph)):
+            gather_rows = 2 * self.cfg.packed_seqs * self.cfg.arena_s_max
+        service = self.cost.work_time(work, gather_rows=gather_rows) \
+            * inst.speed
         if self.cfg.mode == "mix" and inst.decode_sessions:
             # decode tokens fused into a packed step already paid inside
             # the work's pricing (they share the weight read); sessions

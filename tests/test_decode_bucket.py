@@ -251,3 +251,68 @@ def test_sampling_seeded_reproducible_in_engine():
         f = eng.prefill_batch([0], [toks])
         runs.append(eng.decode_batch([0], [f[0]], steps=4)[0])
     assert runs[0] == runs[1]                      # same seed, same stream
+
+
+def test_sampling_top_p_truncates_support():
+    """Nucleus sampling: with one dominant token, top_p below its prob
+    mass keeps only that token; larger top_p widens the support."""
+    logits = np.array([4.0, 3.0, 2.9, -50.0])
+    rng = make_rng(0, SamplingParams(seed=1))
+    tight = {sample_token(logits, SamplingParams(temperature=1.0,
+                                                 top_p=0.5), rng)
+             for _ in range(50)}
+    assert tight == {0}                    # p(0) ≈ 0.66 covers 0.5 alone
+    rng = make_rng(0, SamplingParams(seed=2))
+    flat = np.array([2.0, 1.9, 1.8, -50.0])
+    wide = {sample_token(flat, SamplingParams(temperature=1.0,
+                                              top_p=0.999), rng)
+            for _ in range(200)}
+    assert wide == {0, 1, 2}               # tail token stays excluded
+
+
+def test_sampling_logit_bias_applies_even_when_greedy():
+    """Logit bias lands before EVERY draw — including greedy argmax —
+    so a banned token never surfaces and a boosted one can win."""
+    logits = np.array([0.1, 2.0, -1.0, 0.5])
+    assert sample_token(logits, SamplingParams()) == 1
+    ban = SamplingParams(logit_bias={1: -100.0})
+    assert not ban.is_default and ban.is_greedy
+    assert sample_token(logits, ban) == 3
+    boost = SamplingParams(logit_bias={2: +100.0})
+    assert sample_token(logits, boost) == 2
+    # and under temperature sampling the banned token never appears
+    rng = make_rng(0, SamplingParams(seed=5))
+    draws = {sample_token(logits, SamplingParams(temperature=1.0,
+                                                 logit_bias={1: -1e9},
+                                                 seed=5), rng)
+             for _ in range(50)}
+    assert 1 not in draws
+
+
+def test_sampling_top_p_bias_replayable_through_serve_loop():
+    """Satellite acceptance: top-p + logit-bias options threaded through
+    ServeLoop.submit produce a REPLAYABLE stream — two identical runs,
+    one generated transcript — and the bias holds on every token."""
+    from repro.core import H200_QWEN32B, Variant, make_policy
+    from repro.serving.loop import ServeLoop
+
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(59)
+    params, _ = tr.init_params(cfg, KEY)
+    toks = rng.integers(0, cfg.vocab_size, 7)
+    banned = 3
+    sp = SamplingParams(temperature=0.8, top_k=16, top_p=0.9, seed=71,
+                        logit_bias={banned: -1e9})
+    runs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64,
+                                               packed=True,
+                                               token_buckets=(64, 128)))
+        loop = ServeLoop(eng, make_policy(Variant("pla_full"),
+                                          H200_QWEN32B, threshold=32),
+                         slo_ttft=30.0)
+        loop.submit(0, toks, decode_tokens=5, sampling=sp)
+        loop.run_until_idle(max_wall=120.0)
+        runs.append(list(loop.generated[0]))
+    assert runs[0] == runs[1] and len(runs[0]) == 6
+    assert banned not in runs[0]

@@ -1,0 +1,302 @@
+"""Arena-resident packed prefill (DESIGN.md §6): kernel-level parity of
+the slot-map ragged flash prefill against the dense oracle (GQA/MHA/MQA,
+ragged histories incl. history + new == S_max, decode segments),
+engine-level parity of the arena path vs the gathered-cache packed path
+and the dense oracle (logits + KV to 1e-5, interpret mode included),
+zero whole-slot gather/scatter on every packed/mixed/chunk tick, and the
+pad-slot aliasing regression — padded segments only ever touch the
+S_max − 1 scratch row."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.kernels.ragged_prefill import ragged_prefill_arena
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(27)
+TOL = dict(atol=1e-5, rtol=0)
+TOL_INTERPRET = dict(atol=2e-5, rtol=0)
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def make_stream(lens, hists, s):
+    """(cu, off, kvl) segment vectors for a packed stream."""
+    b = len(lens)
+    cu = np.zeros(b + 1, np.int32)
+    cu[1:] = np.cumsum(lens)
+    off = np.asarray(hists, np.int32)
+    kvl = off + np.asarray(lens, np.int32)
+    assert (kvl <= s).all()
+    return jnp.asarray(cu), jnp.asarray(off), jnp.asarray(kvl)
+
+
+# ----------------------------------------------------------- kernel level
+
+
+@pytest.mark.parametrize("nslots,s,hq,hkv,d,bq,bk", [
+    (8, 64, 8, 2, 32, 16, 16),    # GQA
+    (5, 96, 4, 4, 64, 8, 32),     # MHA
+    (6, 40, 8, 1, 16, 8, 32),     # MQA, block_k snapped to a divisor of S
+])
+def test_arena_prefill_kernel_matches_oracle(nslots, s, hq, hkv, d, bq, bk):
+    ks = jax.random.split(KEY, 4)
+    lens = [5, 9, 4]
+    hists = [7, 0, 12]
+    t = sum(lens) + 3                          # bucket tail rows
+    q = rand(ks[0], (t, hq, d))
+    k = rand(ks[1], (nslots, s, hkv, d))
+    v = rand(ks[2], (nslots, s, hkv, d))
+    slot = jax.random.permutation(ks[3], nslots)[:len(lens)]
+    cu, off, kvl = make_stream(lens, hists, s)
+    out = ragged_prefill_arena(q, k, v, slot, cu, off, kvl,
+                               block_q=bq, block_k=bk)
+    want = ref.ref_ragged_prefill_arena(q, k, v, slot, cu, off, kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # bucket tail rows belong to no segment and come out exactly zero
+    np.testing.assert_array_equal(np.asarray(out)[sum(lens):], 0.0)
+
+
+def test_arena_prefill_kernel_full_cache():
+    """history + new == S_max: the deepest segment reads every valid
+    block and nothing past the arena edge."""
+    ks = jax.random.split(KEY, 4)
+    nslots, s, hq, hkv, d = 4, 32, 4, 2, 16
+    lens, hists = [6, 4], [s - 6, 0]
+    t = sum(lens)
+    q = rand(ks[0], (t, hq, d))
+    k = rand(ks[1], (nslots, s, hkv, d))
+    v = rand(ks[2], (nslots, s, hkv, d))
+    slot = jnp.array([3, 0], jnp.int32)
+    cu, off, kvl = make_stream(lens, hists, s)
+    assert int(kvl[0]) == s
+    out = ragged_prefill_arena(q, k, v, slot, cu, off, kvl,
+                               block_q=8, block_k=8)
+    want = ref.ref_ragged_prefill_arena(q, k, v, slot, cu, off, kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_arena_prefill_kernel_decode_segments():
+    """Length-1 decode segments (offset = full cached history) attend
+    over exactly history + 1 keys through the slot-map index maps."""
+    ks = jax.random.split(KEY, 4)
+    nslots, s, hq, hkv, d = 6, 48, 8, 2, 32
+    lens, hists = [7, 1, 1], [3, 20, 0]        # prefill + two decodes
+    t = sum(lens) + 2
+    q = rand(ks[0], (t, hq, d))
+    k = rand(ks[1], (nslots, s, hkv, d))
+    v = rand(ks[2], (nslots, s, hkv, d))
+    slot = jnp.array([5, 1, 3], jnp.int32)
+    cu, off, kvl = make_stream(lens, hists, s)
+    out = ragged_prefill_arena(q, k, v, slot, cu, off, kvl,
+                               block_q=4, block_k=16)
+    want = ref.ref_ragged_prefill_arena(q, k, v, slot, cu, off, kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ----------------------------------------------------------- engine level
+
+CONFIGS = {
+    "qwen3-4b": lambda: get_smoke("qwen3-4b"),
+    "mha": lambda: get_smoke("qwen3-4b").replace(name="mha-smoke",
+                                                 num_kv_heads=4),
+}
+
+
+def build_pair(cfg):
+    """(arena engine, gathered-cache packed engine) on shared params."""
+    params, _ = tr.init_params(cfg, KEY)
+    kw = dict(num_slots=8, max_len=128, chunk_tokens=32, packed=True,
+              token_buckets=(64, 128, 256))
+    eng = Engine(cfg, params, EngineConfig(**kw, arena_prefill=True))
+    ora = Engine(cfg, params, EngineConfig(**kw, arena_prefill=False))
+    return params, eng, ora
+
+
+def assert_kv_parity(eng: Engine, ora: Engine, sessions, tol=TOL):
+    for s in sessions:
+        n = eng.arena.length(s)
+        assert n == ora.arena.length(s), (s, n, ora.arena.length(s))
+        sm, so = eng.arena.slot_of(s), ora.arena.slot_of(s)
+        for cm, co in zip(eng.arena.arena, ora.arena.arena):
+            for part in ("k", "v"):
+                np.testing.assert_allclose(
+                    np.asarray(cm[part][:, sm, :n]),
+                    np.asarray(co[part][:, so, :n]),
+                    err_msg=f"session {s} cache {part}", **tol)
+
+
+@pytest.mark.parametrize("arch", list(CONFIGS))
+def test_packed_arena_parity(arch):
+    """Prefill batch, re-prefill, long chunk, and fused decode rows on
+    the arena path reproduce the gathered-cache packed path token for
+    token — with ZERO whole-slot gather/scatter calls."""
+    cfg = CONFIGS[arch]()
+    rng = np.random.default_rng(11)
+    _, eng, ora = build_pair(cfg)
+    seqs = [rng.integers(0, cfg.vocab_size, l) for l in (9, 5, 14)]
+    f1 = eng.prefill_batch([2, 3, 4], seqs)
+    f2 = ora.prefill_batch([2, 3, 4], seqs)
+    assert f1 == f2
+    long_toks = rng.integers(0, cfg.vocab_size, 50)
+    for e in (eng, ora):
+        e.prefill_batch([5], [long_toks[:32]])
+    # one mixed tick: fresh prefill + long chunk + three decode rows
+    t_a = rng.integers(0, cfg.vocab_size, 7)
+    decodes = [(s, f1[s]) for s in (2, 3, 4)]
+    r1 = eng.step_mixed([(0, t_a), (5, long_toks[32:])], decodes)
+    r2 = ora.step_mixed([(0, t_a), (5, long_toks[32:])], decodes)
+    assert r1.fused and r2.fused
+    assert r1.tokens == r2.tokens
+    for s in (0, 2, 3, 4, 5):
+        np.testing.assert_allclose(eng.last_logits[s], ora.last_logits[s],
+                                   err_msg=f"session {s} logits", **TOL)
+    assert_kv_parity(eng, ora, (0, 2, 3, 4, 5))
+    # the §6 acceptance proof: no whole-slot copies on the arena engine
+    assert eng.arena.gather_calls == 0 and eng.arena.scatter_calls == 0
+    assert ora.arena.gather_calls > 0 and ora.arena.scatter_calls > 0
+    kinds = eng.packed_executor.shapes_by_kind()
+    assert "packed_arena" in kinds and "packed_prefill" not in kinds
+
+
+def test_packed_arena_parity_interpret_mode():
+    """The same parity against the dense (unpacked) oracle engine with
+    the arena Pallas kernel in interpret mode: slot-map index maps and
+    length-clamped block fetches match the oracle."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(13)
+    params, _ = tr.init_params(cfg, KEY)
+    kernel_ops.set_backend("pallas")
+    try:
+        eng = Engine(cfg, params, EngineConfig(
+            num_slots=8, max_len=128, chunk_tokens=32, packed=True,
+            token_buckets=(64, 128, 256)))
+        ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+        seqs = [rng.integers(0, cfg.vocab_size, l) for l in (7, 18)]
+        f1 = eng.prefill_batch([0, 1], seqs)
+        f2 = ora.prefill_batch([0, 1], seqs)
+        assert f1 == f2
+        # re-prefill on top of cached history, fused with a decode row
+        t2 = rng.integers(0, cfg.vocab_size, 6)
+        r1 = eng.step_mixed([(0, t2)], [(1, f1[1])])
+        tok0 = ora.prefill_batch([0], [t2])[0]
+        tok1 = ora.decode_batch([1], [f2[1]])[1][0]
+        assert r1.tokens == {0: tok0, 1: tok1}
+        for s in (0, 1):
+            np.testing.assert_allclose(eng.last_logits[s],
+                                       ora.last_logits[s], **TOL_INTERPRET)
+        assert_kv_parity(eng, ora, (0, 1), tol=TOL_INTERPRET)
+        assert eng.arena.gather_calls == 0
+    finally:
+        kernel_ops.set_backend(None)
+
+
+def test_packed_ticks_run_zero_slot_copies():
+    """End to end: prefill batches, chunked long prefill, mixed ticks,
+    and bucketed decode on an attention model never call arena.gather /
+    arena.scatter — the engine stats expose the proof counters."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(17)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=8, max_len=128, chunk_tokens=32, packed=True,
+        token_buckets=(64, 128, 256)))
+    f = eng.prefill_batch([0, 1], [rng.integers(0, cfg.vocab_size, 6)
+                                   for _ in range(2)])
+    eng.prefill_long(2, rng.integers(0, cfg.vocab_size, 80))
+    eng.step_mixed([(3, rng.integers(0, cfg.vocab_size, 5))],
+                   [(0, f[0]), (1, f[1])])
+    eng.decode_batch([0, 1], [f[0], f[1]])
+    st = eng.stats()
+    assert st["arena_gathers"] == 0 and st["arena_scatters"] == 0
+    assert st["dense_dispatches"] == 0
+    assert st["packed_dispatches"] >= 5      # 1 + 3 chunks + 1 mixed
+
+
+def test_dense_fallbacks_still_gather():
+    """Off-ladder packed totals and SSM architectures keep the dense
+    gather path — bit-identical routing to the pre-§6 engine."""
+    rng = np.random.default_rng(19)
+    cfg = CONFIGS["qwen3-4b"]()
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           packed=True,
+                                           token_buckets=(16,)))
+    eng.prefill_packed([0], [rng.integers(0, cfg.vocab_size, 30)])
+    assert eng.packed_executor.total_tokens == 0     # off-ladder
+    assert eng.executor.total_tokens == 30           # dense served it
+    assert eng.arena.gather_calls == 1 and eng.arena.scatter_calls == 1
+    # mamba: packed unsupported → no packed executor, dense path intact
+    mcfg = get_smoke("mamba2-2.7b")
+    mparams, _ = tr.init_params(mcfg, KEY)
+    meng = Engine(mcfg, mparams, EngineConfig(num_slots=4, max_len=64,
+                                              packed=True))
+    assert meng.packed_executor is None
+    out = meng.prefill_batch([0], [rng.integers(0, mcfg.vocab_size, 6)])
+    assert 0 in out
+    assert meng.arena.gather_calls == 1
+
+
+# ------------------------------------------------- pad-slot aliasing
+
+
+def snapshot(eng):
+    return jax.tree.map(np.asarray, eng.arena.arena)
+
+
+def changed_rows(before, after, slot):
+    """Set of cache positions whose K or V rows differ for ``slot``."""
+    rows = set()
+    for cb, ca in zip(before, after):
+        for part in ("k", "v"):
+            diff = np.any(np.asarray(cb[part][:, slot])
+                          != np.asarray(ca[part][:, slot]), axis=(0, 2, 3))
+            rows.update(np.nonzero(diff)[0].tolist())
+    return rows
+
+
+@pytest.mark.parametrize("path", ["arena", "gather", "grid"])
+def test_pad_segments_confined_to_scratch_row(path):
+    """Regression for the pad-slot aliasing hazard: dummy rows reuse
+    slots[0], so their junk KV writes MUST land on the S_max − 1 scratch
+    row only — never a live cache entry — and sessions outside the batch
+    must be untouched, on the arena path, the gathered packed path, and
+    the dense (L, B) grid path alike."""
+    cfg = CONFIGS["qwen3-4b"]()
+    rng = np.random.default_rng(23)
+    params, _ = tr.init_params(cfg, KEY)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=8, max_len=64, packed=(path != "grid"),
+        arena_prefill=(path == "arena"), token_buckets=(64, 128)))
+    # a live victim session with cached history, NOT in the batch
+    victim_toks = rng.integers(0, cfg.vocab_size, 10)
+    eng.prefill_batch([9], [victim_toks])
+    vslot = eng.arena.slot_of(9)
+    before = snapshot(eng)
+    toks = rng.integers(0, cfg.vocab_size, 5)
+    if path == "grid":
+        # explicit (L, B) bucket with depth padding: 1 request, 2 rows
+        eng.prefill_batch([0], [toks], bucket=(8, 2))
+    else:
+        eng.prefill_batch([0], [toks])       # b_max − 1 dummy rows
+    after = snapshot(eng)
+    park = eng.arena.max_len - 1
+    slot0 = eng.arena.slot_of(0)
+    assert changed_rows(before, after, vslot) == set(), \
+        "pad rows corrupted a live slot outside the batch"
+    assert changed_rows(before, after, slot0) <= set(range(len(toks))) \
+        | {park}, "batch slot written outside its new rows + scratch row"
+    # the victim's cached prefix still decodes correctly
+    n = eng.arena.length(9)
+    assert n == 10
+    for cb, ca in zip(before, after):
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(cb[part][:, vslot, :n],
+                                          ca[part][:, vslot, :n])
