@@ -26,6 +26,8 @@ BENCH_DECODE_JSON = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_decode.json")
 BENCH_PREFILL_JSON = os.path.join(os.path.dirname(__file__), "..",
                                   "BENCH_prefill.json")
+BENCH_WINDOW_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                 "BENCH_window.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -388,6 +390,119 @@ def prefill_scenario(write: bool = True) -> List[Dict]:
     return rows
 
 
+def _drive_window(windowed: bool, cfg, params, n_sessions: int = 3,
+                  max_len: int = 128) -> Dict:
+    """Sliding-window scenario (DESIGN.md §7): chat sessions decode far
+    past the window (cached_len ≫ window) with periodic short prefill
+    bursts riding along.
+
+    windowed=True: the rolling windowed arena — slots are window+margin
+    deep, written modularly, the windowed slot-map kernels stream
+    O(min(cached, window)) rows per token, zero whole-slot copies.
+    windowed=False: the dense (L, B) baseline — full-depth slots, the
+    window enforced by masking only, every tick gathering and
+    scattering whole O(S_max) slots."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+    from repro.sim.costmodel import decode_hbm_bytes_per_token
+
+    rng = np.random.default_rng(11)
+    if windowed:
+        ecfg = EngineConfig(num_slots=8, max_len=max_len, chunk_tokens=16,
+                            packed_max_seqs=4, token_buckets=(16, 32),
+                            decode_buckets=(1, 2, 4))
+    else:
+        ecfg = EngineConfig(num_slots=8, max_len=max_len, packed=False,
+                            arena_decode=False)
+    eng = Engine(cfg, params, ecfg)
+    depth = eng.arena.arena[0]["k"].shape[2]   # actual slot depth
+    kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
+                    * np.dtype(cfg.np_dtype).itemsize)
+    # streamed rows per decode token: the rolling arena reads its valid
+    # slot rows (≤ depth = window + margin); the dense path's masked
+    # reads touch min(cached, window) rows of the whole-slot copy
+    eff_window = depth if windowed else cfg.sliding_window
+
+    prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in range(n_sessions)]
+    budgets = {s: 40 + 15 * s for s in range(n_sessions)}  # staggered drain
+    last = {}
+    for s in range(n_sessions):
+        last.update(eng.prefill_batch([s], [prompts[s]]))
+    active = dict(budgets)
+    tick_bytes, tick_tokens, rounds, burst_sess = 0.0, 0, 0, 100
+    t0 = time.perf_counter()
+    while active:
+        sessions = sorted(active)
+        if rounds % 10 == 5:          # periodic short prefill burst
+            burst = [(burst_sess, rng.integers(0, cfg.vocab_size, 6))]
+            burst_sess += 1
+            if windowed:
+                eng.step_mixed(burst, [])
+            else:
+                eng.prefill_batch([s for s, _ in burst],
+                                  [t for _, t in burst])
+            for s, _ in burst:
+                eng.close_session(s)
+        for s in sessions:
+            tick_bytes += decode_hbm_bytes_per_token(
+                eng.history(s), max_len, kv_row_bytes, arena=windowed,
+                window=eff_window)
+        tick_tokens += len(sessions)
+        dec = eng.decode_batch(sessions, [last[s] for s in sessions])
+        for s in sessions:
+            last[s] = dec[s][0]
+            active[s] -= 1
+            if active[s] <= 0:
+                del active[s]
+        rounds += 1
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    max_cached = max(eng.history(s) for s in range(n_sessions))
+    return {
+        "window": cfg.sliding_window,
+        "slot_depth": depth,
+        "max_cached_len": max_cached,
+        "hbm_bytes_per_decode_token": round(
+            tick_bytes / max(tick_tokens, 1), 1),
+        "arena_gathers": st["arena_gathers"],
+        "arena_scatters": st["arena_scatters"],
+        "decode_shapes": st.get("decode_shapes",
+                                eng.executor.shapes_by_kind()
+                                .get("decode", 0)),
+        "compiled_shapes": st.get("packed_shapes", 0)
+        + st["captured_shapes"] + st.get("decode_shapes", 0),
+        "rounds": rounds,
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def window_scenario(write: bool = True) -> List[Dict]:
+    """The BENCH_window.json rows: rolling windowed arena (§7) vs the
+    dense full-depth baseline on long-decoding SWA sessions."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("mixtral-8x7b")            # sliding_window = 32
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    new = _drive_window(True, cfg, params)
+    old = _drive_window(False, cfg, params)
+    rows = [
+        {"bench": "window_arena", "tag": "windowed", "mean_ms": 0.0, **new},
+        {"bench": "window_arena", "tag": "dense", "mean_ms": 0.0, **old},
+        {"bench": "window_arena", "tag": "gain", "mean_ms": 0.0,
+         "hbm_reduction_x": round(
+             old["hbm_bytes_per_decode_token"]
+             / max(new["hbm_bytes_per_decode_token"], 1e-9), 2)},
+    ]
+    if write:
+        with open(BENCH_WINDOW_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -401,6 +516,7 @@ def run() -> List[Dict]:
     rows.extend(_continuous_batching())
     rows.extend(decode_scenario())
     rows.extend(prefill_scenario())
+    rows.extend(window_scenario())
     return rows
 
 
@@ -437,12 +553,32 @@ def _decode_smoke() -> None:
     print("decode-bucket smoke OK")
 
 
+def _window_smoke() -> None:
+    """CI smoke: the sliding-window acceptance criteria — the rolling
+    windowed arena keeps gather/scatter at zero, bounds its decode
+    compile cache by the ladder, and models ≥2× lower HBM bytes/token
+    than the dense full-depth path at cached_len ≫ window."""
+    rows = window_scenario()
+    for r in rows:
+        print(r)
+    new, old, gain = rows
+    assert new["max_cached_len"] > 2 * new["window"], new
+    assert new["arena_gathers"] == 0 and new["arena_scatters"] == 0, new
+    assert old["arena_gathers"] > 0 and old["arena_scatters"] > 0, old
+    assert new["slot_depth"] < old["slot_depth"], (new, old)
+    assert gain["hbm_reduction_x"] >= 2.0, gain
+    print("windowed-arena smoke OK")
+
+
 if __name__ == "__main__":
     # CI smoke entries (invoke with PYTHONPATH=src:.): `prefill` runs
-    # the short-prefill-flood scenario, anything else the decode-heavy
-    # one — each asserting its acceptance criteria
+    # the short-prefill-flood scenario, `window` the sliding-window
+    # scenario, anything else the decode-heavy one — each asserting its
+    # acceptance criteria
     import sys
     if "prefill" in sys.argv[1:]:
         _prefill_smoke()
+    elif "window" in sys.argv[1:]:
+        _window_smoke()
     else:
         _decode_smoke()

@@ -30,6 +30,7 @@ in-place point).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -143,12 +144,27 @@ def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale: float, block_k: int,
-                  n_kv_blocks: int):
+                  m_ref, l_ref, acc_ref, *, scale: float,
+                  window: Optional[int], depth: int, block_k: int,
+                  n_kv_blocks: int, n_phys_blocks: int):
     del slot_ref                     # consumed by the BlockSpec index maps
     b = pl.program_id(0)
     ki = pl.program_id(2)
     kv_len = len_ref[b]
+    if window is None:
+        n_valid = kv_len
+        k_start = ki * block_k
+    else:
+        # rolling arena: only the last min(kv_len, depth) slots are
+        # valid, and the in-window ones form a CYCLIC contiguous range
+        # starting at the oldest in-window position's slot — iteration
+        # index ki walks that range's blocks (mirroring the index map),
+        # so only ceil(window/block_k)+1 blocks stream per row
+        n_valid = jnp.minimum(kv_len, depth)
+        w_eff = jnp.minimum(window, kv_len)
+        s0 = (kv_len - w_eff) % depth
+        phys = (s0 // block_k + ki) % n_phys_blocks
+        k_start = phys * block_k
 
     @pl.when(ki == 0)
     def _init():
@@ -156,9 +172,7 @@ def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    k_start = ki * block_k
-
-    @pl.when(k_start < kv_len)
+    @pl.when(k_start < n_valid)
     def _compute():
         q = q_ref[0, 0]                                        # (rep, D)
         k = k_ref[0, :, 0, :]                                  # (bk, D)
@@ -166,9 +180,16 @@ def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale        # (rep, bk)
-        kpos = k_start + jax.lax.broadcasted_iota(
+        slot = k_start + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        mask = kpos < kv_len
+        mask = slot < n_valid
+        if window is not None:
+            # rolling slot s holds the newest position < kv_len congruent
+            # to s mod depth; the query sits at kv_len − 1, so keep only
+            # keys inside its window (qpos − window, qpos]
+            wraps = jnp.maximum(kv_len - 1 - slot, 0) // depth
+            kpos = slot + wraps * depth
+            mask = jnp.logical_and(mask, kpos > kv_len - 1 - window)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[:, :1]
         l_prev = l_ref[:, :1]
@@ -190,10 +211,11 @@ def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
 def decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
                       slot_map: jax.Array, lengths: jax.Array, *,
-                      block_k: int = 512,
+                      window: Optional[int] = None, block_k: int = 512,
                       interpret: bool = True) -> jax.Array:
     """Arena-resident flash decode.
 
@@ -206,25 +228,48 @@ def decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
     BlockSpec index maps via scalar prefetch, so only ``lengths[b]``
     cache rows per sequence move HBM→VMEM — never whole slots and never
     slots the batch doesn't own.
+
+    ``window``: sliding-window width.  The arena is then a ROLLING cache
+    (slot depth S = window + margin, written modularly at position % S):
+    block iteration clamps to the last ceil(min(lengths, S)/block_k)
+    valid blocks, slot positions are reconstructed modularly, and only
+    keys inside the query's window survive the mask — O(min(cached,
+    window)) HBM rows per generated token instead of O(cached).
     """
     b, hq, d = q.shape
     s, hkv = k.shape[1], k.shape[2]
     rep = hq // hkv
     block_k = _largest_divisor(s, block_k)
     nk = s // block_k
+    # windowed form: the in-window slots are a cyclic contiguous range
+    # of ≤ window rows, so the kv grid axis shrinks to the blocks that
+    # range can touch — the walk starts at the oldest in-window slot's
+    # block and wraps modularly (see kv_map/_arena_kernel)
+    nk_iter = nk if window is None else min(nk, (window - 1) // block_k + 2)
     qg = q.reshape(b, hkv, rep, d)
 
     def kv_map(bb, g, ki, slot_ref, len_ref):
         # clamp past-the-length blocks to the last valid one: a repeated
-        # block index is not re-fetched, so invalid blocks cost no DMA
-        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
-        return (slot_ref[bb], jnp.minimum(ki, last), g, 0)
+        # block index is not re-fetched, so invalid blocks cost no DMA.
+        if window is None:
+            last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+            return (slot_ref[bb], jnp.minimum(ki, last), g, 0)
+        kvl = len_ref[bb]
+        n_valid = jnp.minimum(kvl, s)
+        w_eff = jnp.minimum(window, kvl)
+        s0 = (kvl - w_eff) % s          # oldest in-window slot
+        phys = (s0 // block_k + ki) % nk
+        # pre-wraparound (kvl < s) the walk cannot wrap, so clamping to
+        # the last valid block only retargets blocks the kernel skips
+        last = jnp.maximum(n_valid - 1, 0) // block_k
+        return (slot_ref[bb], jnp.minimum(phys, last), g, 0)
 
-    kern = functools.partial(_arena_kernel, scale=d ** -0.5,
-                             block_k=block_k, n_kv_blocks=nk)
+    kern = functools.partial(_arena_kernel, scale=d ** -0.5, window=window,
+                             depth=s, block_k=block_k, n_kv_blocks=nk_iter,
+                             n_phys_blocks=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, nk),
+        grid=(b, hkv, nk_iter),
         in_specs=[
             pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki, *_: (bb, g, 0, 0)),
             pl.BlockSpec((1, block_k, 1, d), kv_map),

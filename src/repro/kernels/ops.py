@@ -71,20 +71,23 @@ def ragged_mha(q, k, v, cu_seqlens, q_offsets=None, kv_lengths=None, *,
 
 
 def ragged_mha_arena(q, k, v, slot_map, cu_seqlens, q_offsets=None,
-                     kv_lengths=None, *, causal=True, block_q=128,
-                     block_k=128):
+                     kv_lengths=None, *, causal=True, window=None,
+                     block_q=128, block_k=128):
     """Arena-resident packed prefill attention.  q: (T, Hq, D) flat
     stream; k, v: (N_slots, S_max, Hkv, D) full arenas; slot_map: (B,)
-    arena slot per segment.  See kernels.ragged_prefill."""
+    arena slot per segment.  ``window`` selects the rolling
+    (window-deep, modularly written) arena form.  See
+    kernels.ragged_prefill."""
     if _use_pallas():
         return _ragged_arena_pallas(q, k, v, slot_map, cu_seqlens,
                                     q_offsets, kv_lengths, causal=causal,
-                                    block_q=block_q, block_k=block_k,
+                                    window=window, block_q=block_q,
+                                    block_k=block_k,
                                     interpret=not _on_tpu())
     return ref_mod.ref_ragged_prefill_arena(q, k, v, slot_map, cu_seqlens,
                                             q_offsets=q_offsets,
                                             kv_lengths=kv_lengths,
-                                            causal=causal)
+                                            causal=causal, window=window)
 
 
 def decode(q, k, v, lengths, *, block_k=512):
@@ -95,15 +98,17 @@ def decode(q, k, v, lengths, *, block_k=512):
     return ref_mod.ref_decode_attn(q, k, v, lengths)
 
 
-def decode_arena(q, k, v, slot_map, lengths, *, block_k=512):
+def decode_arena(q, k, v, slot_map, lengths, *, window=None, block_k=512):
     """Arena-resident single-token flash decode.  q: (B, Hq, D);
     k, v: (N_slots, S, Hkv, D) full arenas; slot_map/lengths: (B,).
-    See kernels.decode_attn.decode_attn_arena."""
+    ``window`` selects the rolling (window-deep, modularly written)
+    arena form.  See kernels.decode_attn.decode_attn_arena."""
     if _use_pallas():
         return _decode_arena_pallas(q, k, v, slot_map, lengths,
-                                    block_k=block_k,
+                                    window=window, block_k=block_k,
                                     interpret=not _on_tpu())
-    return ref_mod.ref_decode_attn_arena(q, k, v, slot_map, lengths)
+    return ref_mod.ref_decode_attn_arena(q, k, v, slot_map, lengths,
+                                         window=window)
 
 
 def ssd(x, dt, a, bmat, cmat, init_state, *, chunk=128):

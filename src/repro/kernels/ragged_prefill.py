@@ -217,6 +217,7 @@ def ragged_prefill_attn(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
                   o_ref, m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                  window: Optional[int], depth: int,
                   block_q: int, block_k: int, n_seqs: int, n_kv_blocks: int):
     del slot_ref                     # consumed by the BlockSpec index maps
     qi = pl.program_id(1)
@@ -233,6 +234,9 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
     seg_end = cu_ref[b + 1]
     offset = off_ref[b]
     kv_len = len_ref[b]
+    # rolling arenas hold the last min(kv_len, depth) positions; the
+    # full-depth form has depth == S_max so n_valid == kv_len always
+    n_valid = jnp.minimum(kv_len, depth) if window is not None else kv_len
 
     q_start = qi * block_q                 # flat row of this q block
     k_start = ki * block_k
@@ -240,10 +244,12 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
     # block-level skip, identical to the gathered kernel's: the q block
     # must own rows of segment b, the kv block must hold valid cache
     # entries (clamped blocks re-read the last valid one and are skipped
-    # here), and causally it must not lie past the block's last query
+    # here), and causally it must not lie past the block's last query.
+    # The causal refinement assumes slot index == absolute position, so
+    # it only applies to the non-rolling form.
     run = jnp.logical_and(q_start < seg_end, q_start + block_q > seg_start)
-    run = jnp.logical_and(run, k_start < kv_len)
-    if causal:
+    run = jnp.logical_and(run, k_start < n_valid)
+    if causal and window is None:
         last_row = jnp.minimum(seg_end, q_start + block_q) - 1
         max_qpos = offset + last_row - seg_start
         run = jnp.logical_and(run, k_start <= max_qpos)
@@ -258,13 +264,22 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
             preferred_element_type=jnp.float32) * scale        # (bq, bk)
         rows = q_start + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 0)                  # flat row ids
-        kpos = k_start + jax.lax.broadcasted_iota(
+        slot = k_start + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
         mine = jnp.logical_and(rows >= seg_start, rows < seg_end)
         qpos = offset + rows - seg_start
-        mask = jnp.logical_and(mine, kpos < kv_len)
+        if window is None:
+            kpos = slot                    # full-depth: slot == position
+        else:
+            # rolling slot s holds the newest position < kv_len congruent
+            # to s mod depth: kpos = s + depth·⌊(kv_len−1−s)/depth⌋
+            wraps = jnp.maximum(kv_len - 1 - slot, 0) // depth
+            kpos = slot + wraps * depth
+        mask = jnp.logical_and(mine, slot < n_valid)
         if causal:
             mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, :1]                                  # (bq, 1)
@@ -290,12 +305,12 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "block_q", "block_k", "interpret"))
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
 def ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
                          slot_map: jax.Array, cu_seqlens: jax.Array,
                          q_offsets: Optional[jax.Array] = None,
                          kv_lengths: Optional[jax.Array] = None, *,
-                         causal: bool = True,
+                         causal: bool = True, window: Optional[int] = None,
                          block_q: int = 128, block_k: int = 128,
                          interpret: bool = True) -> jax.Array:
     """Arena-resident ragged prefill flash attention.
@@ -315,6 +330,18 @@ def ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
     last valid block, so one packed step streams only the valid cache
     prefixes of the segments it serves — never whole slots and never
     slots the step doesn't own.
+
+    ``window``: sliding-window width.  The arena is then a ROLLING
+    cache: its slot depth D (= k.shape[1]) is window + margin deep and
+    holds the last min(kv_lengths, D) positions, written modularly at
+    position % D by the layer.  KV block iteration clamps to the last
+    ceil(min(kv_len, D)/block_k) valid blocks of the slot, the kernel
+    reconstructs each slot's absolute position modularly, and the mask
+    keeps only keys inside (qpos − window, qpos] — so a step streams
+    O(min(cached, window) + margin) cache rows per segment, not
+    O(S_max).  (The decode kernel tightens its grid to the window's
+    own blocks; here a segment's queries span up to the whole valid
+    range, so every valid block stays on the grid.)
     """
     t, hq, d = q.shape
     s, hkv = k.shape[1], k.shape[2]
@@ -336,13 +363,16 @@ def ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
 
     def kv_map(h, qi, bb, ki, slot_ref, cu_ref, off_ref, len_ref):
         # clamp past-the-length blocks to the last valid one: a repeated
-        # block index is not re-fetched, so invalid blocks cost no DMA
-        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        # block index is not re-fetched, so invalid blocks cost no DMA.
+        # Rolling arenas have every slot row valid once kv_len ≥ depth.
+        n_valid = jnp.minimum(len_ref[bb], s) if window is not None \
+            else len_ref[bb]
+        last = jnp.maximum(n_valid - 1, 0) // block_k
         return (slot_ref[bb], jnp.minimum(ki, last), h // rep, 0)
 
     kern = functools.partial(
-        _arena_kernel, scale=d ** -0.5, causal=causal,
-        block_q=block_q, block_k=block_k, n_seqs=b, n_kv_blocks=nk)
+        _arena_kernel, scale=d ** -0.5, causal=causal, window=window,
+        depth=s, block_q=block_q, block_k=block_k, n_seqs=b, n_kv_blocks=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(hq, nq, b, nk),

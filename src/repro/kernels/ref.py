@@ -90,19 +90,83 @@ def ref_ragged_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(t, hq, d).astype(q.dtype)
 
 
+def _rolling_kpos(kv_lengths: jax.Array, depth: int):
+    """Absolute position held by each rolling-arena slot.
+
+    Slot s of a depth-D rolling cache holds the newest position < kv_len
+    congruent to s mod D: kpos = s + D·⌊max(kv_len−1−s, 0)/D⌋.  Returns
+    (kpos (B, D), valid (B, D)) — valid is s < min(kv_len, D).
+    """
+    slots = jnp.arange(depth)[None, :]                           # (1, D)
+    kvl = kv_lengths[:, None]                                    # (B, 1)
+    wraps = jnp.maximum(kvl - 1 - slots, 0) // depth
+    kpos = slots + wraps * depth
+    valid = slots < jnp.minimum(kvl, depth)
+    return kpos, valid
+
+
+def ref_ragged_prefill_rolling(q: jax.Array, k: jax.Array, v: jax.Array,
+                               cu_seqlens: jax.Array,
+                               q_offsets: jax.Array,
+                               kv_lengths: jax.Array, *, window: int,
+                               causal: bool = True) -> jax.Array:
+    """Windowed oracle over a ROLLING (modular) per-sequence cache.
+
+    q: (T, Hq, D) flat packed stream; k, v: (B, D_slot, Hkv, D) — the
+    gathered rolling cache rows, slot s holding the newest position
+    congruent to s mod D_slot.  Each query row attends only keys whose
+    reconstructed absolute position lies in (qpos − window, qpos].
+    """
+    t, hq, d = q.shape
+    b, s_depth, hkv = k.shape[0], k.shape[1], k.shape[2]
+    rep = hq // hkv
+    rows = jnp.arange(t)
+    seg = jnp.sum(rows[:, None] >= cu_seqlens[None, 1:], axis=1)  # (T,)
+    valid_row = rows < cu_seqlens[-1]
+    segc = jnp.clip(seg, 0, b - 1)
+    qpos = q_offsets[segc] + rows - cu_seqlens[segc]             # (T,)
+    kpos, kvalid = _rolling_kpos(kv_lengths, s_depth)            # (B, D)
+    mask = (segc[:, None, None] == jnp.arange(b)[None, :, None])  # (T,B,D)
+    mask = mask & valid_row[:, None, None]
+    mask = mask & kvalid[None, :, :]
+    if causal:
+        mask = mask & (kpos[None, :, :] <= qpos[:, None, None])
+    mask = mask & (kpos[None, :, :] > qpos[:, None, None] - window)
+    qg = q.reshape(t, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("tgrd,bsgd->tgrbs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    flat = scores.reshape(t, hkv, rep, b * s_depth)
+    probs = jax.nn.softmax(flat, axis=-1).reshape(t, hkv, rep, b, s_depth)
+    out = jnp.einsum("tgrbs,bsgd->tgrd", probs, v.astype(jnp.float32))
+    out = out * valid_row[:, None, None, None]   # no-sequence rows → 0
+    return out.reshape(t, hq, d).astype(q.dtype)
+
+
 def ref_ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
                              slot_map: jax.Array, cu_seqlens: jax.Array,
                              q_offsets: Optional[jax.Array] = None,
                              kv_lengths: Optional[jax.Array] = None, *,
-                             causal: bool = True) -> jax.Array:
+                             causal: bool = True,
+                             window: Optional[int] = None) -> jax.Array:
     """Oracle for kernels.ragged_prefill_arena (arena-resident packed
     prefill).
 
     q: (T, Hq, D) flat packed stream; k, v: (N_slots, S_max, Hkv, D)
     full arenas; slot_map: (B,) arena slot per segment.  The gather here
     is the ORACLE's convenience — the kernel indexes the slot axis in
-    place.  Doubles as the XLA fallback off-TPU.
+    place.  Doubles as the XLA fallback off-TPU.  ``window`` selects the
+    rolling-cache form (slots written modularly at position % depth).
     """
+    if window is not None:
+        b = slot_map.shape[0]
+        if q_offsets is None:
+            q_offsets = jnp.zeros((b,), jnp.int32)
+        if kv_lengths is None:
+            kv_lengths = jnp.full((b,), k.shape[1], jnp.int32)
+        return ref_ragged_prefill_rolling(
+            q, k[slot_map], v[slot_map], cu_seqlens, q_offsets, kv_lengths,
+            window=window, causal=causal)
     return ref_ragged_prefill(q, k[slot_map], v[slot_map], cu_seqlens,
                               q_offsets=q_offsets, kv_lengths=kv_lengths,
                               causal=causal)
@@ -127,16 +191,45 @@ def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def ref_decode_attn_rolling(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *,
+                            window: int) -> jax.Array:
+    """Windowed decode oracle over a ROLLING per-row cache.
+
+    q: (B, Hq, D); k, v: (B, D_slot, Hkv, D) rolling cache rows;
+    lengths: (B,) total cached entries (history + the new row).  The
+    query at position lengths − 1 attends keys whose reconstructed
+    absolute position lies in (qpos − window, qpos].
+    """
+    b, hq, d = q.shape
+    s_depth, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    kpos, valid = _rolling_kpos(lengths, s_depth)                # (B, D)
+    qpos = (lengths - 1)[:, None]
+    valid = valid & (kpos > qpos - window)                       # (B, D)
+    qg = q.reshape(b, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def ref_decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
-                          slot_map: jax.Array,
-                          lengths: jax.Array) -> jax.Array:
+                          slot_map: jax.Array, lengths: jax.Array, *,
+                          window: Optional[int] = None) -> jax.Array:
     """Oracle for kernels.decode_attn_arena (arena-resident decode).
 
     q: (B, Hq, D); k, v: (N_slots, S, Hkv, D) full arenas; slot_map: (B,)
     arena slot per batch row; lengths: (B,) valid KV entries.  The
     gather here is the ORACLE's convenience — the kernel indexes the
-    slot axis in place.  Doubles as the XLA fallback off-TPU.
+    slot axis in place.  Doubles as the XLA fallback off-TPU.  ``window``
+    selects the rolling-cache form (slots written at position % depth).
     """
+    if window is not None:
+        return ref_decode_attn_rolling(q, k[slot_map], v[slot_map], lengths,
+                                       window=window)
     return ref_decode_attn(q, k[slot_map], v[slot_map], lengths)
 
 

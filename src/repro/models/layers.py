@@ -319,6 +319,7 @@ def packed_arena_attention_layer(p: Dict, x: jax.Array, *, cfg,
                                  cu_seqlens: jax.Array, q_offsets: jax.Array,
                                  kv_lengths: jax.Array,
                                  kv: Tuple[jax.Array, jax.Array],
+                                 window: Optional[int] = None,
                                  ) -> Tuple[jax.Array, Tuple]:
     """Attention over a packed flat stream, arena-resident (DESIGN.md §6).
 
@@ -335,6 +336,16 @@ def packed_arena_attention_layer(p: Dict, x: jax.Array, *, cfg,
     ragged kernel attends each stream row to its own segment's valid
     cache prefix only.  No whole slots are gathered or scattered.
     Returns (out (T, d), updated (K, V) arenas).
+
+    ``window``: sliding-window width (DESIGN.md §7).  The arena slot is
+    then window-deep (depth = window + margin < S_max) and the new KV
+    rows are ROLLING (modular) writes at position % depth — the
+    wraparound overwrites exactly the positions that fell out of every
+    query's window, provided depth ≥ window + segment_len − 1 (the
+    packing layer enforces segment_len ≤ margin + 1).  Tail rows must
+    then park in a dedicated SCRATCH slot (there is no spare row in a
+    rolling slot — every row cycles live).  The kernel masks each query
+    to (qpos − window, qpos], streaming O(min(cached, window)) rows.
     """
     from repro.kernels import ops as kernel_ops
 
@@ -356,12 +367,13 @@ def packed_arena_attention_layer(p: Dict, x: jax.Array, *, cfg,
     q = apply_rope(q[None], positions[None], cfg.rope_theta)[0]
     k = apply_rope(k[None], positions[None], cfg.rope_theta)[0]
 
-    ck = kv[0].at[seg_slots, positions].set(k.astype(kv[0].dtype))
-    cv = kv[1].at[seg_slots, positions].set(v.astype(kv[1].dtype))
+    write_pos = positions if window is None else positions % kv[0].shape[1]
+    ck = kv[0].at[seg_slots, write_pos].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[seg_slots, write_pos].set(v.astype(kv[1].dtype))
 
     out = kernel_ops.ragged_mha_arena(q, ck, cv, slot_map, cu_seqlens,
                                       q_offsets, kv_lengths,
-                                      causal=cfg.causal)
+                                      causal=cfg.causal, window=window)
     out = out.reshape(t, cfg.num_heads * hd) @ p["wo"]
     return out, (ck, cv)
 
@@ -370,6 +382,7 @@ def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
                        slot_map: jax.Array, positions: jax.Array,
                        kv_lengths: jax.Array,
                        kv: Tuple[jax.Array, jax.Array],
+                       window: Optional[int] = None,
                        ) -> Tuple[jax.Array, Tuple]:
     """Attention for one arena-resident decode tick.
 
@@ -384,6 +397,12 @@ def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
     kernel attends each row over its own valid prefix only.  No whole
     slots are gathered or scattered.  Returns (out (B, d), updated
     (K, V) arenas).
+
+    ``window``: sliding-window width (DESIGN.md §7).  The arena slot is
+    then a window-deep ROLLING cache written modularly at position %
+    depth (pad rows must point at the scratch slot — every row of a
+    rolling slot cycles live), and the kernel streams O(min(cached,
+    window)) rows per generated token.
     """
     from repro.kernels import ops as kernel_ops
 
@@ -405,10 +424,12 @@ def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
     q = apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
     k = apply_rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
 
-    ck = kv[0].at[slot_map, positions].set(k.astype(kv[0].dtype))
-    cv = kv[1].at[slot_map, positions].set(v.astype(kv[1].dtype))
+    write_pos = positions if window is None else positions % kv[0].shape[1]
+    ck = kv[0].at[slot_map, write_pos].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[slot_map, write_pos].set(v.astype(kv[1].dtype))
 
-    out = kernel_ops.decode_arena(q, ck, cv, slot_map, kv_lengths)
+    out = kernel_ops.decode_arena(q, ck, cv, slot_map, kv_lengths,
+                                  window=window)
     out = out.reshape(b, cfg.num_heads * hd) @ p["wo"]
     return out, (ck, cv)
 

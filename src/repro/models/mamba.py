@@ -257,3 +257,79 @@ def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
                     jnp.float32)
     conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype)
     return ssm, conv
+
+
+# --------------------------------------------------- arena-resident serving
+
+
+def packed_arena_mamba_layer(p: Dict, x: jax.Array, *, cfg,
+                             slot_map: jax.Array,
+                             cache: Dict[str, jax.Array],
+                             seg_rows: jax.Array, seg_pos: jax.Array,
+                             valid_row: jax.Array, seg_lens: jax.Array,
+                             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mamba2 mixer over a packed flat stream with an SSM STATE ARENA
+    (DESIGN.md §7): the per-slot recurrent state is read at ``slot_map``
+    and stepped IN PLACE — the hybrid/SSM model rides the same
+    forward_packed_arena layer scan as attention instead of forcing the
+    whole model onto the dense (L, B) path.
+
+    x: (T, d) flat stream; cache: {"ssm": (N_slots(+1), NH, HD, DS),
+    "conv": (N_slots(+1), W-1, C)} — the slot-axis state arenas for this
+    layer; slot_map: (B,) arena slot per segment (pad segments point at
+    the arena's SCRATCH slot, so their junk updates never touch live
+    state); seg_rows/seg_pos: (T,) each flat token's (segment row, local
+    index) — tail rows carry seg_rows == B and are dropped; valid_row:
+    (T,) bool; seg_lens: (B,) new tokens per segment (0 for pads, which
+    makes their SSD update an exact identity).
+
+    The SSD scan itself is sequential per segment, so the flat stream is
+    bridged to a dense (B, T, d) view for the scan and flattened back —
+    the bridge touches activations only; the O(S_max) KV-slot copies the
+    flat stream exists to avoid have no SSM analogue (recurrent state is
+    O(1) per slot, and it moves exactly once per step here).
+
+    Returns (out (T, d) flat, updated state arenas).
+    """
+    t, d = x.shape
+    b = slot_map.shape[0]
+    # flat → dense bridge: invalid rows scatter out of bounds and drop
+    dense = jnp.zeros((b, t, d), x.dtype)
+    dest_rows = jnp.where(valid_row, seg_rows, b)
+    dense = dense.at[dest_rows, seg_pos].set(x, mode="drop")
+
+    ssm0 = jnp.take(cache["ssm"], slot_map, axis=0)       # (B, NH, HD, DS)
+    conv0 = jnp.take(cache["conv"], slot_map, axis=0)     # (B, W-1, C)
+    y, (ssm1, conv1) = mamba_layer(p, dense, cfg=cfg, cache=(ssm0, conv0),
+                                   decode=False, valid_len=seg_lens)
+
+    out = y[jnp.clip(dest_rows, 0, b - 1), seg_pos]
+    out = jnp.where(valid_row[:, None], out, 0.0).astype(x.dtype)
+    # live slots are distinct (one session per segment); every pad row
+    # targets the scratch slot, and its update is an identity anyway
+    new_cache = {
+        "ssm": cache["ssm"].at[slot_map].set(ssm1.astype(cache["ssm"].dtype)),
+        "conv": cache["conv"].at[slot_map].set(
+            conv1.astype(cache["conv"].dtype)),
+    }
+    return out, new_cache
+
+
+def arena_decode_mamba_layer(p: Dict, x: jax.Array, *, cfg,
+                             slot_map: jax.Array,
+                             cache: Dict[str, jax.Array],
+                             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One arena-resident decode tick through a Mamba2 mixer: every
+    row's recurrent state is read at ``slot_map``, stepped once (O(1)
+    per token), and written back in place.  x: (B, d); pad rows point at
+    the scratch slot.  Returns (out (B, d), updated state arenas)."""
+    ssm0 = jnp.take(cache["ssm"], slot_map, axis=0)
+    conv0 = jnp.take(cache["conv"], slot_map, axis=0)
+    y, (ssm1, conv1) = mamba_layer(p, x[:, None, :], cfg=cfg,
+                                   cache=(ssm0, conv0), decode=True)
+    new_cache = {
+        "ssm": cache["ssm"].at[slot_map].set(ssm1.astype(cache["ssm"].dtype)),
+        "conv": cache["conv"].at[slot_map].set(
+            conv1.astype(cache["conv"].dtype)),
+    }
+    return y[:, 0], new_cache

@@ -9,6 +9,13 @@ Two execution forms:
     combined.  FLOPs scale with top-k, not E.  Tokens overflowing the
     capacity C are dropped (their gate weight contributes nothing), as in
     Switch/GShard; tests use capacity_factor high enough for zero drops.
+
+Serving note (DESIGN.md §7): both forms are token-independent, so the
+arena-resident packed stream feeds them the flat (1, T, d) view
+directly — a jamba-style hybrid step runs its MoE FFNs over the packed
+stream with no per-segment unflattening (only the SSM mixers need the
+dense bridge, and only for their sequential scan).  Routing therefore
+sees the true token mix of the step, exactly like the dense path.
 """
 from __future__ import annotations
 

@@ -12,6 +12,7 @@ pytrees stacked the same way, scanned through as xs/ys.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -123,11 +124,18 @@ def param_shapes(cfg: ModelConfig):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=None) -> List[Any]:
+               dtype=None, swa_depth: Optional[int] = None) -> List[Any]:
     """Per-pattern-position cache, stacked over groups.
 
     attn position: {"k": (G,B,S,Hkv,D), "v": ...}
     ssm  position: {"ssm": (G,B,nh,hd,ds), "conv": (G,B,W-1,C)}
+
+    swa_depth: attention-slot depth for sliding-window configs.  None
+    keeps the legacy window-deep rolling cache (min(max_len, window));
+    the serving arena passes window + margin (the §7 rolling arena,
+    margin absorbing one step's writes before wraparound could alias)
+    or max_len (the dense baseline, which masks the window instead of
+    rolling).  Always capped at max_len.
     """
     dtype = dtype or cfg.np_dtype
     p = pattern_period(cfg)
@@ -137,7 +145,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         if cfg.layer_kind(j) == "attn":
             s = max_len
             if cfg.sliding_window is not None:
-                s = min(max_len, cfg.sliding_window)
+                s = min(max_len, swa_depth if swa_depth is not None
+                        else cfg.sliding_window)
             # k and v must be DISTINCT buffers: donating an aliased pair
             # trips "attempt to donate the same buffer twice" in XLA
             shape = (g, batch, s, cfg.num_kv_heads, cfg.hdim)
@@ -360,8 +369,10 @@ def _scan_serving_stack(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     (packed prefill, arena packed prefill, arena decode): embed →
     per-group {norm → mix_fn → FFN → cache writeback} → final norm.
 
-    mix_fn(layer_params, h, cache_j) → (mix, (k, v)) supplies the
-    attention variant; everything else — including the cache
+    mix_fn(j, layer_params, h, cache_j) → (mix, new_cache_dict) supplies
+    the mixer variant for pattern position j — attention (full or
+    windowed) returning {"k", "v"}, or an SSM block returning
+    {"ssm", "conv"}; everything else — including the cache
     constrain_tree pinning — is identical across the paths and lives
     exactly once.  Returns (final-normed activations, new caches)."""
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -375,12 +386,12 @@ def _scan_serving_stack(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                 lambda a: jax.lax.dynamic_index_in_dim(
                     a, g, 0, keepdims=False), cs_all[j])
             h = rms_norm(x, lps[j]["ln1"], cfg.norm_eps)
-            mix, upd = mix_fn(lps[j]["mixer"], h, cache_j)
+            mix, nc = mix_fn(j, lps[j]["mixer"], h, cache_j)
             x = x + mix
-            x2, a = _ffn(cfg, j, lps[j], x[None])
-            x = x2[0]
-            aux = aux + a
-            nc = {"k": upd[0], "v": upd[1]}
+            if cfg.family != "ssm":
+                x2, a = _ffn(cfg, j, lps[j], x[None])
+                x = x2[0]
+                aux = aux + a
             full = jax.tree.map(
                 lambda fa, u: jax.lax.dynamic_update_index_in_dim(
                     fa, u.astype(fa.dtype), g, 0), cs_all[j], nc)
@@ -393,13 +404,91 @@ def _scan_serving_stack(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     return rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
 
 
+# ------------------------------------------------- capability descriptor
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCapability:
+    """Arena capability of ONE pattern position (DESIGN.md §7).
+
+    kind: "attn" (full-attention KV slot), "attn_window" (rolling
+    window-deep KV slot + windowed kernel), or "ssm" (recurrent-state
+    slot stepped in place).  window is the sliding-window width for
+    attn_window positions, None otherwise.
+    """
+    kind: str
+    window: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaCapability:
+    """Per-layer arena-residency descriptor of a model config.
+
+    Replaces the old boolean ``supports_packed`` fallback matrix: every
+    CAUSAL architecture is arena-resident (packed prefill + bucketed
+    decode through the slot-map kernels), each pattern position routed
+    by its :class:`LayerCapability`.  The dense (L, B) grid survives
+    only as an explicitly requested measurement baseline and for
+    encoder-only models (no serving decode loop at all).
+    """
+    layers: Tuple[LayerCapability, ...]   # one per pattern position
+    causal: bool
+
+    @property
+    def packed_ok(self) -> bool:
+        """Arena-resident packed prefill + decode are available."""
+        return self.causal
+
+    @property
+    def pure_attn(self) -> bool:
+        """Every mixer is full attention — the only configs the LEGACY
+        gathered-cache packed path (forward_packed) can also run."""
+        return all(c.kind == "attn" for c in self.layers)
+
+    @property
+    def has_window(self) -> bool:
+        return any(c.kind == "attn_window" for c in self.layers)
+
+    @property
+    def has_ssm(self) -> bool:
+        return any(c.kind == "ssm" for c in self.layers)
+
+    @property
+    def window(self) -> Optional[int]:
+        for c in self.layers:
+            if c.kind == "attn_window":
+                return c.window
+        return None
+
+    @property
+    def needs_scratch_slot(self) -> bool:
+        """Rolling KV slots have no spare park row (every row cycles
+        live) and SSM state has no park position at all — pads must
+        target a dedicated scratch slot instead of aliasing a live one."""
+        return self.has_window or self.has_ssm
+
+
+def arena_capability(cfg: ModelConfig) -> ArenaCapability:
+    """Per-layer capability descriptor — the §7 routing contract."""
+    layers = []
+    for j in range(pattern_period(cfg)):
+        if cfg.layer_kind(j) != "attn":
+            layers.append(LayerCapability("ssm"))
+        elif cfg.sliding_window is not None:
+            layers.append(LayerCapability("attn_window",
+                                          window=cfg.sliding_window))
+        else:
+            layers.append(LayerCapability("attn"))
+    return ArenaCapability(layers=tuple(layers), causal=cfg.causal)
+
+
 def supports_packed(cfg: ModelConfig) -> bool:
-    """Packed (padding-free) prefill needs pure-attention mixers with a
-    full cache: SSM state and rolling SWA windows mix tokens across the
-    flat stream and stay on the dense path."""
-    return (cfg.causal and cfg.sliding_window is None
-            and all(cfg.layer_kind(j) == "attn"
-                    for j in range(pattern_period(cfg))))
+    """LEGACY predicate for the gathered-cache packed path
+    (:func:`forward_packed`), which needs pure-attention mixers with a
+    full cache.  Arena routing uses :func:`arena_capability` instead —
+    SSM and sliding-window configs are arena-resident there."""
+    cap = arena_capability(cfg)
+    return cap.causal and cap.pure_attn
 
 
 def forward_packed(params: Dict, cfg: ModelConfig, *,
@@ -439,11 +528,12 @@ def forward_packed(params: Dict, cfg: ModelConfig, *,
     """
     assert supports_packed(cfg), cfg.name
 
-    def mix_fn(lp, h, cache_j):
-        return packed_attention_layer(
+    def mix_fn(j, lp, h, cache_j):
+        mix, upd = packed_attention_layer(
             lp, h, cfg=cfg, positions=positions, seg_ids=seg_ids,
             cu_seqlens=cu_seqlens, q_offsets=q_offsets,
             kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+        return mix, {"k": upd[0], "v": upd[1]}
 
     x, new_caches = _scan_serving_stack(params, cfg, tokens, caches, mix_fn)
     x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
@@ -481,15 +571,40 @@ def forward_packed_arena(params: Dict, cfg: ModelConfig, *,
     donation the arena updates in place; the caller swaps the returned
     pytree back into the KVArena.
 
-    Returns (last_logits (B, V), new_arena).
+    Heterogeneous stacks ride the SAME layer scan (DESIGN.md §7): each
+    pattern position routes by its :class:`LayerCapability` — full
+    attention slots, windowed ROLLING slots (window-deep arena, modular
+    writes, O(min(cached, window)) reads), or SSM state slots stepped in
+    place at ``slot_map`` (pad segments point at the arena's scratch
+    slot).  Returns (last_logits (B, V), new_arena).
     """
-    assert supports_packed(cfg), cfg.name
+    cap = arena_capability(cfg)
+    assert cap.packed_ok, cfg.name
+    b = slot_map.shape[0]
+    if cap.has_ssm:
+        # flat → (segment row, local index) bridge for the SSM scan;
+        # computed once, shared by every ssm pattern position
+        t = tokens.shape[0]
+        rows = jnp.arange(t)
+        seg = jnp.sum(rows[:, None] >= cu_seqlens[None, 1:], axis=1)
+        valid_row = rows < cu_seqlens[-1]
+        seg_rows = jnp.clip(seg, 0, b - 1)
+        seg_pos = rows - cu_seqlens[seg_rows]
+        seg_lens = cu_seqlens[1:] - cu_seqlens[:-1]
 
-    def mix_fn(lp, h, cache_j):
-        return packed_arena_attention_layer(
+    def mix_fn(j, lp, h, cache_j):
+        kind = cap.layers[j].kind
+        if kind == "ssm":
+            return mamba_mod.packed_arena_mamba_layer(
+                lp, h, cfg=cfg, slot_map=slot_map, cache=cache_j,
+                seg_rows=seg_rows, seg_pos=seg_pos, valid_row=valid_row,
+                seg_lens=seg_lens)
+        mix, upd = packed_arena_attention_layer(
             lp, h, cfg=cfg, positions=positions, seg_slots=seg_slots,
             slot_map=slot_map, cu_seqlens=cu_seqlens, q_offsets=q_offsets,
-            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]),
+            window=cap.layers[j].window)
+        return mix, {"k": upd[0], "v": upd[1]}
 
     x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
     x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
@@ -525,13 +640,25 @@ def forward_decode_arena(params: Dict, cfg: ModelConfig, *,
 
     Returns (logits (B, V), new_arena).  B is a decode-ladder bucket,
     so the compiled-shape space is O(|ladder|), not O(#session-counts).
-    """
-    assert supports_packed(cfg), cfg.name
 
-    def mix_fn(lp, h, cache_j):
-        return arena_decode_layer(
+    Heterogeneous stacks ride the same scan (DESIGN.md §7): windowed
+    positions write the new row modularly into the rolling slot and
+    stream O(min(cached, window)); SSM positions step their per-slot
+    recurrent state in place (pad rows point at the scratch slot).
+    """
+    cap = arena_capability(cfg)
+    assert cap.packed_ok, cfg.name
+
+    def mix_fn(j, lp, h, cache_j):
+        kind = cap.layers[j].kind
+        if kind == "ssm":
+            return mamba_mod.arena_decode_mamba_layer(
+                lp, h, cfg=cfg, slot_map=slot_map, cache=cache_j)
+        mix, upd = arena_decode_layer(
             lp, h, cfg=cfg, slot_map=slot_map, positions=write_pos,
-            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]),
+            window=cap.layers[j].window)
+        return mix, {"k": upd[0], "v": upd[1]}
 
     x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
     return _lm_head_logits(params, cfg, x), new_arena

@@ -60,12 +60,20 @@ class EngineConfig:
     grid_depths: Tuple[int, ...] = (1, 2, 4, 8)
     pad_token: int = 0
     measure: bool = True             # collect boundary-fit samples
-    packed: bool = False             # padding-free packed prefill path
+    # padding-free packed serving is the DEFAULT for every causal
+    # architecture (DESIGN.md §7); packed=False is the explicitly
+    # requested dense (L, B) measurement baseline
+    packed: bool = True
     token_buckets: Tuple[int, ...] = DEFAULT_TOKEN_BUCKETS
     packed_max_seqs: Optional[int] = None  # None → min(num_slots, 16)
     arena_decode: bool = True        # in-place bucketed decode (§5)
     decode_buckets: Tuple[int, ...] = DEFAULT_DECODE_BUCKETS
     arena_prefill: bool = True       # in-place packed prefill (§6)
+    # keep a host copy of every step's last logits row per session
+    # (parity harnesses, sampling introspection).  False lets all-greedy
+    # steps take their token from the executor's on-device argmax and
+    # skip the full-vocab logits transfer entirely (fused greedy slice)
+    keep_last_logits: bool = True
 
 
 class Engine:
@@ -73,17 +81,53 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg or EngineConfig()
-        self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len)
+        cap = tr.arena_capability(cfg)
+        self.capability = cap
+        # ---- arena layout (DESIGN.md §7) ------------------------------
+        # Rolling mode: sliding-window configs serve from window-deep
+        # rolling slots (depth = window + margin, margin = the largest
+        # packed bucket so one step's writes can never wrap onto a row
+        # still inside any query's window).  It requires BOTH in-place
+        # paths — a rolling slot cannot be gathered into the dense
+        # (L, B) step, whose writes are absolute.  Otherwise SWA slots
+        # are FULL depth and the dense path masks the window instead.
+        self._rolling = bool(
+            cap.packed_ok and cap.has_window and self.ecfg.packed
+            and self.ecfg.arena_prefill and self.ecfg.arena_decode)
+        swa_depth: Optional[int] = None
+        # no-alias margin: the most new rows ONE segment may write into
+        # a rolling slot per step.  C_l bounds it — step_mixed splits
+        # any longer segment into C_l-sized packed chunks — which keeps
+        # the rolling depth near the window instead of near the bucket
+        self._seg_margin = self.ecfg.chunk_tokens
+        if cap.has_window:
+            if self._rolling:
+                swa_depth = min(self.ecfg.max_len,
+                                cap.window + self._seg_margin)
+            else:
+                swa_depth = self.ecfg.max_len
+        # rolling KV slots and SSM state have no spare park row — pads
+        # target a dedicated scratch slot instead of aliasing a live one
+        scratch = bool(cap.packed_ok and cap.needs_scratch_slot
+                       and (self.ecfg.packed or self.ecfg.arena_decode))
+        self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len,
+                             swa_depth=swa_depth, scratch_slot=scratch)
+        # dense gather/scatter is a valid fallback everywhere EXCEPT on
+        # rolling arenas (absolute-position writes don't fit a rolling
+        # slot) — there, oversized work is split across packed steps
+        self._dense_ok = not self._rolling
         self.executor = BucketExecutor(cfg)
         self.packed_executor: Optional[PackedBucketExecutor] = None
-        if self.ecfg.packed and tr.supports_packed(cfg):
+        if self.ecfg.packed and cap.packed_ok and (
+                cap.pure_attn or self.ecfg.arena_prefill):
             max_seqs = self.ecfg.packed_max_seqs or min(self.ecfg.num_slots,
                                                         16)
             self.packed_executor = PackedBucketExecutor(
                 cfg, token_buckets=self.ecfg.token_buckets,
                 max_seqs=min(max_seqs, self.ecfg.num_slots))
         self.decode_executor: Optional[DecodeBucketExecutor] = None
-        if self.ecfg.arena_decode and tr.supports_packed(cfg):
+        if self.ecfg.arena_decode and cap.packed_ok and not (
+                cap.has_window and not self._rolling):
             self.decode_executor = DecodeBucketExecutor(
                 cfg, decode_buckets=self.ecfg.decode_buckets,
                 max_seqs=self.ecfg.num_slots)
@@ -97,6 +141,16 @@ class Engine:
         # per-session sampling options (greedy argmax when absent)
         self.sampling: Dict[int, SamplingParams] = {}
         self._rngs: Dict[int, np.random.Generator] = {}
+        # dense-dispatch accounting by (kind, cause): "requested" =
+        # the config asked for the dense baseline (packed off, a pinned
+        # (L, B) bucket, arena paths disabled); "forced" = the packed
+        # path exists but this step fell off it (off-ladder total,
+        # over-depth batch, ladder overflow)
+        self.dense_causes: Dict[Tuple[str, str], int] = {}
+        # fused-greedy counters: steps that took tokens from the
+        # on-device argmax without shipping full-vocab logits to host
+        self.fused_greedy_steps = 0
+        self.logits_rows_shipped = 0
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -136,6 +190,31 @@ class Engine:
         return sampling_mod.sample_batch(logits, sessions, self.sampling,
                                          self._rngs)
 
+    def _tokens_from_step(self, sessions: Sequence[int], logits_dev,
+                          ids_dev) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Sample one token per session from an arena step's outputs.
+
+        The executors return the on-device greedy argmax next to the
+        logits.  An all-greedy step with ``keep_last_logits=False``
+        takes its tokens straight from those ids — the full-vocab
+        logits never cross to host (the fused-sampling greedy slice).
+        Steps with sampling options (or the default logits-keeping
+        config) ship the rows and sample on host as before.  Returns
+        (tokens (n,), logits_np or None).
+        """
+        n = len(sessions)
+        all_greedy = all(s not in self.sampling for s in sessions)
+        if all_greedy and not self.ecfg.keep_last_logits:
+            self.fused_greedy_steps += 1
+            return np.asarray(ids_dev)[:n].astype(np.int64), None
+        logits_np = np.asarray(logits_dev)
+        self.logits_rows_shipped += int(logits_np.shape[0])
+        return self._sample_rows(sessions, logits_np[:n]), logits_np
+
+    def _note_dense(self, kind: str, cause: str) -> None:
+        key = (kind, cause)
+        self.dense_causes[key] = self.dense_causes.get(key, 0) + 1
+
     # ------------------------------------------------- bucketized prefill
     def prefill_batch(self, sessions: Sequence[int],
                       token_lists: Sequence[np.ndarray],
@@ -153,17 +232,25 @@ class Engine:
         if bucket is None and self.packed_executor is not None:
             return self.step_mixed(list(zip(sessions, token_lists)),
                                    []).tokens
-        return self._prefill_batch_dense(sessions, token_lists, bucket)
+        cause = "requested" if (bucket is not None
+                                or self.packed_executor is None) else "forced"
+        return self._prefill_batch_dense(sessions, token_lists, bucket,
+                                         cause=cause)
 
     def _prefill_batch_dense(self, sessions: Sequence[int],
                              token_lists: Sequence[np.ndarray],
-                             bucket: Optional[Tuple[int, int]] = None
-                             ) -> Dict[int, int]:
+                             bucket: Optional[Tuple[int, int]] = None,
+                             cause: str = "requested") -> Dict[int, int]:
         """Dense (L, B) grid prefill: pads to ``bucket`` when given
         (graph path), else to max length; gathers whole arena slots and
-        scatters them back.  The fallback for SSM/SWA architectures,
-        pinned grid buckets, and off-ladder packed batches."""
+        scatters them back.  The explicitly requested measurement
+        baseline (pinned grid buckets, packed=False configs) and the
+        capability-forced fallback for off-ladder packed batches —
+        ``cause`` records which, feeding ``stats()``."""
+        assert self._dense_ok, \
+            "dense gather path cannot serve a rolling windowed arena"
         assert len(sessions) == len(token_lists)
+        self._note_dense("prefill", cause)
         n = len(sessions)
         lens = [len(t) for t in token_lists]
         if bucket is not None:
@@ -261,15 +348,30 @@ class Engine:
         total = sum(lens) + n_d
         px = self.packed_executor
         bucket = None
-        if px is not None and n_p + n_d <= px.max_seqs:
+        # px.max_seqs already accounts for the scratch pad row that
+        # bucket tails park in on rolling/SSM arenas, so a fully fused
+        # tick still runs as one packed step.  Rolling slots add the
+        # no-alias constraint: no segment may write more than the
+        # margin in one step (a pinned oversized token_bucket must not
+        # bypass it) — longer segments go through the split path.
+        fits = px is not None and n_p + n_d <= px.max_seqs
+        if fits and self._rolling and lens and max(lens) > self._seg_margin:
+            fits = False
+        if fits:
             bucket = token_bucket or px.bucket_for(total)
             if bucket is not None and bucket < total:
                 bucket = None
         if bucket is None:
+            if not self._dense_ok:
+                # rolling windowed arenas have no dense escape hatch:
+                # off-ladder / over-depth work is SPLIT across packed
+                # steps instead (every piece stays arena-resident)
+                return self._step_split(prefills, decodes)
             out: Dict[int, int] = {}
             if prefills:
                 out.update(self._prefill_batch_dense(
-                    [s for s, _ in prefills], [t for _, t in prefills]))
+                    [s for s, _ in prefills], [t for _, t in prefills],
+                    cause="forced" if px is not None else "requested"))
             if decodes:
                 dec = self.decode_batch([s for s, _ in decodes],
                                         [t for _, t in decodes])
@@ -292,6 +394,36 @@ class Engine:
                 kind="decode"))
         return self._run_packed(segments, bucket)
 
+    def _step_split(self, prefills: Sequence[Tuple[int, np.ndarray]],
+                    decodes: Sequence[Tuple[int, int]]) -> MixedStepResult:
+        """Serve an off-ladder / over-depth mix WITHOUT the dense path:
+        prefills advance in C_l-sized packed chunks and the decode
+        backlog drains in ladder-top groups — every piece stays
+        arena-resident.  The rolling windowed arena (§7) requires this
+        (a rolling slot cannot be gathered into the dense step); the
+        chunk size also re-establishes the no-alias margin for any
+        caller-supplied segment length."""
+        px = self.packed_executor
+        c = min(self._seg_margin, px.ladder.max_tokens)
+        out: Dict[int, int] = {}
+        for s, toks in prefills:
+            toks = np.asarray(toks)
+            for start in range(0, len(toks), c):
+                res = self.step_mixed([(s, toks[start:start + c])], [])
+                out[s] = res.tokens[s]
+        if decodes:
+            dx = self.decode_executor
+            m = dx.ladder.max_seqs if dx is not None else 1
+            decodes = list(decodes)
+            for i in range(0, len(decodes), m):
+                grp = decodes[i:i + m]
+                dec = self.decode_batch([s for s, _ in grp],
+                                        [t for _, t in grp])
+                out.update({s: v[0] for s, v in dec.items()})
+        return MixedStepResult(tokens=out, fused=False,
+                               n_prefill=len(prefills),
+                               n_decode=len(decodes))
+
     def _run_packed(self, segments: List[packing.SegmentSpec],
                     bucket: int) -> MixedStepResult:
         """Dispatch an assembled segment list as one packed stream.
@@ -304,10 +436,14 @@ class Engine:
         px = self.packed_executor
         n = len(segments)
         slots = [self.arena.alloc(seg.session) for seg in segments]
-        b_max = px.max_seqs
-        # dummy cache rows (and tail-padding KV writes) reuse slot 0 —
-        # confined to the scratch row at S_max − 1 by their positions
-        all_slots = slots + [slots[0]] * (b_max - n)
+        b_max = px.stream_rows
+        # dummy cache rows (and tail-padding KV writes) reuse slot 0,
+        # confined to the scratch row at S_max − 1 by their positions —
+        # except on rolling/SSM arenas, where pads own the scratch SLOT
+        # (a rolling slot has no spare row; state has no park position)
+        pad_slot = self.arena.scratch if self.arena.scratch is not None \
+            else slots[0]
+        all_slots = slots + [pad_slot] * (b_max - n)
         stream = packing.assemble_mixed_stream(
             segments, bucket, b_max, park_position=self.arena.max_len - 1,
             pad_token=self.ecfg.pad_token)
@@ -317,7 +453,7 @@ class Engine:
             slot_map = np.asarray(all_slots, np.int32)
             seg_slots = slot_map[stream.seg_ids]   # per-token arena slot
             t0 = time.perf_counter()
-            last, new_arena = px.mixed_step_arena(
+            last, ids, new_arena = px.mixed_step_arena(
                 self.params, jnp.asarray(stream.tokens),
                 jnp.asarray(stream.positions), jnp.asarray(seg_slots),
                 jnp.asarray(slot_map), jnp.asarray(stream.cu_seqlens),
@@ -328,6 +464,7 @@ class Engine:
             def writeback():
                 self.arena.replace(new_arena)
         else:
+            ids = None
             caches = self.arena.gather(all_slots)
             t0 = time.perf_counter()
             last, new_caches = px.mixed_step(
@@ -341,8 +478,12 @@ class Engine:
             def writeback():
                 self.arena.scatter(slots, jax.tree.map(
                     lambda a: a[:, :n], new_caches))
-        last_np = np.asarray(last)
-        toks = self._sample_rows(sessions, last_np)
+        if ids is not None:
+            toks, last_np = self._tokens_from_step(sessions, last, ids)
+        else:
+            last_np = np.asarray(last)
+            self.logits_rows_shipped += int(last_np.shape[0])
+            toks = self._sample_rows(sessions, last_np)
         elapsed = time.perf_counter() - t0
         px.note_padding(stream.total_tokens, bucket)
         writeback()
@@ -350,7 +491,8 @@ class Engine:
         for i, seg in enumerate(segments):
             self.arena.set_length(seg.session, seg.history + seg.length)
             out[seg.session] = int(toks[i])
-            self.last_logits[seg.session] = last_np[i]
+            if last_np is not None:
+                self.last_logits[seg.session] = last_np[i]
         if self.ecfg.measure:
             # only prefill work feeds the (T, L, H) boundary fit — decode
             # rows are priced by the decode model, not T(L, H)
@@ -397,7 +539,19 @@ class Engine:
         dx = self.decode_executor
         bucket = dx.bucket_for(len(sessions)) if dx is not None else None
         if bucket is None:
-            return self._decode_batch_dense(sessions, tokens, steps)
+            if not self._dense_ok:
+                # rolling arenas: ladder overflow splits into ladder-top
+                # groups, every tick staying arena-resident
+                m = dx.ladder.max_seqs
+                out: Dict[int, List[int]] = {}
+                sessions, tokens = list(sessions), list(tokens)
+                for i in range(0, len(sessions), m):
+                    out.update(self.decode_batch(sessions[i:i + m],
+                                                 tokens[i:i + m], steps))
+                return out
+            return self._decode_batch_dense(
+                sessions, tokens, steps,
+                cause="requested" if dx is None else "forced")
 
         n = len(sessions)
         slots = [self.arena.slot_of(s) for s in sessions]
@@ -410,32 +564,38 @@ class Engine:
             hists = [self.arena.length(s) for s in sessions]
             rows = packing.pad_decode_rows(
                 slots, hists, cur, bucket, park_position=park,
-                pad_token=self.ecfg.pad_token)
-            logits, new_arena = dx.decode(
+                pad_token=self.ecfg.pad_token, pad_slot=self.arena.scratch)
+            logits, ids, new_arena = dx.decode(
                 self.params, jnp.asarray(rows.tokens),
                 jnp.asarray(rows.slot_map), jnp.asarray(rows.write_pos),
                 jnp.asarray(rows.kv_lengths), self.arena.arena)
             self.arena.replace(new_arena)
             dx.note_padding(n, bucket)
-            logits_np = np.asarray(logits)[:n]
-            cur = self._sample_rows(sessions, logits_np).astype(np.int32)
+            toks, logits_np = self._tokens_from_step(sessions, logits, ids)
+            cur = toks.astype(np.int32)
             for i, s in enumerate(sessions):
                 self.arena.set_length(s, hists[i] + 1)
                 out[s].append(int(cur[i]))
-                self.last_logits[s] = logits_np[i]
+                if logits_np is not None:
+                    self.last_logits[s] = logits_np[i]
         return out
 
     def _decode_batch_dense(self, sessions: Sequence[int],
-                            tokens: Sequence[int], steps: int = 1
+                            tokens: Sequence[int], steps: int = 1,
+                            cause: str = "requested"
                             ) -> Dict[int, List[int]]:
         """Dense fallback: gather whole arena slots, run the (B, 1)
         decode step, scatter the slots back — O(S_max) HBM per token
-        and one compiled shape per session count."""
+        and one compiled shape per session count.  ``cause`` records
+        whether the config requested it or the ladder forced it."""
+        assert self._dense_ok, \
+            "dense gather path cannot serve a rolling windowed arena"
         n = len(sessions)
         slots = [self.arena.slot_of(s) for s in sessions]
         cur = np.asarray(tokens, np.int32)
         out: Dict[int, List[int]] = {s: [] for s in sessions}
         for _ in range(steps):
+            self._note_dense("decode", cause)
             hists = [self.arena.length(s) for s in sessions]
             positions = np.asarray(hists, np.int32)[:, None]
             caches = self.arena.gather(slots)
@@ -503,4 +663,16 @@ class Engine:
                 "decode_tokens_fused": px.decode_tokens_fused,
             })
         out["dense_dispatches"] = self.executor.dispatches
+        # per-kind dense causes: "requested" = the config pinned the
+        # dense baseline (explicit (L, B) bucket, packed/arena paths
+        # off); "forced" = a capability/ladder miss pushed an otherwise
+        # packed step onto the dense path.  Hit-rate readers use this to
+        # separate baseline measurement runs from real fallbacks.
+        by_cause: Dict[str, Dict[str, int]] = {}
+        for (kind, cause), count in self.dense_causes.items():
+            by_cause.setdefault(kind, {}).setdefault(cause, 0)
+            by_cause[kind][cause] += count
+        out["dense_dispatches_by_cause"] = by_cause
+        out["fused_greedy_steps"] = self.fused_greedy_steps
+        out["logits_rows_shipped"] = self.logits_rows_shipped
         return out

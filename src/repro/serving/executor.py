@@ -67,17 +67,21 @@ def make_packed_prefill_fn(cfg: ModelConfig) -> Callable:
 def make_packed_arena_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(T,), positions(T,), seg_slots(T,), slot_map(B,),
     cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,), arena, last_idx(B,))
-    → (last_logits(B,V), new_arena).  Arena-resident packed prefill: the
-    KV arena is read in place (slot axis indexed inside the kernel) and
-    only the step's new KV rows are written."""
+    → (last_logits(B,V), greedy_ids(B,), new_arena).  Arena-resident
+    packed prefill: the KV arena is read in place (slot axis indexed
+    inside the kernel) and only the step's new KV rows are written.
+    ``greedy_ids`` is the on-device argmax of each row — all-greedy
+    steps take their tokens from it without shipping the full-vocab
+    logits to host."""
 
     def packed_step(params, tokens, positions, seg_slots, slot_map,
                     cu_seqlens, q_offsets, kv_lengths, arena, last_idx):
-        return tr.forward_packed_arena(
+        last, new_arena = tr.forward_packed_arena(
             params, cfg, tokens=tokens, positions=positions,
             seg_slots=seg_slots, slot_map=slot_map, cu_seqlens=cu_seqlens,
             q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
             last_idx=last_idx)
+        return last, jnp.argmax(last, axis=-1).astype(jnp.int32), new_arena
 
     return packed_step
 
@@ -94,14 +98,19 @@ def make_decode_fn(cfg: ModelConfig) -> Callable:
 
 def make_arena_decode_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(B,), slot_map(B,), write_pos(B,), kv_lengths(B,),
-    arena) → (logits(B,V), new_arena).  Arena-resident decode: the KV
-    arena is read in place (slot axis indexed inside the kernel) and
-    only the single new KV row per session is written."""
+    arena) → (logits(B,V), greedy_ids(B,), new_arena).  Arena-resident
+    decode: the KV arena is read in place (slot axis indexed inside the
+    kernel) and only the single new KV row per session is written.
+    ``greedy_ids`` is the on-device argmax per row — all-greedy ticks
+    take their tokens from it without shipping full-vocab logits to
+    host (the fused-sampling greedy slice)."""
 
     def decode_step(params, tokens, slot_map, write_pos, kv_lengths, arena):
-        return tr.forward_decode_arena(
+        logits, new_arena = tr.forward_decode_arena(
             params, cfg, tokens=tokens, slot_map=slot_map,
             write_pos=write_pos, kv_lengths=kv_lengths, arena=arena)
+        return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                new_arena)
 
     return decode_step
 
@@ -264,19 +273,39 @@ class PackedBucketExecutor(_ExecutorBase):
                  max_seqs: int = 16,
                  donate_cache: Optional[bool] = None):
         super().__init__()
-        if not tr.supports_packed(cfg):
+        self.capability = tr.arena_capability(cfg)
+        if not self.capability.packed_ok:
             raise ValueError(
-                f"{cfg.name}: packed prefill needs pure-attention mixers "
-                "without sliding windows (SSM state / rolling SWA caches "
-                "mix tokens across the packed stream)")
+                f"{cfg.name}: packed serving needs a causal decoder "
+                "(encoder-only models have no serving decode loop)")
         self.cfg = cfg
+        # scratch-slot arenas (rolling SWA / SSM state, DESIGN.md §7)
+        # permanently reserve ONE stream row: bucket-tail tokens park
+        # their junk writes in a dummy segment whose slot is the
+        # scratch slot.  Folding the reservation into the ladder keeps
+        # every consumer — the engine, ServeLoop's fit_decodes, AWD,
+        # the simulator — agreeing on the schedulable room, so a fully
+        # fused tick still dispatches as ONE packed step.
+        self.reserve_pad_row = self.capability.needs_scratch_slot
+        if self.reserve_pad_row:
+            max_seqs = max_seqs - 1
+            assert max_seqs >= 1, \
+                "scratch-slot arenas need packed max_seqs >= 2"
         self.ladder = TokenBucketLadder(token_buckets, max_seqs)
         self.donate_cache = resolve_donation(donate_cache)
-        self._packed = make_packed_prefill_fn(cfg)
-        self._jit_packed = jax.jit(
-            self._packed, donate_argnums=(7,) if self.donate_cache else ())
-        # arena-resident form (DESIGN.md §6): the KV arena rides as an
-        # in-place argument (donated) instead of gathered cache rows
+        # LEGACY gathered-cache form: whole arena slots copied out and
+        # back around the step — pure-attention only (SSM state and
+        # rolling SWA slots have no gathered equivalent), kept as the
+        # measurement baseline
+        self._jit_packed = None
+        if self.capability.pure_attn:
+            self._packed = make_packed_prefill_fn(cfg)
+            self._jit_packed = jax.jit(
+                self._packed,
+                donate_argnums=(7,) if self.donate_cache else ())
+        # arena-resident form (DESIGN.md §6/§7): the KV + state arenas
+        # ride as an in-place argument (donated) instead of gathered
+        # cache rows; per-layer routing from the capability descriptor
         self._packed_arena = make_packed_arena_fn(cfg)
         self._jit_packed_arena = jax.jit(
             self._packed_arena,
@@ -294,7 +323,14 @@ class PackedBucketExecutor(_ExecutorBase):
 
     @property
     def max_seqs(self) -> int:
+        """Schedulable segments per step (pad-row reservation applied)."""
         return self.ladder.max_seqs
+
+    @property
+    def stream_rows(self) -> int:
+        """Cache rows of the compiled stream shape: the schedulable
+        segments plus the reserved scratch pad row, if any."""
+        return self.ladder.max_seqs + (1 if self.reserve_pad_row else 0)
 
     def bucket_for(self, total_tokens: int) -> Optional[int]:
         """Smallest token bucket ≥ total_tokens (None if off-scale)."""
@@ -303,6 +339,8 @@ class PackedBucketExecutor(_ExecutorBase):
     # ---------------------------------------------------------- dispatch
     def prefill_packed(self, params, tokens, positions, seg_ids, cu_seqlens,
                        q_offsets, kv_lengths, caches, last_idx):
+        assert self._jit_packed is not None, \
+            f"{self.cfg.name}: gathered-cache packed path is attention-only"
         args = (params, tokens, positions, seg_ids, cu_seqlens,
                 q_offsets, kv_lengths, caches, last_idx)
         exe = self._get("packed_prefill", self._jit_packed, args)
@@ -379,7 +417,7 @@ class PackedBucketExecutor(_ExecutorBase):
         |token_buckets| shapes total.  Lower + compile only; the arena
         is never executed against (nor donated away)."""
         t0 = time.perf_counter()
-        b = self.max_seqs
+        b = self.stream_rows
         for t in self.token_buckets:
             tokens = jnp.zeros((t,), jnp.int32)
             positions = jnp.zeros((t,), jnp.int32)
@@ -418,11 +456,11 @@ class DecodeBucketExecutor(_ExecutorBase):
                  max_seqs: Optional[int] = None,
                  donate_cache: Optional[bool] = None):
         super().__init__()
-        if not tr.supports_packed(cfg):
+        self.capability = tr.arena_capability(cfg)
+        if not self.capability.packed_ok:
             raise ValueError(
-                f"{cfg.name}: arena-resident decode needs pure-attention "
-                "mixers without sliding windows (SSM state / rolling SWA "
-                "caches stay on the dense decode path)")
+                f"{cfg.name}: arena-resident decode needs a causal "
+                "decoder (encoder-only models have no decode loop)")
         self.cfg = cfg
         self.ladder = DecodeBucketLadder(decode_buckets, max_seqs)
         self.donate_cache = resolve_donation(donate_cache)

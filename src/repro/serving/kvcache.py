@@ -36,19 +36,33 @@ from repro.models.config import ModelConfig
 
 class KVArena:
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
-                 dtype=None):
+                 dtype=None, swa_depth: Optional[int] = None,
+                 scratch_slot: bool = False):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
+        # swa_depth: attention-slot depth for sliding-window configs —
+        # the §7 rolling arena passes window + margin; the dense
+        # baseline passes max_len (window masked, not rolled); None
+        # keeps the legacy min(max_len, window) clamp
+        self.swa_depth = swa_depth
+        # scratch_slot: allocate ONE extra slot that sessions can never
+        # claim — rolling KV slots have no spare park row and SSM state
+        # has no park position, so pad rows/segments target this slot
+        # instead of aliasing a live one (DESIGN.md §7)
+        self.scratch: Optional[int] = num_slots if scratch_slot else None
+        alloc_slots = num_slots + (1 if scratch_slot else 0)
         # build per-slot cache then add the slot axis via the batch dim:
         # init_cache already produces (G, B, ...) — treat B as slots
-        self.arena = tr.init_cache(cfg, num_slots, max_len, dtype)
+        self.arena = tr.init_cache(cfg, alloc_slots, max_len, dtype,
+                                   swa_depth=swa_depth)
         self._free: List[int] = list(range(num_slots))
         self._session_slot: Dict[int, int] = {}
         self.lengths: Dict[int, int] = {}          # session -> tokens cached
         # whole-slot copy counters: the arena-resident paths (decode §5,
-        # packed prefill §6) must keep these at ZERO on their hot ticks
-        # — the acceptance proof that no O(S_max) round-trips survive
+        # packed prefill §6/§7) must keep these at ZERO on their hot
+        # ticks — the acceptance proof that no O(S_max) round-trips
+        # survive
         self.gather_calls = 0
         self.scatter_calls = 0
 

@@ -23,7 +23,7 @@ never exceeded, segments never split, per-session token order kept,
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -158,21 +158,27 @@ class DecodeRows:
 
 def pad_decode_rows(slots: Sequence[int], histories: Sequence[int],
                     tokens: Sequence[int], bucket: int,
-                    park_position: int, pad_token: int = 0) -> DecodeRows:
+                    park_position: int, pad_token: int = 0,
+                    pad_slot: Optional[int] = None) -> DecodeRows:
     """Pad one decode tick's rows to the ladder ``bucket``.
 
     The live rows keep their submission order and exact values — the
     bucket choice never drops or reorders sessions (property-tested).
     Pad rows reuse slot 0's arena row but write at ``park_position``
     (the arena's designated junk slot), so padding never corrupts a
-    live cache entry.
+    live cache entry.  ``pad_slot`` overrides the slot pad rows target:
+    rolling windowed arenas and SSM state arenas (DESIGN.md §7) pass
+    their dedicated scratch slot — a rolling slot has no spare park row
+    and recurrent state has no park position, so aliasing a live slot
+    is not an option there.
     """
     n = len(slots)
     assert 0 < n <= bucket, (n, bucket)
     assert len(histories) == n and len(tokens) == n
     tok = np.full(bucket, pad_token, np.int32)
     tok[:n] = tokens
-    sm = np.full(bucket, slots[0], np.int32)
+    sm = np.full(bucket, slots[0] if pad_slot is None else pad_slot,
+                 np.int32)
     sm[:n] = slots
     wp = np.full(bucket, park_position, np.int32)
     wp[:n] = histories

@@ -44,6 +44,11 @@ class CostModel:
     # ladder pad rows).  Calibratable against real tail-row cost — see
     # benchmarks.roofline.fit_beta_tail; None falls back to β.
     beta_tail: Optional[float] = None
+    # sliding-window width (DESIGN.md §7): attention compute and cached
+    # KV reads clamp history to min(h, window) — the windowed ragged
+    # kernels stream O(min(cached, window)) rows per token, so the
+    # model must bill the same.  None = full attention.
+    window: Optional[int] = None
 
     # ------------------------------------------------------------ pieces
     @property
@@ -51,13 +56,17 @@ class CostModel:
         """Linear cost of one tail/pad row (β_tail, falling back to β)."""
         return self.beta if self.beta_tail is None else self.beta_tail
 
+    def _h_eff(self, h: int) -> int:
+        """Attended history: full, or window-clamped for SWA configs."""
+        return h if self.window is None else min(h, self.window)
+
     def comp_time(self, l: int, h: int = 0, padded: Optional[int] = None) -> float:
         lp = padded if padded is not None else l
-        return self.alpha * lp * (lp + 2 * h) + self.beta * lp
+        return self.alpha * lp * (lp + 2 * self._h_eff(h)) + self.beta * lp
 
     def mem_time(self, l: int, h: int = 0, padded: Optional[int] = None) -> float:
         lp = padded if padded is not None else l
-        return self.w_tok * lp + self.gamma_r * h
+        return self.w_tok * lp + self.gamma_r * self._h_eff(h)
 
     def single(self, l: int, h: int = 0) -> float:
         """Single-request service time (what runtime fitting samples)."""
@@ -163,8 +172,8 @@ class CostModel:
             return 0.0
         b = bucket if bucket is not None else n
         comp = self.beta * n + self.tail_coef * max(0, b - n)
-        mem = self.weight_read + sum(self.gamma_r * h + self.w_tok
-                                     for h in cached_lens)
+        mem = self.weight_read + sum(self.gamma_r * self._h_eff(h)
+                                     + self.w_tok for h in cached_lens)
         return self.graph_launch + self.graph_lookup \
             + max(comp, mem) + self.decode_per_seq * n
 
@@ -175,8 +184,8 @@ class CostModel:
 
 
 def decode_hbm_bytes_per_token(cached_len: int, s_max: int,
-                               kv_row_bytes: float, *,
-                               arena: bool) -> float:
+                               kv_row_bytes: float, *, arena: bool,
+                               window: Optional[int] = None) -> float:
     """Modeled KV HBM traffic to generate ONE token for one session.
 
     arena=False (dense gather/scatter): the session's whole (S_max,)
@@ -185,19 +194,29 @@ def decode_hbm_bytes_per_token(cached_len: int, s_max: int,
     attended prefix and the new row.  arena=True (in-place): only the
     valid prefix is streamed and one new row is written.
 
+    ``window``: sliding-window width — the attended prefix clamps to
+    min(cached, window) on BOTH paths (§7): the windowed kernel streams
+    only in-window rows, and the dense step's masked reads still touch
+    only the window's rows of the gathered copy.  The dense path keeps
+    paying the 2·S_max whole-slot round-trip regardless — that copy is
+    blind to the mask, which is exactly the traffic the rolling arena
+    retires.
+
     kv_row_bytes: bytes of one cached token's K+V across all layers
     (2 · layers · Hkv · D · dtype_bytes).  Pure arithmetic so the
     benchmark, the simulator, and the docs all quote the same number.
     """
+    attended = cached_len if window is None else min(cached_len, window)
     if arena:
-        return kv_row_bytes * (cached_len + 1)
-    return kv_row_bytes * (2 * s_max + cached_len + 1)
+        return kv_row_bytes * (attended + 1)
+    return kv_row_bytes * (2 * s_max + attended + 1)
 
 
 def packed_hbm_bytes_per_step(new_tokens: Sequence[int],
                               histories: Sequence[int], s_max: int,
                               n_rows: int, kv_row_bytes: float, *,
-                              arena: bool) -> float:
+                              arena: bool,
+                              window: Optional[int] = None) -> float:
     """Modeled KV HBM traffic of ONE packed prefill / mixed / chunk step
     (the prefill sibling of :func:`decode_hbm_bytes_per_token`).
 
@@ -212,9 +231,16 @@ def packed_hbm_bytes_per_step(new_tokens: Sequence[int],
     kv_row_bytes: bytes of one cached token's K+V across all layers
     (2 · layers · Hkv · D · dtype_bytes).  Pure arithmetic so the
     benchmark, the simulator, and the docs all quote the same number.
+
+    ``window``: sliding-window width — each segment's attended read
+    clamps to min(history, window) + new on both paths (§7), while the
+    dense path's whole-slot round-trip stays 2 · n_rows · s_max.
     """
-    useful = sum(h + l for h, l in zip(histories, new_tokens))  # reads
-    useful += sum(new_tokens)                                   # writes
+    def _h(h: int) -> int:
+        return h if window is None else min(h, window)
+
+    useful = sum(_h(h) + l for h, l in zip(histories, new_tokens))  # reads
+    useful += sum(new_tokens)                                       # writes
     if arena:
         return kv_row_bytes * useful
     return kv_row_bytes * (useful + 2 * n_rows * s_max)

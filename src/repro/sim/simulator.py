@@ -48,6 +48,11 @@ class SimConfig:
     arena_prefill: bool = True
     packed_seqs: int = 16          # gathered cache rows (b_max)
     arena_s_max: int = 256         # arena slot depth S_max
+    # sliding-window width (DESIGN.md §7): mirrors the engine's rolling
+    # windowed arena — decode ticks bill γ_r on min(cached, window)
+    # rows per session, exactly the windowed kernel's HBM stream.
+    # (CostModel.window applies the same clamp to prefill pricing.)
+    window: Optional[int] = None
 
 
 class _Instance:
@@ -152,8 +157,12 @@ class ClusterSim:
     def _decode_tick_time(self, ctx_lens: List[int]) -> float:
         """One decode-only tick, mirroring the real engine's routing:
         on-ladder counts run the arena-resident bucketed step billed on
-        actual cached lengths; ladder overflow falls back to the dense
-        gather path's per-count pricing (the engine does exactly this)."""
+        actual cached lengths (window-clamped for SWA configs — the §7
+        rolling arena streams min(cached, window) rows); ladder overflow
+        falls back to the dense gather path's per-count pricing (the
+        engine does exactly this)."""
+        if self.cfg.window is not None:
+            ctx_lens = [min(h, self.cfg.window) for h in ctx_lens]
         bucket = self._decode_ladder.bucket_for(len(ctx_lens))
         if bucket is None:
             return self.cost.decode_step_time(len(ctx_lens))

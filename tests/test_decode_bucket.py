@@ -204,7 +204,10 @@ def test_decode_pad_rows_counters():
     cfg = CONFIGS["qwen3-4b"]()
     rng = np.random.default_rng(47)
     params, _ = tr.init_params(cfg, KEY)
+    # packed=False pins prefill to the dense executor so its per-kind
+    # hit rates stay observable next to the bucketed decode counters
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
+                                           packed=False,
                                            decode_buckets=(1, 2, 4)))
     f = eng.prefill_batch([0, 1, 2], [rng.integers(0, cfg.vocab_size, 4)
                                       for _ in range(3)])

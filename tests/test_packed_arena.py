@@ -221,8 +221,9 @@ def test_packed_ticks_run_zero_slot_copies():
 
 
 def test_dense_fallbacks_still_gather():
-    """Off-ladder packed totals and SSM architectures keep the dense
-    gather path — bit-identical routing to the pre-§6 engine."""
+    """Off-ladder packed totals keep the dense gather path; SSM
+    architectures are arena-resident by default (§7) and gather whole
+    slots only when the dense baseline is explicitly requested."""
     rng = np.random.default_rng(19)
     cfg = CONFIGS["qwen3-4b"]()
     params, _ = tr.init_params(cfg, KEY)
@@ -233,15 +234,25 @@ def test_dense_fallbacks_still_gather():
     assert eng.packed_executor.total_tokens == 0     # off-ladder
     assert eng.executor.total_tokens == 30           # dense served it
     assert eng.arena.gather_calls == 1 and eng.arena.scatter_calls == 1
-    # mamba: packed unsupported → no packed executor, dense path intact
+    assert eng.stats()["dense_dispatches_by_cause"]["prefill"] == \
+        {"forced": 1}
+    # mamba: arena-resident by default — the SSM state arena steps in
+    # place, zero whole-slot copies
     mcfg = get_smoke("mamba2-2.7b")
     mparams, _ = tr.init_params(mcfg, KEY)
     meng = Engine(mcfg, mparams, EngineConfig(num_slots=4, max_len=64,
                                               packed=True))
-    assert meng.packed_executor is None
+    assert meng.packed_executor is not None
     out = meng.prefill_batch([0], [rng.integers(0, mcfg.vocab_size, 6)])
     assert 0 in out
-    assert meng.arena.gather_calls == 1
+    assert meng.arena.gather_calls == 0
+    # the dense baseline survives behind an explicit request
+    base = Engine(mcfg, mparams, EngineConfig(num_slots=4, max_len=64,
+                                              packed=False))
+    assert base.packed_executor is None
+    out = base.prefill_batch([0], [rng.integers(0, mcfg.vocab_size, 6)])
+    assert 0 in out
+    assert base.arena.gather_calls == 1
 
 
 # ------------------------------------------------- pad-slot aliasing

@@ -104,18 +104,22 @@ def test_packed_beats_grid_padding(qwen):
 
 
 def test_packed_fallback_paths(qwen):
-    """Unsupported arch / off-ladder totals fall back to the dense path."""
+    """Capability routing (§7): every CAUSAL arch is packed-servable
+    (mamba rides the SSM state arena); encoder-only models raise; and
+    off-ladder totals still fall back to the dense path."""
     cfg, params = qwen
     rng = np.random.default_rng(3)
-    # mamba: packed unsupported → engine keeps packed_executor = None
+    # mamba: arena-resident packed serving by default
     mcfg = get_smoke("mamba2-2.7b")
     mparams, _ = tr.init_params(mcfg, KEY)
     meng = packed_engine(mcfg, mparams)
-    assert meng.packed_executor is None
+    assert meng.packed_executor is not None
     out = meng.prefill_packed([0], [rng.integers(0, mcfg.vocab_size, 6)])
     assert 0 in out
+    assert meng.packed_executor.total_tokens > 0
+    # encoder-only (no causal decode loop) is the remaining hard wall
     with pytest.raises(ValueError):
-        PackedBucketExecutor(mcfg)
+        PackedBucketExecutor(get_smoke("hubert-xlarge"))
     # off-ladder total → dense fallback, counters stay on the dense side
     eng = packed_engine(cfg, params, token_buckets=(16,), max_len=64)
     eng.prefill_packed([0], [rng.integers(0, cfg.vocab_size, 30)])

@@ -1,0 +1,306 @@
+"""Windowed (rolling) arena serving — DESIGN.md §7.
+
+Three layers of proof for the sliding-window path:
+
+  * kernel parity: the windowed arena kernels (`ragged_prefill_arena` /
+    `decode_attn_arena` with ``window``) and their rolling oracles agree
+    with full-history windowed attention (``ref_flash_attn(window=)``) —
+    including wraparound, GQA, and interpret-mode Pallas;
+  * the hypothesis no-alias property: random (window, history, new)
+    mixes written modularly into a window+margin-deep slot never clobber
+    a key still inside any query's window — the arena path matches the
+    dense full-history oracle at 1e-5;
+  * engine acceptance: with a DEFAULT EngineConfig, an SWA config runs
+    a mixed prefill + chunk + decode ServeLoop-style schedule entirely
+    arena-resident (KVArena.gather_calls == scatter_calls == 0) with
+    greedy tokens identical to the full-forward oracle at every step.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.kernels import ops, ref
+from repro.kernels.decode_attn import decode_attn_arena
+from repro.kernels.ragged_prefill import ragged_prefill_arena
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(21)
+TOL = dict(atol=1e-5, rtol=1e-5)
+
+
+def _build_rolling_arena(rng, full_k, full_v, depth, n_slots=3, slot=1):
+    """Arena slots with `slot` holding the last min(kv_len, depth)
+    positions of (full_k, full_v) written modularly; other slots junk."""
+    kv_len = full_k.shape[0]
+    hkv, hd = full_k.shape[1], full_k.shape[2]
+    ak = rng.standard_normal((n_slots, depth, hkv, hd)).astype(np.float32)
+    av = rng.standard_normal((n_slots, depth, hkv, hd)).astype(np.float32)
+    for p in range(max(0, kv_len - depth), kv_len):
+        ak[slot, p % depth] = full_k[p]
+        av[slot, p % depth] = full_v[p]
+    return jnp.asarray(ak), jnp.asarray(av)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("hist,new", [(0, 5), (12, 3), (30, 4), (45, 1)])
+def test_windowed_prefill_kernel_parity(hq, hkv, hist, new):
+    """Windowed arena prefill kernel == rolling oracle == full-history
+    windowed attention, across GQA ratios and wraparound depths."""
+    rng = np.random.default_rng(hist * 10 + new)
+    window, depth, hd = 8, 16, 8
+    kv_len = hist + new
+    fk = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fv = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fq = rng.standard_normal((kv_len, hq, hd)).astype(np.float32)
+    gt = ref.ref_flash_attn(jnp.asarray(fq[None, hist:]),
+                            jnp.asarray(fk[None]), jnp.asarray(fv[None]),
+                            q_offsets=jnp.asarray([hist], jnp.int32),
+                            window=window)[0]
+    ak, av = _build_rolling_arena(rng, fk, fv, depth)
+    q = jnp.asarray(fq[hist:])
+    cu = jnp.asarray([0, new], jnp.int32)
+    off = jnp.asarray([hist], jnp.int32)
+    kvl = jnp.asarray([kv_len], jnp.int32)
+    sm = jnp.asarray([1], jnp.int32)
+    o_ref = ref.ref_ragged_prefill_arena(q, ak, av, sm, cu, off, kvl,
+                                         window=window)
+    o_pal = ragged_prefill_arena(q, ak, av, sm, cu, off, kvl, window=window,
+                                 block_q=2, block_k=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(gt), **TOL)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(gt), **TOL)
+
+
+@pytest.mark.parametrize("kv_len", [1, 7, 16, 23, 40])
+def test_windowed_decode_kernel_parity(kv_len):
+    """Windowed arena decode kernel == rolling oracle == full-history
+    windowed attention at every wraparound phase."""
+    rng = np.random.default_rng(kv_len)
+    window, depth, hq, hkv, hd = 8, 16, 4, 2, 8
+    fk = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fv = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fq = rng.standard_normal((1, 1, hq, hd)).astype(np.float32)
+    gt = ref.ref_flash_attn(jnp.asarray(fq), jnp.asarray(fk[None]),
+                            jnp.asarray(fv[None]),
+                            q_offsets=jnp.asarray([kv_len - 1], jnp.int32),
+                            window=window)[:, 0]
+    ak, av = _build_rolling_arena(rng, fk, fv, depth)
+    q = jnp.asarray(fq[:, 0])
+    sm = jnp.asarray([1], jnp.int32)
+    kvl = jnp.asarray([kv_len], jnp.int32)
+    d_ref = ref.ref_decode_attn_arena(q, ak, av, sm, kvl, window=window)
+    d_pal = decode_attn_arena(q, ak, av, sm, kvl, window=window, block_k=4,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(gt), **TOL)
+    np.testing.assert_allclose(np.asarray(d_pal), np.asarray(gt), **TOL)
+
+
+def test_windowed_multi_segment_stream():
+    """One packed stream mixing prefill, re-prefill (wrapped history),
+    and decode segments over distinct rolling slots."""
+    rng = np.random.default_rng(3)
+    window, depth, hq, hkv, hd = 8, 16, 4, 2, 8
+    segs = [(0, 4), (20, 3), (14, 1)]          # (history, new)
+    n = len(segs)
+    n_slots = n + 1
+    ak = rng.standard_normal((n_slots, depth, hkv, hd)).astype(np.float32)
+    av = rng.standard_normal((n_slots, depth, hkv, hd)).astype(np.float32)
+    fulls, q_rows, gts = [], [], []
+    for i, (h, l) in enumerate(segs):
+        kv_len = h + l
+        fk = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+        fv = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+        fq = rng.standard_normal((l, hq, hd)).astype(np.float32)
+        for p in range(max(0, kv_len - depth), kv_len):
+            ak[i + 1, p % depth] = fk[p]
+            av[i + 1, p % depth] = fv[p]
+        gts.append(ref.ref_flash_attn(
+            jnp.asarray(fq[None]), jnp.asarray(fk[None]),
+            jnp.asarray(fv[None]), q_offsets=jnp.asarray([h], jnp.int32),
+            window=window)[0])
+        q_rows.append(fq)
+    q = jnp.asarray(np.concatenate(q_rows, axis=0))
+    lens = [l for _, l in segs]
+    cu = jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+    off = jnp.asarray([h for h, _ in segs], jnp.int32)
+    kvl = jnp.asarray([h + l for h, l in segs], jnp.int32)
+    sm = jnp.asarray([1, 2, 3], jnp.int32)
+    out = ragged_prefill_arena(q, jnp.asarray(ak), jnp.asarray(av), sm, cu,
+                               off, kvl, window=window, block_q=2, block_k=4,
+                               interpret=True)
+    o = 0
+    for i, l in enumerate(lens):
+        np.testing.assert_allclose(np.asarray(out[o:o + l]),
+                                   np.asarray(gts[i]), **TOL)
+        o += l
+
+
+# ------------------------------------------------- hypothesis property
+# (optional locally; CI installs hypothesis and conftest fails loudly
+# if it is missing there, so the property always runs in CI)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_rolling_writes_never_alias():
+    @settings(max_examples=30, deadline=None)
+    @given(window=st.integers(2, 12), hist=st.integers(0, 50),
+           new=st.integers(1, 8), margin=st.integers(8, 16),
+           seed=st.integers(0, 2**16))
+    def prop(window, hist, new, margin, seed):
+        _check_no_alias(window, hist, new, margin, seed)
+    prop()
+
+
+def _check_no_alias(window, hist, new, margin, seed):
+    """The §7 no-alias invariant: modular writes into a slot of depth ≥
+    window + margin (new ≤ margin) never overwrite a key still inside
+    ANY query's window — random (window, history, new) mixes match the
+    dense full-history windowed oracle at 1e-5, through wraparound."""
+    rng = np.random.default_rng(seed)
+    depth = window + margin
+    hq = hkv = 2
+    hd = 4
+    kv_len = hist + new
+    fk = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fv = rng.standard_normal((kv_len, hkv, hd)).astype(np.float32)
+    fq = rng.standard_normal((new, hq, hd)).astype(np.float32)
+    # arena state BEFORE the step: last min(hist, depth) history rows
+    ak = rng.standard_normal((2, depth, hkv, hd)).astype(np.float32)
+    av = rng.standard_normal((2, depth, hkv, hd)).astype(np.float32)
+    for p in range(max(0, hist - depth), hist):
+        ak[1, p % depth] = fk[p]
+        av[1, p % depth] = fv[p]
+    # the step's own modular writes (what the layer does in place)
+    ak = jnp.asarray(ak).at[1, (hist + np.arange(new)) % depth].set(
+        fk[hist:])
+    av = jnp.asarray(av).at[1, (hist + np.arange(new)) % depth].set(
+        fv[hist:])
+    gt = ref.ref_flash_attn(jnp.asarray(fq[None]), jnp.asarray(fk[None]),
+                            jnp.asarray(fv[None]),
+                            q_offsets=jnp.asarray([hist], jnp.int32),
+                            window=window)[0]
+    out = ref.ref_ragged_prefill_arena(
+        jnp.asarray(fq), ak, av, jnp.asarray([1], jnp.int32),
+        jnp.asarray([0, new], jnp.int32), jnp.asarray([hist], jnp.int32),
+        jnp.asarray([kv_len], jnp.int32), window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gt), **TOL)
+
+
+# ---------------------------------------------------- engine acceptance
+
+
+def _greedy(params, cfg, seq):
+    lo, _, _ = tr.forward(params, cfg,
+                          tokens=jnp.asarray(seq, jnp.int32)[None])
+    return int(jnp.argmax(lo[0, -1]))
+
+
+def test_windowed_engine_arena_resident_default_config():
+    """Acceptance: with default EngineConfig flags, the SWA config runs
+    mixed prefill + chunk + decode schedules fully arena-resident —
+    zero whole-slot gather/scatter, rolling window-deep slots, greedy
+    tokens identical to the full-forward dense oracle even with
+    cached_len ≫ window."""
+    cfg = get_smoke("mixtral-8x7b")            # sliding_window = 32
+    params, _ = tr.init_params(cfg, KEY)
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=4, max_len=128, chunk_tokens=16,
+        token_buckets=(16, 32), decode_buckets=(1, 2, 4)))
+    assert eng._rolling and eng.arena.scratch is not None
+    depth = eng.arena.arena[0]["k"].shape[2]
+    assert depth < 128, "slots must be window-deep, not S_max-deep"
+
+    ctx = {}
+    t1 = rng.integers(0, cfg.vocab_size, 10)
+    t2 = rng.integers(0, cfg.vocab_size, 7)
+    out = eng.step_mixed([(0, t1), (1, t2)], []).tokens
+    ctx[0], ctx[1] = list(t1), list(t2)
+    assert out[0] == _greedy(params, cfg, ctx[0])
+    assert out[1] == _greedy(params, cfg, ctx[1])
+    # decode both sessions past the ROLLING DEPTH (every slot row has
+    # wrapped at least once), with a chunked long turn riding in
+    last = dict(out)
+    # enough ticks to (a) wrap every rolling slot row and (b) push the
+    # cached length well past the window
+    n_ticks = max(depth + 4, 2 * cfg.sliding_window + 5) - 10
+    for i in range(n_ticks):
+        if i == 20:                      # a C_l chunked long turn rides in
+            long_toks = rng.integers(0, cfg.vocab_size, 40)
+            tok = eng.prefill_long(2, long_toks)
+            assert tok == _greedy(params, cfg, list(long_toks))
+            eng.close_session(2)
+        dec = eng.decode_batch([0, 1], [last[0], last[1]])
+        for s in (0, 1):
+            ctx[s].append(last[s])
+            last[s] = dec[s][0]
+            if i % 4 == 0 or i >= n_ticks - 3:   # keep the test fast
+                assert last[s] == _greedy(params, cfg, ctx[s]), (s, i)
+    assert eng.history(0) == 10 + n_ticks > depth      # wrapped
+    assert eng.history(0) > 2 * cfg.sliding_window     # cached >> window
+    # mid-conversation re-prefill next to a fused decode row
+    t3 = rng.integers(0, cfg.vocab_size, 5)
+    res = eng.step_mixed([(0, t3)], [(1, last[1])])
+    assert res.fused
+    assert res.tokens[0] == _greedy(params, cfg, ctx[0] + list(t3))
+    ctx[1].append(last[1])
+    assert res.tokens[1] == _greedy(params, cfg, ctx[1])
+    # the §7 acceptance counters: every tick was arena-resident
+    assert eng.arena.gather_calls == 0
+    assert eng.arena.scatter_calls == 0
+    assert eng.stats()["dense_dispatches"] == 0
+
+
+def test_windowed_dense_baseline_stays_available():
+    """packed=False requests the dense measurement baseline: full-depth
+    slots, window enforced by masking, same greedy tokens — and the
+    cause accounting labels every dense dispatch 'requested'."""
+    cfg = get_smoke("mixtral-8x7b")
+    params, _ = tr.init_params(cfg, KEY)
+    rng = np.random.default_rng(9)
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=128,
+                                           packed=False,
+                                           arena_decode=False))
+    assert not eng._rolling and eng.packed_executor is None
+    assert eng.arena.arena[0]["k"].shape[2] == 128
+    t1 = rng.integers(0, cfg.vocab_size, 10)
+    out = eng.prefill_batch([0], [t1])
+    ctx = list(t1)
+    assert out[0] == _greedy(params, cfg, ctx)
+    last = out[0]
+    for i in range(40):                      # past the window
+        ctx.append(last)
+        last = eng.decode_batch([0], [last])[0][0]
+        assert last == _greedy(params, cfg, ctx), i
+    causes = eng.stats()["dense_dispatches_by_cause"]
+    assert causes["prefill"] == {"requested": 1}
+    assert causes["decode"] == {"requested": 40}
+    assert eng.arena.gather_calls > 0
+
+
+def test_windowed_split_replaces_dense_fallback():
+    """Off-ladder totals on a rolling arena cannot fall back to the
+    dense gather path — they split across packed chunks and ladder
+    groups, staying arena-resident and token-exact."""
+    cfg = get_smoke("mixtral-8x7b")
+    params, _ = tr.init_params(cfg, KEY)
+    rng = np.random.default_rng(13)
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=4, max_len=128, chunk_tokens=16,
+        token_buckets=(16, 32), decode_buckets=(1, 2)))
+    big = rng.integers(0, cfg.vocab_size, 50)   # > max bucket 32
+    res = eng.step_mixed([(0, big)], [])
+    assert res.tokens[0] == _greedy(params, cfg, list(big))
+    assert eng.arena.gather_calls == 0 and eng.arena.scatter_calls == 0
+    assert eng.stats()["dense_dispatches"] == 0
