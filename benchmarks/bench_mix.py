@@ -28,6 +28,8 @@ BENCH_PREFILL_JSON = os.path.join(os.path.dirname(__file__), "..",
                                   "BENCH_prefill.json")
 BENCH_WINDOW_JSON = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_window.json")
+BENCH_MULTITURN_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_multiturn.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -503,6 +505,103 @@ def window_scenario(write: bool = True) -> List[Dict]:
     return rows
 
 
+def _drive_multiturn(reuse: bool, cfg, params, page_size: int = 16,
+                     max_len: int = 256) -> Dict:
+    """Multi-turn chat on the PAGED engine (DESIGN.md §8): stateless
+    API-style turns — every turn submits the FULL conversation under a
+    fresh session id and closes it afterwards, so only the radix prefix
+    index can carry KV across turns.
+
+    reuse=True: the radix index maps each turn's matched prefix onto
+    the pages the previous turn committed — the step prefills (and the
+    model bills) only the new suffix plus the partial boundary page.
+    reuse=False: the same paged kernels with the prefix cache off —
+    every turn re-prefills its whole conversation."""
+    import numpy as np
+
+    from repro.data.synthetic import MultiTurnConfig, gen_multiturn_sessions
+    from repro.serving import Engine, EngineConfig
+    from repro.sim.costmodel import packed_hbm_bytes_per_step
+
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=16, max_len=max_len, chunk_tokens=64, packed=True,
+        packed_max_seqs=8, token_buckets=(64, 256), paged_kv=True,
+        page_size=page_size, prefix_cache=reuse))
+    trace = gen_multiturn_sessions(MultiTurnConfig(
+        vocab_size=cfg.vocab_size, num_sessions=6, system_len=48,
+        suffix_lo=8, suffix_hi=32, max_turns=4, seed=11))
+    kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
+                    * np.dtype(cfg.np_dtype).itemsize)
+    prompt_tokens = prefilled = 0
+    hbm_bytes = 0.0
+    late_overpay = []      # turn ≥ 2: prefilled − suffix (page remainder)
+    sid = 1000
+    t0 = time.perf_counter()
+    for u in trace:
+        hit0 = eng.stats()["prefix_hit_tokens"]
+        eng.open_session(sid)
+        eng.step_mixed([(sid, u.tokens)], [])
+        matched = eng.stats()["prefix_hit_tokens"] - hit0
+        new = len(u.tokens) - matched
+        prompt_tokens += len(u.tokens)
+        prefilled += new
+        # the §8 step streams matched pages + prefills the suffix: the
+        # same O(history + new) traffic the arena model already prices
+        hbm_bytes += packed_hbm_bytes_per_step(
+            [new], [matched], max_len, 1, kv_row_bytes, arena=True)
+        if u.turn >= 1:
+            late_overpay.append(new - u.suffix)
+        eng.close_session(sid)
+        sid += 1
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "turns": len(trace),
+        "prompt_tokens": prompt_tokens,
+        "prefilled_tokens": prefilled,
+        "prefix_hit_rate": round(st["prefix_hit_tokens"]
+                                 / max(prompt_tokens, 1), 3),
+        "max_turn_overpay": max(late_overpay) if late_overpay else 0,
+        "page_size": page_size,
+        "hbm_bytes_total": round(hbm_bytes, 1),
+        "pages_evicted": st["pages_evicted"],
+        "arena_gathers": st["arena_gathers"],
+        "arena_scatters": st["arena_scatters"],
+        "packed_dispatches": st["packed_dispatches"],
+        "dense_dispatches": st["dense_dispatches"],
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def multiturn_scenario(write: bool = True) -> List[Dict]:
+    """The BENCH_multiturn.json rows: radix prefix reuse on the paged
+    arena vs the same paged engine re-prefilling every turn."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    new = _drive_multiturn(True, cfg, params)
+    old = _drive_multiturn(False, cfg, params)
+    rows = [
+        {"bench": "multiturn_paged", "tag": "reuse", "mean_ms": 0.0, **new},
+        {"bench": "multiturn_paged", "tag": "noreuse", "mean_ms": 0.0,
+         **old},
+        {"bench": "multiturn_paged", "tag": "gain", "mean_ms": 0.0,
+         "prefill_reduction_x": round(
+             old["prefilled_tokens"] / max(new["prefilled_tokens"], 1), 2),
+         "hbm_reduction_x": round(
+             old["hbm_bytes_total"]
+             / max(new["hbm_bytes_total"], 1e-9), 2)},
+    ]
+    if write:
+        with open(BENCH_MULTITURN_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -517,6 +616,7 @@ def run() -> List[Dict]:
     rows.extend(decode_scenario())
     rows.extend(prefill_scenario())
     rows.extend(window_scenario())
+    rows.extend(multiturn_scenario())
     return rows
 
 
@@ -553,6 +653,28 @@ def _decode_smoke() -> None:
     print("decode-bucket smoke OK")
 
 
+def _multiturn_smoke() -> None:
+    """CI smoke: the §8 multi-turn acceptance criteria — every turn ≥ 2
+    prefill collapses to the new-suffix cost (plus at most one partial
+    page), prefix hit rate above one half, strictly fewer prefilled
+    tokens and lower modeled HBM bytes than reuse-off, and zero
+    whole-slot gather/scatter on the paged path."""
+    rows = multiturn_scenario()
+    for r in rows:
+        print(r)
+    new, old, gain = rows
+    assert new["prefix_hit_rate"] > 0.5, new
+    assert old["prefix_hit_rate"] == 0.0, old
+    assert new["prefilled_tokens"] < old["prefilled_tokens"], (new, old)
+    assert new["hbm_bytes_total"] < old["hbm_bytes_total"], (new, old)
+    # turn ≥ 2 pays suffix + at most the partial boundary page
+    assert new["max_turn_overpay"] <= new["page_size"] - 1, new
+    assert new["arena_gathers"] == 0 and new["arena_scatters"] == 0, new
+    assert old["arena_gathers"] == 0 and old["arena_scatters"] == 0, old
+    assert new["dense_dispatches"] == 0, new
+    print("multiturn-paged smoke OK")
+
+
 def _window_smoke() -> None:
     """CI smoke: the sliding-window acceptance criteria — the rolling
     windowed arena keeps gather/scatter at zero, bounds its decode
@@ -580,5 +702,7 @@ if __name__ == "__main__":
         _prefill_smoke()
     elif "window" in sys.argv[1:]:
         _window_smoke()
+    elif "multiturn" in sys.argv[1:]:
+        _multiturn_smoke()
     else:
         _decode_smoke()

@@ -22,6 +22,10 @@ class Request:
     deadline: Optional[float] = None     # absolute TTFT deadline (None = offline)
     session: int = -1
     decode_tokens: int = 0               # expected output length (PD sims)
+    # tokens of the prompt a paged KV arena can inherit from its radix
+    # prefix index (shared system prompt / earlier turn) instead of
+    # prefilling — the scheduler and sim bill only the suffix past it
+    reusable_prefix: int = 0
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     # runtime bookkeeping (filled by scheduler/engine/sim)

@@ -211,6 +211,72 @@ def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                      page_table: jax.Array, lengths: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """Paged flash decode.
+
+    The paged generalization of :func:`decode_attn_arena`: each row's KV
+    lives on fixed-size pages scattered in a shared pool and a per-row
+    page table maps logical kv block → physical page, so pages can be
+    SHARED between rows (prefix reuse, COW forks).
+
+    q: (B, Hq, D); k, v: (N_pages, page_size, Hkv, D) — the FULL page
+    pools, untouched; page_table: (B, P_max) physical page of each row's
+    logical page i; lengths: (B,) valid cache entries (history + the new
+    row, which the caller scatter-wrote before this call).
+
+    Returns (B, Hq, D).  One kv grid block == one page: logical page ki
+    holds absolute positions [ki·ps, (ki+1)·ps), so the shared
+    ``_arena_kernel`` math is reused verbatim with the page-id lookup
+    replacing the slot-id lookup.  Logical pages past
+    ``ceil(lengths/ps)`` clamp to the last valid page (a repeated page
+    index skips the DMA), so a tick streams only ``lengths[b]`` cache
+    rows per sequence.
+    """
+    b, hq, d = q.shape
+    ps, hkv = k.shape[1], k.shape[2]
+    p_max = page_table.shape[1]
+    rep = hq // hkv
+    block_k = ps                   # the page IS the kv block
+    nk = p_max
+    qg = q.reshape(b, hkv, rep, d)
+
+    def kv_map(bb, g, ki, pt_ref, len_ref):
+        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        return (pt_ref[bb, jnp.minimum(ki, last)], 0, g, 0)
+
+    kern = functools.partial(_arena_kernel, scale=d ** -0.5, window=None,
+                             depth=ps * p_max, block_k=block_k,
+                             n_kv_blocks=nk, n_phys_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki, *_: (bb, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bb, g, ki, *_: (bb, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
                                              "interpret"))
 def decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,

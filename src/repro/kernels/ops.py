@@ -18,10 +18,13 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attn import decode_attn as _decode_pallas
 from repro.kernels.decode_attn import decode_attn_arena as _decode_arena_pallas
+from repro.kernels.decode_attn import decode_attn_paged as _decode_paged_pallas
 from repro.kernels.flash_attn import flash_attn as _flash_pallas
 from repro.kernels.ragged_prefill import ragged_prefill_attn as _ragged_pallas
 from repro.kernels.ragged_prefill import \
     ragged_prefill_arena as _ragged_arena_pallas
+from repro.kernels.ragged_prefill import \
+    ragged_prefill_paged as _ragged_paged_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _FORCE: Optional[str] = None  # None=auto, "pallas", "ref"
@@ -90,6 +93,24 @@ def ragged_mha_arena(q, k, v, slot_map, cu_seqlens, q_offsets=None,
                                             causal=causal, window=window)
 
 
+def ragged_mha_paged(q, k, v, page_table, cu_seqlens, q_offsets=None,
+                     kv_lengths=None, *, causal=True, block_q=128):
+    """Paged packed prefill attention.  q: (T, Hq, D) flat stream;
+    k, v: (N_pages, page_size, Hkv, D) full page pools; page_table:
+    (B, P_max) physical page per logical kv block — pages may be shared
+    between segments (prefix reuse, COW forks).  See
+    kernels.ragged_prefill.ragged_prefill_paged."""
+    if _use_pallas():
+        return _ragged_paged_pallas(q, k, v, page_table, cu_seqlens,
+                                    q_offsets, kv_lengths, causal=causal,
+                                    block_q=block_q,
+                                    interpret=not _on_tpu())
+    return ref_mod.ref_ragged_prefill_paged(q, k, v, page_table, cu_seqlens,
+                                            q_offsets=q_offsets,
+                                            kv_lengths=kv_lengths,
+                                            causal=causal)
+
+
 def decode(q, k, v, lengths, *, block_k=512):
     """Single-token flash decode.  q: (B, Hq, D)."""
     if _use_pallas():
@@ -109,6 +130,16 @@ def decode_arena(q, k, v, slot_map, lengths, *, window=None, block_k=512):
                                     interpret=not _on_tpu())
     return ref_mod.ref_decode_attn_arena(q, k, v, slot_map, lengths,
                                          window=window)
+
+
+def decode_paged(q, k, v, page_table, lengths):
+    """Paged single-token flash decode.  q: (B, Hq, D); k, v:
+    (N_pages, page_size, Hkv, D) full page pools; page_table: (B, P_max);
+    lengths: (B,).  See kernels.decode_attn.decode_attn_paged."""
+    if _use_pallas():
+        return _decode_paged_pallas(q, k, v, page_table, lengths,
+                                    interpret=not _on_tpu())
+    return ref_mod.ref_decode_attn_paged(q, k, v, page_table, lengths)
 
 
 def ssd(x, dt, a, bmat, cmat, init_state, *, chunk=128):

@@ -305,6 +305,100 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
 
 @functools.partial(
     jax.jit,
+    static_argnames=("causal", "block_q", "interpret"))
+def ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                         page_table: jax.Array, cu_seqlens: jax.Array,
+                         q_offsets: Optional[jax.Array] = None,
+                         kv_lengths: Optional[jax.Array] = None, *,
+                         causal: bool = True, block_q: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Paged ragged prefill flash attention.
+
+    The paged generalization of :func:`ragged_prefill_arena`: instead of
+    one contiguous arena slot per segment, each segment's KV lives on a
+    list of fixed-size PAGES scattered anywhere in a shared pool, and a
+    per-segment page table maps logical kv block → physical page.  Pages
+    can therefore be SHARED between segments (radix-tree prefix reuse,
+    COW forks) — the kernel neither knows nor cares: it reads whatever
+    page the table names.
+
+    q: (T, Hq, D) packed flat stream; k, v: (N_pages, page_size, Hkv, D)
+    — the FULL page pools with this step's new KV already scatter-written
+    at each token's (page, offset); page_table: (B, P_max) int32 physical
+    page of each segment's logical page i (entries past the valid length
+    may point anywhere live — they are clamped in the index map and never
+    computed on); cu_seqlens: (B+1,) flat row offsets; q_offsets: (B,)
+    history length per segment; kv_lengths: (B,) valid cache entries
+    (history + new).
+
+    Returns (T, Hq, D) with zeros on rows past ``cu_seqlens[-1]``.  One
+    kv grid block == one page (block_k = page_size): logical page ki of
+    segment b holds absolute positions [ki·ps, (ki+1)·ps), so the shared
+    ``_arena_kernel`` math is reused verbatim with the page-id lookup
+    replacing the slot-id lookup in the BlockSpec index map.  Pages past
+    ``ceil(kv_lengths[b]/ps)`` clamp to the last valid page (a repeated
+    block index skips the DMA), so a step streams only the valid pages
+    of the segments it serves.
+    """
+    t, hq, d = q.shape
+    ps, hkv = k.shape[1], k.shape[2]
+    b, p_max = page_table.shape
+    rep = hq // hkv
+    if q_offsets is None:
+        q_offsets = jnp.zeros((b,), jnp.int32)
+    if kv_lengths is None:
+        kv_lengths = jnp.full((b,), ps * p_max, jnp.int32)
+
+    block_q = min(block_q, max(t, 1))
+    block_k = ps                   # the page IS the kv block
+    t_pad = -(-t // block_q) * block_q
+    qt = jnp.moveaxis(q, 1, 0)                                 # (Hq, T, D)
+    if t_pad != t:
+        qt = jnp.pad(qt, ((0, 0), (0, t_pad - t), (0, 0)))
+    nq, nk = t_pad // block_q, p_max
+
+    def kv_map(h, qi, bb, ki, pt_ref, cu_ref, off_ref, len_ref):
+        # clamp past-the-length logical pages to the last valid one: a
+        # repeated physical page is not re-fetched, so invalid pages
+        # cost no DMA.
+        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        return (pt_ref[bb, jnp.minimum(ki, last)], 0, h // rep, 0)
+
+    kern = functools.partial(
+        _arena_kernel, scale=d ** -0.5, causal=causal, window=None,
+        depth=ps * p_max, block_q=block_q, block_k=block_k, n_seqs=b,
+        n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(hq, nq, b, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, bb, ki, *_: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda h, qi, bb, ki, *_: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hq, t_pad, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cu_seqlens.astype(jnp.int32),
+      q_offsets.astype(jnp.int32), kv_lengths.astype(jnp.int32), qt, k, v)
+    return jnp.moveaxis(out[:, :t], 0, 1)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
 def ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
                          slot_map: jax.Array, cu_seqlens: jax.Array,

@@ -172,6 +172,44 @@ def ref_ragged_prefill_arena(q: jax.Array, k: jax.Array, v: jax.Array,
                               causal=causal)
 
 
+def ref_ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                             page_table: jax.Array, cu_seqlens: jax.Array,
+                             q_offsets: Optional[jax.Array] = None,
+                             kv_lengths: Optional[jax.Array] = None, *,
+                             causal: bool = True) -> jax.Array:
+    """Oracle for kernels.ragged_prefill_paged (paged packed prefill).
+
+    q: (T, Hq, D) flat packed stream; k, v: (N_pages, page_size, Hkv, D)
+    full page pools; page_table: (B, P_max) physical page per logical
+    page.  The gather here — materializing each segment's logical
+    (P_max·ps)-deep cache from its pages — is the ORACLE's convenience;
+    the kernel reads pages in place through the table.  Doubles as the
+    XLA fallback off-TPU.
+    """
+    b, p_max = page_table.shape
+    ps, hkv, d = k.shape[1], k.shape[2], k.shape[3]
+    kg = k[page_table].reshape(b, p_max * ps, hkv, d)
+    vg = v[page_table].reshape(b, p_max * ps, hkv, d)
+    return ref_ragged_prefill(q, kg, vg, cu_seqlens, q_offsets=q_offsets,
+                              kv_lengths=kv_lengths, causal=causal)
+
+
+def ref_decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                          page_table: jax.Array,
+                          lengths: jax.Array) -> jax.Array:
+    """Oracle for kernels.decode_attn_paged (paged flash decode).
+
+    q: (B, Hq, D); k, v: (N_pages, page_size, Hkv, D) full page pools;
+    page_table: (B, P_max); lengths: (B,) valid KV entries.  Gathers
+    each row's pages into a contiguous logical cache and delegates.
+    """
+    b, p_max = page_table.shape
+    ps, hkv, d = k.shape[1], k.shape[2], k.shape[3]
+    kg = k[page_table].reshape(b, p_max * ps, hkv, d)
+    vg = v[page_table].reshape(b, p_max * ps, hkv, d)
+    return ref_decode_attn(q, kg, vg, lengths)
+
+
 def ref_decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                     lengths: jax.Array) -> jax.Array:
     """Oracle for kernels.decode_attn (single-token flash decode).

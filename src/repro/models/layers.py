@@ -378,6 +378,105 @@ def packed_arena_attention_layer(p: Dict, x: jax.Array, *, cfg,
     return out, (ck, cv)
 
 
+def packed_paged_attention_layer(p: Dict, x: jax.Array, *, cfg,
+                                 positions: jax.Array,
+                                 token_pages: jax.Array,
+                                 token_offs: jax.Array,
+                                 page_table: jax.Array,
+                                 cu_seqlens: jax.Array, q_offsets: jax.Array,
+                                 kv_lengths: jax.Array,
+                                 kv: Tuple[jax.Array, jax.Array],
+                                 ) -> Tuple[jax.Array, Tuple]:
+    """Attention over a packed flat stream, PAGED (DESIGN.md §8).
+
+    The paged sibling of :func:`packed_arena_attention_layer`: kv are
+    (K, V) page POOLS of shape (N_pages, page_size, Hkv, D) and each
+    segment's cache is the ordered page list in its row of
+    ``page_table`` (B, P_max) — so pages can be shared across segments
+    (radix prefix reuse, COW forks).  positions: (T,) absolute position
+    of each token in ITS sequence (rope + causal masking);
+    token_pages/token_offs: (T,) physical (page, offset) each token's
+    new KV is scatter-written to — pad/tail rows target the reserved
+    scratch page at offset page_size − 1, never a live page.
+
+    The write is O(T) rows in place under donation; the paged ragged
+    kernel then attends each stream row through its segment's page
+    table.  Returns (out (T, d), updated (K, V) pools).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    t = x.shape[0]
+    hd = cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(t, cfg.num_heads, hd)
+    k = k.reshape(t, cfg.num_kv_heads, hd)
+    v = v.reshape(t, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q[None], positions[None], cfg.rope_theta)[0]
+    k = apply_rope(k[None], positions[None], cfg.rope_theta)[0]
+
+    ck = kv[0].at[token_pages, token_offs].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[token_pages, token_offs].set(v.astype(kv[1].dtype))
+
+    out = kernel_ops.ragged_mha_paged(q, ck, cv, page_table, cu_seqlens,
+                                      q_offsets, kv_lengths,
+                                      causal=cfg.causal)
+    out = out.reshape(t, cfg.num_heads * hd) @ p["wo"]
+    return out, (ck, cv)
+
+
+def paged_decode_layer(p: Dict, x: jax.Array, *, cfg,
+                       positions: jax.Array,
+                       write_pages: jax.Array, write_offs: jax.Array,
+                       page_table: jax.Array, kv_lengths: jax.Array,
+                       kv: Tuple[jax.Array, jax.Array],
+                       ) -> Tuple[jax.Array, Tuple]:
+    """Attention for one PAGED decode tick (DESIGN.md §8).
+
+    The paged sibling of :func:`arena_decode_layer`: kv are (K, V) page
+    pools (N_pages, page_size, Hkv, D) and each row's cache is its page
+    list in ``page_table`` (B, P_max).  positions: (B,) absolute
+    position of the new token (rope); write_pages/write_offs: (B,)
+    physical (page, offset) its KV lands in — pad rows target the
+    scratch page at offset page_size − 1; kv_lengths: (B,) valid cache
+    entries including the new row.  Returns (out (B, d), updated pools).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    b = x.shape[0]
+    hd = cfg.hdim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, cfg.num_heads, hd)
+    k = k.reshape(b, cfg.num_kv_heads, hd)
+    v = v.reshape(b, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+
+    ck = kv[0].at[write_pages, write_offs].set(k.astype(kv[0].dtype))
+    cv = kv[1].at[write_pages, write_offs].set(v.astype(kv[1].dtype))
+
+    out = kernel_ops.decode_paged(q, ck, cv, page_table, kv_lengths)
+    out = out.reshape(b, cfg.num_heads * hd) @ p["wo"]
+    return out, (ck, cv)
+
+
 def arena_decode_layer(p: Dict, x: jax.Array, *, cfg,
                        slot_map: jax.Array, positions: jax.Array,
                        kv_lengths: jax.Array,

@@ -25,7 +25,8 @@ from repro.models.config import ModelConfig
 from repro.models.layers import (ParamBuilder, arena_decode_layer,
                                  attention_layer, init_attention, init_mlp,
                                  packed_arena_attention_layer,
-                                 packed_attention_layer, rms_norm, swiglu,
+                                 packed_attention_layer, packed_paged_attention_layer,
+                                 paged_decode_layer, rms_norm, swiglu,
                                  write_kv_cache)
 from repro.models.moe import init_moe, moe_dense_reference, moe_layer
 
@@ -609,6 +610,87 @@ def forward_packed_arena(params: Dict, cfg: ModelConfig, *,
     x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
     x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
     return _lm_head_logits(params, cfg, x_last), new_arena
+
+
+# ------------------------------------------------------- paged serving
+
+
+def forward_packed_paged(params: Dict, cfg: ModelConfig, *,
+                         tokens: jax.Array,
+                         positions: jax.Array,
+                         token_pages: jax.Array,
+                         token_offs: jax.Array,
+                         page_table: jax.Array,
+                         cu_seqlens: jax.Array,
+                         q_offsets: jax.Array,
+                         kv_lengths: jax.Array,
+                         arena: List[Any],
+                         last_idx: jax.Array,
+                         ) -> Tuple[jax.Array, List[Any]]:
+    """Paged packed forward: :func:`forward_packed_arena` with the
+    per-segment arena SLOT generalized to a per-block PAGE TABLE
+    (DESIGN.md §8).
+
+    Same flat-stream contract — prefill, chunk, and decode segments side
+    by side, one logit per segment via ``last_idx`` — but the cache is a
+    page POOL (per pattern position {"k"/"v": (G, N_pages + 1,
+    page_size, Hkv, D)}) and each segment's logical cache is the ordered
+    page list in its row of ``page_table (B, P_max)``.  Pages may be
+    SHARED between segments (radix prefix reuse, COW forks): sharing is
+    read-only by construction — writes land via ``token_pages`` /
+    ``token_offs (T,)``, which the PagedKVArena only ever points at
+    exclusively-owned pages (pad/tail rows park on the reserved scratch
+    page at offset page_size − 1).  Pure-attention stacks only: SSM
+    state is per-session, not per-token, so it cannot ride a shared
+    page pool.  Returns (last_logits (B, V), new_pool).
+    """
+    cap = arena_capability(cfg)
+    assert cap.packed_ok and cap.pure_attn, cfg.name
+
+    def mix_fn(j, lp, h, cache_j):
+        mix, upd = packed_paged_attention_layer(
+            lp, h, cfg=cfg, positions=positions, token_pages=token_pages,
+            token_offs=token_offs, page_table=page_table,
+            cu_seqlens=cu_seqlens, q_offsets=q_offsets,
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+        return mix, {"k": upd[0], "v": upd[1]}
+
+    x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
+    x_last = jnp.take(x, last_idx, axis=0)                     # (B, d)
+    return _lm_head_logits(params, cfg, x_last), new_arena
+
+
+def forward_decode_paged(params: Dict, cfg: ModelConfig, *,
+                         tokens: jax.Array,
+                         positions: jax.Array,
+                         write_pages: jax.Array,
+                         write_offs: jax.Array,
+                         page_table: jax.Array,
+                         kv_lengths: jax.Array,
+                         arena: List[Any],
+                         ) -> Tuple[jax.Array, List[Any]]:
+    """One PAGED decode tick: :func:`forward_decode_arena` with the
+    per-row slot generalized to a page table (DESIGN.md §8).
+
+    tokens: (B,) last sampled token per row; positions: (B,) absolute
+    position of the new token (rope + kv_lengths − 1);
+    write_pages/write_offs: (B,) physical (page, offset) its KV lands in
+    (pad rows park on the scratch page at offset page_size − 1);
+    page_table: (B, P_max); kv_lengths: (B,) valid entries INCLUDING the
+    new row.  Pure-attention stacks only.  Returns (logits, new_pool).
+    """
+    cap = arena_capability(cfg)
+    assert cap.packed_ok and cap.pure_attn, cfg.name
+
+    def mix_fn(j, lp, h, cache_j):
+        mix, upd = paged_decode_layer(
+            lp, h, cfg=cfg, positions=positions, write_pages=write_pages,
+            write_offs=write_offs, page_table=page_table,
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+        return mix, {"k": upd[0], "v": upd[1]}
+
+    x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
+    return _lm_head_logits(params, cfg, x), new_arena
 
 
 # ------------------------------------------------------- arena decode

@@ -37,7 +37,7 @@ from repro.serving import packing
 from repro.serving import sampling as sampling_mod
 from repro.serving.executor import (BucketExecutor, DecodeBucketExecutor,
                                     PackedBucketExecutor)
-from repro.serving.kvcache import KVArena
+from repro.serving.kvcache import KVArena, PagedKVArena
 from repro.serving.sampling import SamplingParams
 
 
@@ -74,6 +74,17 @@ class EngineConfig:
     # steps take their token from the executor's on-device argmax and
     # skip the full-vocab logits transfer entirely (fused greedy slice)
     keep_last_logits: bool = True
+    # ---- paged KV arena (DESIGN.md §8) --------------------------------
+    # paged_kv replaces the per-session slot arena with a shared page
+    # pool + per-session page tables: radix-tree prefix reuse maps a
+    # repeated prompt prefix onto existing pages (only the new suffix is
+    # prefilled) and COW forks share pages between branches.  Pure-
+    # attention causal architectures only; requires the packed + arena
+    # paths (a paged pool has no dense gather fallback, like §7 rolling)
+    paged_kv: bool = False
+    page_size: int = 16
+    num_pages: Optional[int] = None  # None → num_slots·max_len/page_size
+    prefix_cache: bool = True        # radix prefix index on/off
 
 
 class Engine:
@@ -110,12 +121,28 @@ class Engine:
         # target a dedicated scratch slot instead of aliasing a live one
         scratch = bool(cap.packed_ok and cap.needs_scratch_slot
                        and (self.ecfg.packed or self.ecfg.arena_decode))
-        self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len,
-                             swa_depth=swa_depth, scratch_slot=scratch)
+        self._paged = bool(self.ecfg.paged_kv)
+        if self._paged:
+            assert cap.packed_ok and cap.pure_attn, \
+                "paged_kv requires a pure-attention causal architecture"
+            assert (self.ecfg.packed and self.ecfg.arena_prefill
+                    and self.ecfg.arena_decode), \
+                "paged_kv requires the packed + arena execution paths"
+            num_pages = self.ecfg.num_pages or (
+                self.ecfg.num_slots * self.ecfg.max_len
+                // self.ecfg.page_size)
+            self.arena = PagedKVArena(cfg, num_pages, self.ecfg.page_size,
+                                      self.ecfg.max_len,
+                                      prefix_cache=self.ecfg.prefix_cache)
+        else:
+            self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len,
+                                 swa_depth=swa_depth, scratch_slot=scratch)
         # dense gather/scatter is a valid fallback everywhere EXCEPT on
         # rolling arenas (absolute-position writes don't fit a rolling
-        # slot) — there, oversized work is split across packed steps
-        self._dense_ok = not self._rolling
+        # slot) and paged pools (pages are scattered, shared, and have
+        # no whole-sequence row to gather) — there, oversized work is
+        # split across packed steps
+        self._dense_ok = not (self._rolling or self._paged)
         self.executor = BucketExecutor(cfg)
         self.packed_executor: Optional[PackedBucketExecutor] = None
         if self.ecfg.packed and cap.packed_ok and (
@@ -154,7 +181,10 @@ class Engine:
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
-        self.arena.alloc(session)
+        if self._paged:
+            self.arena.open(session)
+        else:
+            self.arena.alloc(session)
 
     def close_session(self, session: int) -> None:
         self.arena.free(session)
@@ -164,6 +194,34 @@ class Engine:
 
     def history(self, session: int) -> int:
         return self.arena.length(session)
+
+    def probe_prefix(self, tokens: Sequence[int]) -> int:
+        """Tokens of ``tokens`` a FRESH session would inherit from the
+        radix prefix index instead of prefilling (0 on slot arenas or
+        with the prefix cache off).  The serve loop uses this to
+        classify requests by their true suffix cost."""
+        fn = getattr(self.arena, "probe_prefix", None)
+        return int(fn(tokens)) if fn is not None else 0
+
+    def adopt_prefix(self, session: int, tokens: Sequence[int]) -> int:
+        """Map the longest indexed prefix of ``tokens`` onto existing
+        pages for fresh session ``session`` NOW (instead of at dispatch
+        inside ``step_mixed``), returning the adopted token count.  The
+        serve loop uses this so its queued suffix, the request's billed
+        length, and the chunker's slicing all agree exactly — the
+        adopted pages are refcount-pinned while the request waits.  0 on
+        slot arenas or with the prefix cache off."""
+        if not self._paged or self.arena.length(session) != 0:
+            return 0
+        return self.arena.match_prefix(session, tokens)
+
+    def fork_session(self, parent: int, child: int) -> None:
+        """COW-fork ``parent``'s cached context into fresh session
+        ``child`` (n-best / tool-use branches).  Paged arenas only —
+        both branches share every page until one writes into the
+        partial boundary page, which then copies on demand."""
+        assert self._paged, "fork_session requires paged_kv=True"
+        self.arena.fork(parent, child)
 
     # ----------------------------------------------------------- sampling
     def set_sampling(self, session: int,
@@ -229,7 +287,11 @@ class Engine:
         for off-ladder totals or over-depth batches).  An explicit
         ``bucket`` pins the dense (L, B) graph path.
         Returns {session: first_sampled_token}."""
-        if bucket is None and self.packed_executor is not None:
+        if self.packed_executor is not None and (
+                bucket is None or not self._dense_ok):
+            # a pinned (L, B) graph bucket has no meaning on paged /
+            # rolling arenas (no dense gather path exists) — the batch
+            # rides the packed stream instead
             return self.step_mixed(list(zip(sessions, token_lists)),
                                    []).tokens
         cause = "requested" if (bucket is not None
@@ -344,6 +406,21 @@ class Engine:
         sess_all = [s for s, _ in prefills] + [s for s, _ in decodes]
         assert len(set(sess_all)) == len(sess_all), \
             f"session appears twice in one step: {sess_all}"
+        if self._paged:
+            # radix prefix adoption (§8): a FRESH session's prompt maps
+            # its longest indexed prefix onto existing pages BEFORE the
+            # bucket is chosen, so the step only prefills (and the
+            # ladder only prices) the new suffix.  The matched pages
+            # become the segment's history offset below.
+            rewritten = []
+            for s, toks in prefills:
+                toks = np.asarray(toks, np.int32)
+                if self.arena.length(s) == 0:
+                    matched = self.arena.match_prefix(s, toks)
+                    if matched:
+                        toks = toks[matched:]
+                rewritten.append((s, toks))
+            prefills = rewritten
         lens = [len(t) for _, t in prefills]
         total = sum(lens) + n_d
         px = self.packed_executor
@@ -387,8 +464,12 @@ class Engine:
                 s, np.asarray(toks, np.int32), self.arena.length(s),
                 kind="prefill"))
         for s, tok in decodes:
-            assert self.arena.slot_of(s) is not None, \
-                f"decode session {s} has no cache slot"
+            if self._paged:
+                assert self.arena.length(s) > 0, \
+                    f"decode session {s} has no cached context"
+            else:
+                assert self.arena.slot_of(s) is not None, \
+                    f"decode session {s} has no cache slot"
             segments.append(packing.SegmentSpec(
                 s, np.asarray([tok], np.int32), self.arena.length(s),
                 kind="decode"))
@@ -433,6 +514,8 @@ class Engine:
         map — zero whole-slot gather/scatter.  ``arena_prefill=False``
         keeps the legacy gathered-cache dispatch (the measurement
         baseline)."""
+        if self._paged:
+            return self._run_packed_paged(segments, bucket)
         px = self.packed_executor
         n = len(segments)
         slots = [self.arena.alloc(seg.session) for seg in segments]
@@ -506,6 +589,71 @@ class Engine:
         return MixedStepResult(tokens=out, fused=True, bucket=bucket,
                                n_prefill=n - n_d, n_decode=n_d)
 
+    def _run_packed_paged(self, segments: List[packing.SegmentSpec],
+                          bucket: int) -> MixedStepResult:
+        """Paged dispatch of an assembled segment list (DESIGN.md §8).
+
+        Per segment, ``prepare_extend`` makes the write range
+        exclusively owned (COW-copying a fork-shared boundary page,
+        allocating tail pages); the step then writes each stream row's
+        KV at its (page, offset) and reads every segment's FULL logical
+        context — matched prefix pages included — through its page-table
+        row.  Tail rows and dummy sequences park on the reserved scratch
+        page at offset page_size − 1 (the §6 pad invariant at page
+        granularity).  ``commit`` records the written token ids and
+        indexes newly-full pages for cross-session reuse."""
+        px = self.packed_executor
+        ar = self.arena
+        ps = ar.page_size
+        n = len(segments)
+        b_max = px.stream_rows
+        stream = packing.assemble_mixed_stream(
+            segments, bucket, b_max, park_position=ar.max_len - 1,
+            pad_token=self.ecfg.pad_token)
+        sessions = [seg.session for seg in segments]
+
+        page_table = np.full((b_max, ar.max_pages_per_seq), ar.scratch,
+                             np.int32)
+        token_pages = np.full(bucket, ar.scratch, np.int32)
+        token_offs = np.full(bucket, ps - 1, np.int32)
+        cu = stream.cu_seqlens
+        for i, seg in enumerate(segments):
+            pages = ar.prepare_extend(seg.session, seg.length)
+            page_table[i, :len(pages)] = pages
+            pos = stream.positions[cu[i]:cu[i + 1]]
+            pt = np.asarray(pages, np.int32)
+            token_pages[cu[i]:cu[i + 1]] = pt[pos // ps]
+            token_offs[cu[i]:cu[i + 1]] = pos % ps
+
+        t0 = time.perf_counter()
+        last, ids, new_arena = px.mixed_step_paged(
+            self.params, jnp.asarray(stream.tokens),
+            jnp.asarray(stream.positions), jnp.asarray(token_pages),
+            jnp.asarray(token_offs), jnp.asarray(page_table),
+            jnp.asarray(stream.cu_seqlens), jnp.asarray(stream.q_offsets),
+            jnp.asarray(stream.kv_lengths), ar.arena,
+            jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
+        toks, last_np = self._tokens_from_step(sessions, last, ids)
+        elapsed = time.perf_counter() - t0
+        px.note_padding(stream.total_tokens, bucket)
+        ar.replace(new_arena)
+        out: Dict[int, int] = {}
+        for i, seg in enumerate(segments):
+            ar.commit(seg.session, seg.tokens)
+            out[seg.session] = int(toks[i])
+            if last_np is not None:
+                self.last_logits[seg.session] = last_np[i]
+        if self.ecfg.measure:
+            pre = [seg for seg in segments if seg.kind != "decode"]
+            if pre:
+                per = elapsed / len(pre)
+                for seg in pre:
+                    self.samples.append((per, float(seg.length),
+                                         float(seg.history)))
+        n_d = stream.decode_tokens
+        return MixedStepResult(tokens=out, fused=True, bucket=bucket,
+                               n_prefill=n - n_d, n_decode=n_d)
+
     # ------------------------------------------------------ long prefill
     def prefill_long(self, session: int, token_list: np.ndarray) -> int:
         """Chunked long prefill (C_l per step).  Returns first token.
@@ -552,6 +700,8 @@ class Engine:
             return self._decode_batch_dense(
                 sessions, tokens, steps,
                 cause="requested" if dx is None else "forced")
+        if self._paged:
+            return self._decode_batch_paged(sessions, tokens, steps, bucket)
 
         n = len(sessions)
         slots = [self.arena.slot_of(s) for s in sessions]
@@ -575,6 +725,58 @@ class Engine:
             cur = toks.astype(np.int32)
             for i, s in enumerate(sessions):
                 self.arena.set_length(s, hists[i] + 1)
+                out[s].append(int(cur[i]))
+                if logits_np is not None:
+                    self.last_logits[s] = logits_np[i]
+        return out
+
+    def _decode_batch_paged(self, sessions: Sequence[int],
+                            tokens: Sequence[int], steps: int,
+                            bucket: int) -> Dict[int, List[int]]:
+        """Paged decode tick (DESIGN.md §8): each row writes its new KV
+        at (page, offset) from ``prepare_extend(1)`` — COW-copying a
+        fork-shared boundary page first — and attends over its full
+        logical context through its page-table row.  Ladder pad rows
+        park on the scratch page at offset page_size − 1 and attend over
+        one garbage key (output discarded)."""
+        dx = self.decode_executor
+        ar = self.arena
+        ps = ar.page_size
+        n = len(sessions)
+        cur = np.asarray(tokens, np.int32)
+        out: Dict[int, List[int]] = {s: [] for s in sessions}
+        for _ in range(steps):
+            hists = [ar.length(s) for s in sessions]
+            assert all(h > 0 for h in hists), \
+                f"paged decode on an empty session: {list(sessions)}"
+            tok = np.full(bucket, self.ecfg.pad_token, np.int32)
+            tok[:n] = cur
+            positions = np.full(bucket, ar.max_len - 1, np.int32)
+            write_pages = np.full(bucket, ar.scratch, np.int32)
+            write_offs = np.full(bucket, ps - 1, np.int32)
+            page_table = np.full((bucket, ar.max_pages_per_seq),
+                                 ar.scratch, np.int32)
+            kv_lengths = np.ones(bucket, np.int32)
+            for i, (s, h) in enumerate(zip(sessions, hists)):
+                pages = ar.prepare_extend(s, 1)
+                page_table[i, :len(pages)] = pages
+                positions[i] = h
+                write_pages[i] = pages[h // ps]
+                write_offs[i] = h % ps
+                kv_lengths[i] = h + 1
+            logits, ids, new_arena = dx.decode_paged(
+                self.params, jnp.asarray(tok), jnp.asarray(positions),
+                jnp.asarray(write_pages), jnp.asarray(write_offs),
+                jnp.asarray(page_table), jnp.asarray(kv_lengths), ar.arena)
+            ar.replace(new_arena)
+            dx.note_padding(n, bucket)
+            # the KV written this tick belongs to the INPUT token — the
+            # radix index must see the ids whose keys occupy the pages
+            for i, s in enumerate(sessions):
+                ar.commit(s, [int(cur[i])])
+            toks, logits_np = self._tokens_from_step(sessions, logits, ids)
+            cur = toks.astype(np.int32)
+            for i, s in enumerate(sessions):
                 out[s].append(int(cur[i]))
                 if logits_np is not None:
                     self.last_logits[s] = logits_np[i]
@@ -629,7 +831,8 @@ class Engine:
             "graph_hit_rate": self.executor.hit_rate,
             "captured_shapes": len(self.executor.compile_times),
             "capture_seconds": self.executor.capture_cost(),
-            "free_slots": self.arena.free_slots,
+            "free_slots": (self.arena.free_pages if self._paged
+                           else self.arena.free_slots),
             "fit_samples": len(self.samples),
             "useful_tokens": self.executor.useful_tokens,
             "padded_tokens": self.executor.padded_tokens,
@@ -638,7 +841,15 @@ class Engine:
             # whole-slot copy proof: the §5/§6 arena paths keep both at 0
             "arena_gathers": self.arena.gather_calls,
             "arena_scatters": self.arena.scatter_calls,
+            # §8 paged-arena proof counters (0 on slot arenas)
+            "prefix_hit_tokens": getattr(self.arena, "prefix_hit_tokens", 0),
+            "pages_cow_forked": getattr(self.arena, "pages_cow_forked", 0),
+            "pages_evicted": getattr(self.arena, "pages_evicted", 0),
         }
+        if self._paged:
+            out["free_pages"] = self.arena.free_pages
+            out["radix_pages"] = (len(self.arena.index.pages())
+                                  if self.arena.index is not None else 0)
         if self.decode_executor is not None:
             dx = self.decode_executor
             out.update({

@@ -86,6 +86,45 @@ def make_packed_arena_fn(cfg: ModelConfig) -> Callable:
     return packed_step
 
 
+def make_packed_paged_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(T,), positions(T,), token_pages(T,), token_offs(T,),
+    page_table(B,P_max), cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,),
+    arena, last_idx(B,)) → (last_logits(B,V), greedy_ids(B,), new_arena).
+    Paged packed prefill (DESIGN.md §8): the page pool is read in place
+    through a per-block page table, so segments can SHARE pages (radix
+    prefix reuse, COW forks) inside one step."""
+
+    def packed_step(params, tokens, positions, token_pages, token_offs,
+                    page_table, cu_seqlens, q_offsets, kv_lengths, arena,
+                    last_idx):
+        last, new_arena = tr.forward_packed_paged(
+            params, cfg, tokens=tokens, positions=positions,
+            token_pages=token_pages, token_offs=token_offs,
+            page_table=page_table, cu_seqlens=cu_seqlens,
+            q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+            last_idx=last_idx)
+        return last, jnp.argmax(last, axis=-1).astype(jnp.int32), new_arena
+
+    return packed_step
+
+
+def make_paged_decode_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(B,), positions(B,), write_pages(B,), write_offs(B,),
+    page_table(B,P_max), kv_lengths(B,), arena) → (logits(B,V),
+    greedy_ids(B,), new_arena).  Paged decode (DESIGN.md §8)."""
+
+    def decode_step(params, tokens, positions, write_pages, write_offs,
+                    page_table, kv_lengths, arena):
+        logits, new_arena = tr.forward_decode_paged(
+            params, cfg, tokens=tokens, positions=positions,
+            write_pages=write_pages, write_offs=write_offs,
+            page_table=page_table, kv_lengths=kv_lengths, arena=arena)
+        return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                new_arena)
+
+    return decode_step
+
+
 def make_decode_fn(cfg: ModelConfig) -> Callable:
     def decode_step(params, tokens, positions, caches):
         logits, new_caches, _ = tr.forward(
@@ -310,6 +349,15 @@ class PackedBucketExecutor(_ExecutorBase):
         self._jit_packed_arena = jax.jit(
             self._packed_arena,
             donate_argnums=(8,) if self.donate_cache else ())
+        # paged form (DESIGN.md §8): per-block page table instead of a
+        # per-segment slot — pure-attention only (SSM state is
+        # per-session, not per-token, so it cannot ride a shared pool)
+        self._jit_packed_paged = None
+        if self.capability.pure_attn:
+            self._packed_paged = make_packed_paged_fn(cfg)
+            self._jit_packed_paged = jax.jit(
+                self._packed_paged,
+                donate_argnums=(9,) if self.donate_cache else ())
         # continuous-batching counters: a mixed step fuses decode rows
         # into the same packed stream (and the SAME compiled executable —
         # the shape key is (token bucket, max_seqs), not the segment mix)
@@ -393,6 +441,28 @@ class PackedBucketExecutor(_ExecutorBase):
                                          q_offsets, kv_lengths, arena,
                                          last_idx)
 
+    def mixed_step_paged(self, params, tokens, positions, token_pages,
+                         token_offs, page_table, cu_seqlens, q_offsets,
+                         kv_lengths, arena, last_idx, *, n_decode: int = 0):
+        """One PAGED continuous-batching step (DESIGN.md §8): same flat
+        stream and fusion semantics as :meth:`mixed_step_arena`, but the
+        cache argument is the shared page POOL and each segment's KV is
+        routed through its row of ``page_table`` — so segments can share
+        prefix pages and a prefix-hit turn streams its full logical
+        context while having prefilled only its suffix.  The compile
+        cache is keyed on (token bucket, P_max); the pool shape is a
+        constant."""
+        assert self._jit_packed_paged is not None, \
+            f"{self.cfg.name}: paged serving is attention-only"
+        if n_decode:
+            self.mixed_steps += 1
+            self.decode_tokens_fused += int(n_decode)
+        args = (params, tokens, positions, token_pages, token_offs,
+                page_table, cu_seqlens, q_offsets, kv_lengths, arena,
+                last_idx)
+        exe = self._get("packed_paged", self._jit_packed_paged, args)
+        return exe(*args)
+
     def precapture(self, params, arena_gather) -> float:
         """Compile every token bucket at init — |token_buckets| shapes
         total, vs |L|×|B| for the dense grid."""
@@ -467,6 +537,13 @@ class DecodeBucketExecutor(_ExecutorBase):
         self._decode = make_arena_decode_fn(cfg)
         self._jit_decode = jax.jit(
             self._decode, donate_argnums=(5,) if self.donate_cache else ())
+        # paged form (DESIGN.md §8) — pure-attention only
+        self._jit_decode_paged = None
+        if self.capability.pure_attn:
+            self._decode_paged = make_paged_decode_fn(cfg)
+            self._jit_decode_paged = jax.jit(
+                self._decode_paged,
+                donate_argnums=(7,) if self.donate_cache else ())
 
     # ------------------------------------------------------------ lookup
     @property
@@ -482,6 +559,19 @@ class DecodeBucketExecutor(_ExecutorBase):
                arena):
         args = (params, tokens, slot_map, write_pos, kv_lengths, arena)
         exe = self._get("arena_decode", self._jit_decode, args)
+        return exe(*args)
+
+    def decode_paged(self, params, tokens, positions, write_pages,
+                     write_offs, page_table, kv_lengths, arena):
+        """One PAGED decode tick (DESIGN.md §8): the page pool rides in
+        place and each row's KV is routed through its page-table row —
+        rows may share prefix pages.  Compile cache keyed on the decode
+        bucket × P_max."""
+        assert self._jit_decode_paged is not None, \
+            f"{self.cfg.name}: paged decode is attention-only"
+        args = (params, tokens, positions, write_pages, write_offs,
+                page_table, kv_lengths, arena)
+        exe = self._get("paged_decode", self._jit_decode_paged, args)
         return exe(*args)
 
     def precapture(self, params, arena) -> float:
@@ -501,5 +591,6 @@ class DecodeBucketExecutor(_ExecutorBase):
 __all__ = ["BucketExecutor", "PackedBucketExecutor", "DecodeBucketExecutor",
            "DEFAULT_TOKEN_BUCKETS", "DEFAULT_DECODE_BUCKETS",
            "make_prefill_fn", "make_packed_prefill_fn",
-           "make_packed_arena_fn", "make_decode_fn",
-           "make_arena_decode_fn", "resolve_donation"]
+           "make_packed_arena_fn", "make_packed_paged_fn",
+           "make_decode_fn", "make_arena_decode_fn",
+           "make_paged_decode_fn", "resolve_donation"]

@@ -25,7 +25,7 @@ never touch it.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -122,3 +122,370 @@ class KVArena:
         handle.  No gather/scatter bookkeeping happens here; lengths are
         advanced by the engine per session."""
         self.arena = new_arena
+
+
+class _RadixNode:
+    """One edge of the prefix trie: a page_size-token chunk → one page."""
+    __slots__ = ("children", "parent", "chunk", "page", "last_use")
+
+    def __init__(self, parent: Optional["_RadixNode"] = None,
+                 chunk: Optional[Tuple[int, ...]] = None, page: int = -1):
+        self.children: Dict[Tuple[int, ...], "_RadixNode"] = {}
+        self.parent = parent
+        self.chunk = chunk
+        self.page = page
+        self.last_use = 0
+
+
+class RadixPageIndex:
+    """Radix/trie prefix index over page_size-token chunks.
+
+    Maps token-id prefixes to the KV pages that hold them, at PAGE
+    granularity: an edge at depth i is the tuple of token ids
+    ``tokens[i·ps : (i+1)·ps]`` and names the physical page caching that
+    chunk's KV.  Only FULL pages are indexed — a prefix is shareable
+    exactly up to its last page boundary, which is also what makes
+    sharing safe: sessions append at positions ≥ their committed length,
+    so an indexed (full) page is never written again (see
+    PagedKVArena.prepare_extend for the one COW exception, fork-shared
+    partial pages, which by construction are never in this index).
+
+    The index holds its own reference on every indexed page; eviction
+    (LRU over leaf nodes) drops that reference so cold cached prefixes
+    return to the free pool once no session holds them either.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _RadixNode()
+        self._clock = 0
+        self._n_pages = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def match(self, tokens: Sequence[int],
+              touch: bool = True) -> List[int]:
+        """Longest indexed prefix of ``tokens`` in full-page chunks.
+
+        Returns the page ids caching ``tokens[:len(result)·ps]``.  Never
+        matches past ``len(tokens) − 1``: the caller must keep ≥ 1 token
+        of true suffix to prefill (attention needs a query row to
+        produce this turn's logits).
+        """
+        ps = self.page_size
+        limit = max(len(tokens) - 1, 0) // ps
+        node, pages = self.root, []
+        now = self._tick() if touch else self._clock
+        for i in range(limit):
+            child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if child is None:
+                break
+            if touch:
+                child.last_use = now
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def insert(self, tokens: Sequence[int],
+               pages: Sequence[int]) -> List[int]:
+        """Index every full-page chunk of ``tokens``; return the page ids
+        NEWLY referenced (the caller owns refcounts).  Chunks already
+        indexed keep their existing page — the duplicate stays private
+        to its session."""
+        ps = self.page_size
+        node, newly = self.root, []
+        now = self._tick()
+        for i in range(len(tokens) // ps):
+            chunk = tuple(tokens[i * ps:(i + 1) * ps])
+            child = node.children.get(chunk)
+            if child is None:
+                child = _RadixNode(parent=node, chunk=chunk, page=pages[i])
+                node.children[chunk] = child
+                newly.append(pages[i])
+                self._n_pages += 1
+            child.last_use = now
+            node = child
+        return newly
+
+    def pages(self) -> List[int]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root:
+                out.append(n.page)
+            stack.extend(n.children.values())
+        return out
+
+    def leaves(self) -> Iterable[_RadixNode]:
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root and not n.children:
+                yield n
+            stack.extend(n.children.values())
+
+    def remove(self, node: _RadixNode) -> int:
+        """Unlink a LEAF node; returns its page (caller drops the ref)."""
+        assert not node.children and node.parent is not None
+        del node.parent.children[node.chunk]
+        self._n_pages -= 1
+        return node.page
+
+    def __len__(self) -> int:
+        return self._n_pages
+
+
+class PagedKVArena:
+    """Paged KV cache: fixed-size pages in a shared pool + per-session
+    page tables, with radix-tree prefix reuse, COW forks, and LRU
+    eviction (DESIGN.md §8).
+
+    Layout per layer-pattern position: k/v ``(G, N_pages + 1, page_size,
+    Hkv, D)`` — init_cache's batch axis becomes the PAGE axis, so the
+    paged kernels read ``(1, page_size, 1, D)`` blocks exactly like the
+    slot kernels read arena blocks.  Page ``N_pages`` is the reserved
+    SCRATCH page (the §6/§7 scratch-row/slot invariant at page
+    granularity): it is never allocated, never indexed, and pad stream
+    rows write at (scratch, page_size − 1).
+
+    Sessions own ORDERED page lists (logical page i = positions
+    [i·ps, (i+1)·ps)).  Pages are shared in two ways:
+
+      * radix-tree prefix reuse — ``match_prefix`` maps a new session's
+        token ids onto the pages of any previously committed identical
+        prefix, so only the new suffix is prefilled;
+      * COW forks — ``fork`` clones a session's table for n-best /
+        tool-use branches; both branches share every page until one
+        writes into the (partial) boundary page, which
+        ``prepare_extend`` then copies.
+
+    ``refcount[p]`` = #sessions whose table holds p, + 1 if the radix
+    index holds p.  Append-only writes land at positions ≥ the committed
+    length, so full (indexed, shareable) pages are never written; the
+    only write into a shared page would be the fork-shared partial
+    boundary page, and that is exactly the COW trigger.  A page returns
+    to the free pool when its refcount drops to zero; when the pool runs
+    dry, LRU leaf pages held only by the index are evicted
+    (oversubscription: the index may cache far more prefix than live
+    sessions could pin).
+
+    ``cfg=None`` builds a bookkeeping-only arena (no device arrays) for
+    property tests of the share/fork/evict/write state machine.
+    """
+
+    def __init__(self, cfg: Optional[ModelConfig], num_pages: int,
+                 page_size: int, max_len: int, dtype=None,
+                 prefix_cache: bool = True):
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_len = max_len
+        self.scratch: int = num_pages          # reserved, never allocated
+        self.arena = (tr.init_cache(cfg, num_pages + 1, page_size, dtype)
+                      if cfg is not None else None)
+        self._free: List[int] = list(range(num_pages))
+        self._refcount: List[int] = [0] * num_pages
+        self._pages: Dict[int, List[int]] = {}     # session -> page list
+        self._tokens: Dict[int, List[int]] = {}    # session -> cached ids
+        self.lengths: Dict[int, int] = {}          # session -> tokens cached
+        self.index: Optional[RadixPageIndex] = (
+            RadixPageIndex(page_size) if prefix_cache else None)
+        # proof counters (engine.stats())
+        self.prefix_hit_tokens = 0
+        self.pages_cow_forked = 0
+        self.pages_evicted = 0
+        # the paged paths never materialize whole sequences: kept for
+        # stats() symmetry with KVArena and asserted == 0 by benches
+        self.gather_calls = 0
+        self.scatter_calls = 0
+
+    # ---------------------------------------------------------- refcounts
+    def _ref(self, page: int) -> None:
+        self._refcount[page] += 1
+
+    def _unref(self, page: int) -> None:
+        rc = self._refcount[page] = self._refcount[page] - 1
+        assert rc >= 0, f"page {page} refcount underflow"
+        if rc == 0:
+            self._free.append(page)
+
+    def _alloc_page(self) -> int:
+        if not self._free:
+            self._evict(1)
+        if not self._free:
+            raise RuntimeError("KV page pool exhausted")
+        page = self._free.pop()
+        self._refcount[page] = 1
+        return page
+
+    def _evict(self, need: int) -> None:
+        """LRU-evict leaf pages held ONLY by the radix index."""
+        if self.index is None:
+            return
+        freed = 0
+        while freed < need:
+            victim = None
+            for leaf in self.index.leaves():
+                if self._refcount[leaf.page] != 1:
+                    continue                   # pinned by a live session
+                if victim is None or leaf.last_use < victim.last_use:
+                    victim = leaf
+            if victim is None:
+                return
+            self._unref(self.index.remove(victim))
+            self.pages_evicted += 1
+            freed += 1
+
+    # ------------------------------------------------------------ sessions
+    def open(self, session: int) -> None:
+        if session in self._pages:
+            return
+        self._pages[session] = []
+        self._tokens[session] = []
+        self.lengths[session] = 0
+
+    def free(self, session: int) -> None:
+        pages = self._pages.pop(session, None)
+        if pages is None:
+            return
+        for p in pages:
+            self._unref(p)
+        self._tokens.pop(session, None)
+        self.lengths.pop(session, None)
+
+    def pages_of(self, session: int) -> List[int]:
+        return self._pages.get(session, [])
+
+    def length(self, session: int) -> int:
+        return self.lengths.get(session, 0)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.max_len // self.page_size
+
+    # -------------------------------------------------------- prefix reuse
+    def probe_prefix(self, tokens: Sequence[int]) -> int:
+        """Tokens a fresh session with this prompt would NOT re-prefill
+        (non-adopting; used by the serve loop for length-aware
+        scheduling of the true suffix)."""
+        if self.index is None:
+            return 0
+        return len(self.index.match(tokens, touch=False)) * self.page_size
+
+    def match_prefix(self, session: int, tokens: Sequence[int]) -> int:
+        """Map the longest indexed prefix of ``tokens`` onto existing
+        pages; the session then only prefills ``tokens[matched:]``.
+
+        Only valid on an EMPTY session (a turn's full conversation is
+        matched once, before its first prefill).  Returns the matched
+        token count (multiple of page_size, ≤ len(tokens) − 1).
+        """
+        self.open(session)
+        assert self.lengths[session] == 0 and not self._pages[session], \
+            f"match_prefix on non-empty session {session}"
+        if self.index is None:
+            return 0
+        pages = self.index.match(tokens)
+        if not pages:
+            return 0
+        matched = len(pages) * self.page_size
+        for p in pages:
+            self._ref(p)
+        self._pages[session] = list(pages)
+        self._tokens[session] = list(tokens[:matched])
+        self.lengths[session] = matched
+        self.prefix_hit_tokens += matched
+        return matched
+
+    # --------------------------------------------------------------- write
+    def prepare_extend(self, session: int, n: int) -> List[int]:
+        """Make positions [length, length + n) writable: COW-copy the
+        fork-shared partial boundary page (the ONLY shareable page a
+        write can touch — full pages are append-safe) and allocate fresh
+        pages for the tail.  Returns the session's page list; every page
+        overlapping the write range is exclusively owned afterwards."""
+        self.open(session)
+        h = self.lengths[session]
+        if h + n > self.max_len - 2:
+            raise RuntimeError(
+                f"session {session} overflows arena "
+                f"({h + n} > {self.max_len - 2})")
+        ps = self.page_size
+        pages = self._pages[session]
+        if h % ps and self._refcount[pages[h // ps]] > 1:
+            src = pages[h // ps]
+            dst = self._alloc_page()
+            self._copy_page(src, dst)
+            self._unref(src)
+            pages[h // ps] = dst
+            self.pages_cow_forked += 1
+        last = (h + n - 1) // ps
+        while len(pages) <= last:
+            pages.append(self._alloc_page())
+        return pages
+
+    def commit(self, session: int, token_ids: Sequence[int]) -> None:
+        """Record ``token_ids`` as written at [length, length + n) (the
+        step already scatter-wrote their KV via prepare_extend's pages)
+        and index every newly-FULL page for cross-session reuse."""
+        toks = self._tokens[session]
+        toks.extend(int(t) for t in token_ids)
+        self.lengths[session] += len(token_ids)
+        if self.index is not None:
+            n_full = self.lengths[session] // self.page_size
+            for p in self.index.insert(toks[:n_full * self.page_size],
+                                       self._pages[session][:n_full]):
+                self._ref(p)
+
+    # ---------------------------------------------------------------- fork
+    def fork(self, parent: int, child: int) -> None:
+        """COW-fork: the child shares every page (and the token history)
+        of the parent; diverging writes copy the partial boundary page
+        on demand (prepare_extend)."""
+        assert child not in self._pages, f"fork onto live session {child}"
+        self.open(child)
+        for p in self._pages[parent]:
+            self._ref(p)
+        self._pages[child] = list(self._pages[parent])
+        self._tokens[child] = list(self._tokens[parent])
+        self.lengths[child] = self.lengths[parent]
+
+    # ------------------------------------------------------- device arrays
+    def _copy_page(self, src: int, dst: int) -> None:
+        if self.arena is None:
+            return
+        self.arena = jax.tree.map(
+            lambda a: a.at[:, dst].set(a[:, src]), self.arena)
+
+    def replace(self, new_arena: Any) -> None:
+        """Swap in the page pool returned by a paged step (donated)."""
+        self.arena = new_arena
+
+    # --------------------------------------------------------------- audit
+    def audit(self) -> None:
+        """Assert the refcount/free-list/scratch invariants (tests)."""
+        rc = [0] * self.num_pages
+        for pages in self._pages.values():
+            for p in pages:
+                assert p != self.scratch, "scratch page in a session table"
+                rc[p] += 1
+        if self.index is not None:
+            for p in self.index.pages():
+                assert p != self.scratch, "scratch page in the radix index"
+                rc[p] += 1
+        assert rc == self._refcount, \
+            f"refcount drift: counted {rc} != tracked {self._refcount}"
+        assert sorted(self._free) == sorted(set(self._free)), \
+            "duplicate pages in the free list"
+        for p in self._free:
+            assert p != self.scratch and self._refcount[p] == 0, \
+                f"free page {p} still referenced"
+        for p, r in enumerate(self._refcount):
+            assert (r == 0) == (p in set(self._free)), \
+                f"page {p} rc={r} free-list membership mismatch"

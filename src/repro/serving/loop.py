@@ -92,14 +92,23 @@ class ServeLoop:
         self.active_decodes.pop(session, None)
         self.engine.open_session(session)
         self.engine.set_sampling(session, sampling)
+        hist = self.engine.history(session)
+        # paged engines with a radix prefix index: adopt the longest
+        # indexed prefix of the prompt RIGHT HERE, so length-aware
+        # classification, the AWD token budget, and the long-prefill
+        # chunker all see (and slice) exactly the true suffix — the
+        # matched pages are refcount-pinned while the request waits and
+        # the prefill step only ever touches tokens past them (§8).
+        reusable = self.engine.adopt_prefix(session, tokens) if hist == 0 \
+            else 0
+        tokens = np.asarray(tokens)[reusable:]
         r = Request(new_tokens=len(tokens),
-                    history_tokens=self.engine.history(session),
+                    history_tokens=hist + reusable,
                     arrival=now,
                     deadline=deadline if deadline is not None else
                     (now + self.slo if self.slo else None),
-                    session=session)
-        self._tokens[r.rid] = PendingRequest(r, np.asarray(tokens),
-                                             decode_tokens)
+                    session=session, reusable_prefix=reusable)
+        self._tokens[r.rid] = PendingRequest(r, tokens, decode_tokens)
         self.policy.enqueue(r, now)
         self._outstanding += 1
         return r

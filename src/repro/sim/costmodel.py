@@ -49,6 +49,15 @@ class CostModel:
     # kernels stream O(min(cached, window)) rows per token, so the
     # model must bill the same.  None = full attention.
     window: Optional[int] = None
+    # paged KV arena (DESIGN.md §8): page_size set bills the page-table
+    # walk — page_lookup per logical KV block touched (the scalar-
+    # prefetched indirection the paged kernels add over the slot map).
+    # Prefix hits need NO extra term: the sim's admission converts
+    # matched pages from new tokens into history, and history already
+    # bills γ_r reads only (no prefill FLOPs, no KV writes) — exactly
+    # what the suffix-only step executes.
+    page_size: Optional[int] = None
+    page_lookup: float = 2.0e-7    # s per page-table entry walked
 
     # ------------------------------------------------------------ pieces
     @property
@@ -59,6 +68,14 @@ class CostModel:
     def _h_eff(self, h: int) -> int:
         """Attended history: full, or window-clamped for SWA configs."""
         return h if self.window is None else min(h, self.window)
+
+    def _page_walk(self, ctx: int) -> float:
+        """Page-table indirection for one segment attending over ``ctx``
+        tokens: one prefetched lookup per logical KV block (0 when the
+        arena is slot-mapped, i.e. page_size is None)."""
+        if self.page_size is None or ctx <= 0:
+            return 0.0
+        return self.page_lookup * (-(-ctx // self.page_size))
 
     def comp_time(self, l: int, h: int = 0, padded: Optional[int] = None) -> float:
         lp = padded if padded is not None else l
@@ -104,6 +121,11 @@ class CostModel:
         mem += self.w_tok * tail + self.gamma_r * gather_rows
         fused = batch.decode_tokens * (self.beta + self.w_tok
                                        + self.decode_per_seq)
+        # §8: one page-table walk per logical KV block each segment
+        # attends over (prefix-hit pages included — they are read)
+        fixed += sum(self._page_walk(self._h_eff(r.history_tokens)
+                                     + r.new_tokens)
+                     for r in batch.requests)
         return fixed + max(comp, mem) + fused
 
     def batch_time(self, batch: Batch, long_threshold: float = 256.0,
@@ -141,6 +163,7 @@ class CostModel:
         h = w.done_tokens + w.req.history_tokens
         fixed = self.graph_launch + self.graph_lookup if w.uses_graph \
             else self.launch
+        fixed += self._page_walk(self._h_eff(h) + w.chunk_tokens)
         fused = w.decode_tokens * (self.beta + self.w_tok
                                    + self.decode_per_seq)
         return fixed + max(
@@ -174,7 +197,9 @@ class CostModel:
         comp = self.beta * n + self.tail_coef * max(0, b - n)
         mem = self.weight_read + sum(self.gamma_r * self._h_eff(h)
                                      + self.w_tok for h in cached_lens)
-        return self.graph_launch + self.graph_lookup \
+        walk = sum(self._page_walk(self._h_eff(h) + 1)
+                   for h in cached_lens)
+        return self.graph_launch + self.graph_lookup + walk \
             + max(comp, mem) + self.decode_per_seq * n
 
     def work_time(self, work, gather_rows: int = 0) -> float:

@@ -53,6 +53,15 @@ class SimConfig:
     # rows per session, exactly the windowed kernel's HBM stream.
     # (CostModel.window applies the same clamp to prefill pricing.)
     window: Optional[int] = None
+    # paged KV arena with radix prefix reuse (DESIGN.md §8): with
+    # prefix_reuse on, admission converts each request's annotated
+    # ``reusable_prefix`` — rounded DOWN to page granularity, capped so
+    # at least one new token survives (the engine's match cap) — from
+    # new tokens into history: the turn is billed suffix-prefill +
+    # history reads, exactly what the paged engine executes.
+    # (CostModel.page_size separately prices the page-table walk.)
+    page_size: Optional[int] = None
+    prefix_reuse: bool = False
 
 
 class _Instance:
@@ -116,7 +125,20 @@ class ClusterSim:
 
     def add_requests(self, requests: Sequence[Request]) -> None:
         for r in requests:
+            self._admit_prefix(r)
             self._push(r.arrival, "arrival", r)
+
+    def _admit_prefix(self, r: Request) -> None:
+        """§8 prefix-reuse admission: shift the page-aligned part of the
+        request's reusable prefix from new tokens into history."""
+        if not (self.cfg.prefix_reuse and self.cfg.page_size
+                and r.reusable_prefix > 0):
+            return
+        ps = self.cfg.page_size
+        shift = min(r.reusable_prefix // ps * ps,
+                    max(r.new_tokens - 1, 0))
+        r.new_tokens -= shift
+        r.history_tokens += shift
 
     def add_clients(self, clients, start: float = 0.0,
                     think_time: float = 0.0) -> None:

@@ -1,0 +1,325 @@
+"""Paged KV arena (DESIGN.md §8): kernel-level parity of the page-table
+ragged prefill / decode against the gathered-page oracle on fragmented,
+shared, and COW-forked page layouts (GQA/MHA/MQA, interpret mode),
+engine-level parity of the paged engine vs the slot-arena engine (logits
+to 1e-5 on prefill, mixed, and bucketed decode ticks), radix prefix
+reuse producing logits identical to a cold prefill while billing only
+the new suffix, the COW-fork regression (satellite of §8: forked
+branches match independently prefilled sessions through decode across
+page boundaries), and page hygiene — pad rows only ever touch the
+reserved scratch page.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attn_paged
+from repro.kernels.ragged_prefill import ragged_prefill_paged
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(41)
+TOL = dict(atol=1e-5, rtol=0)
+TOL_INTERPRET = dict(atol=2e-5, rtol=0)
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def make_stream(lens, hists):
+    b = len(lens)
+    cu = np.zeros(b + 1, np.int32)
+    cu[1:] = np.cumsum(lens)
+    off = np.asarray(hists, np.int32)
+    kvl = off + np.asarray(lens, np.int32)
+    return jnp.asarray(cu), jnp.asarray(off), jnp.asarray(kvl)
+
+
+def page_layout(rng, npages, ps, p_max, lens, hists, share=None):
+    """A fragmented page table: each segment gets ceil((h+l)/ps) DISTINCT
+    random pages; ``share=(a, b, k)`` makes segment b reuse segment a's
+    first k pages (prefix sharing / COW fork layouts).  Unused table
+    entries point at page 0 (always in range; masked by kv_lengths)."""
+    table = np.zeros((len(lens), p_max), np.int32)
+    free = list(rng.permutation(npages))
+    for i, (l, h) in enumerate(zip(lens, hists)):
+        need = -(-(h + l) // ps)
+        table[i, :need] = [free.pop() for _ in range(need)]
+    if share is not None:
+        a, b, k = share
+        table[b, :k] = table[a, :k]
+    return table
+
+
+# ----------------------------------------------------------- kernel level
+
+
+@pytest.mark.parametrize("npages,ps,hq,hkv,d,bq", [
+    (24, 16, 8, 2, 32, 16),    # GQA
+    (16, 8, 4, 4, 64, 8),      # MHA
+    (20, 16, 8, 1, 16, 8),     # MQA
+])
+def test_paged_prefill_kernel_matches_oracle(npages, ps, hq, hkv, d, bq):
+    """Fragmented + prefix-shared page layout: the page-table index map
+    reads exactly the gathered pages the oracle sees."""
+    ks = jax.random.split(KEY, 3)
+    rng = np.random.default_rng(npages)
+    lens = [5, 9, 4]
+    hists = [7, 0, 12]
+    p_max = 4
+    t = sum(lens) + 3                          # bucket tail rows
+    q = rand(ks[0], (t, hq, d))
+    k = rand(ks[1], (npages, ps, hkv, d))
+    v = rand(ks[2], (npages, ps, hkv, d))
+    # segments 0 and 2 share their first page — radix prefix reuse
+    table = page_layout(rng, npages, ps, p_max, lens, hists,
+                        share=(0, 2, 1))
+    cu, off, kvl = make_stream(lens, hists)
+    out = ragged_prefill_paged(q, k, v, jnp.asarray(table), cu, off, kvl,
+                               block_q=bq)
+    want = ref.ref_ragged_prefill_paged(q, k, v, jnp.asarray(table), cu,
+                                        q_offsets=off, kv_lengths=kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(out)[sum(lens):], 0.0)
+
+
+def test_paged_prefill_kernel_full_table():
+    """history + new fills every page of the table: the last logical
+    block is read fully and nothing past the table is touched."""
+    ks = jax.random.split(KEY, 3)
+    npages, ps, p_max, hq, hkv, d = 12, 8, 4, 4, 2, 16
+    lens, hists = [6, 4], [ps * p_max - 6, 0]
+    t = sum(lens)
+    q = rand(ks[0], (t, hq, d))
+    k = rand(ks[1], (npages, ps, hkv, d))
+    v = rand(ks[2], (npages, ps, hkv, d))
+    table = page_layout(np.random.default_rng(3), npages, ps, p_max,
+                        lens, hists)
+    cu, off, kvl = make_stream(lens, hists)
+    assert int(kvl[0]) == ps * p_max
+    out = ragged_prefill_paged(q, k, v, jnp.asarray(table), cu, off, kvl,
+                               block_q=8)
+    want = ref.ref_ragged_prefill_paged(q, k, v, jnp.asarray(table), cu,
+                                        q_offsets=off, kv_lengths=kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (4, 4), (8, 1)])
+def test_paged_decode_kernel_matches_oracle(hq, hkv):
+    """COW-forked decode layout: two rows share every prefix page and
+    diverge only on their (copied) boundary page."""
+    ks = jax.random.split(KEY, 3)
+    npages, ps, p_max, d, b = 20, 16, 4, 32, 4
+    rng = np.random.default_rng(5)
+    lengths = np.asarray([37, 37, 9, 51], np.int32)
+    table = page_layout(rng, npages, ps, p_max,
+                        list(lengths), [0] * b)
+    # rows 0/1: a fork — shared full pages, distinct boundary pages
+    table[1, :2] = table[0, :2]
+    assert table[1, 2] != table[0, 2]
+    q = rand(ks[0], (b, hq, d))
+    k = rand(ks[1], (npages, ps, hkv, d))
+    v = rand(ks[2], (npages, ps, hkv, d))
+    out = decode_attn_paged(q, k, v, jnp.asarray(table),
+                            jnp.asarray(lengths))
+    want = ref.ref_decode_attn_paged(q, k, v, jnp.asarray(table),
+                                     jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_ops_dispatch_paged_backends_agree():
+    """ops.ragged_mha_paged / ops.decode_paged: forced-pallas (interpret)
+    and forced-ref return the same values."""
+    ks = jax.random.split(KEY, 3)
+    npages, ps, p_max, hq, hkv, d = 12, 8, 3, 4, 2, 16
+    lens, hists = [5, 3], [6, 0]
+    q = rand(ks[0], (sum(lens) + 2, hq, d))
+    k = rand(ks[1], (npages, ps, hkv, d))
+    v = rand(ks[2], (npages, ps, hkv, d))
+    table = jnp.asarray(page_layout(np.random.default_rng(1), npages, ps,
+                                    p_max, lens, hists))
+    cu, off, kvl = make_stream(lens, hists)
+    qd = rand(ks[0], (2, hq, d))
+    lengths = jnp.asarray([11, 7], jnp.int32)
+    try:
+        kernel_ops.set_backend("pallas")
+        a1 = kernel_ops.ragged_mha_paged(q, k, v, table, cu, off, kvl)
+        d1 = kernel_ops.decode_paged(qd, k, v, table[:2], lengths)
+        kernel_ops.set_backend("ref")
+        a2 = kernel_ops.ragged_mha_paged(q, k, v, table, cu, off, kvl)
+        d2 = kernel_ops.decode_paged(qd, k, v, table[:2], lengths)
+    finally:
+        kernel_ops.set_backend(None)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               **TOL_INTERPRET)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               **TOL_INTERPRET)
+
+
+# ----------------------------------------------------------- engine level
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    return cfg, params
+
+
+def build_pair(cfg, params, **paged_kw):
+    kw = dict(num_slots=8, max_len=128, chunk_tokens=32, packed=True,
+              token_buckets=(64, 128, 256))
+    eng = Engine(cfg, params, EngineConfig(**kw, paged_kv=True,
+                                           page_size=16, **paged_kw))
+    ora = Engine(cfg, params, EngineConfig(**kw))
+    return eng, ora
+
+
+def test_paged_engine_matches_slot_engine(stack):
+    """Prefill batch, fused mixed tick, and bucketed decode on the paged
+    engine reproduce the slot-arena engine logits token for token, with
+    zero whole-slot gather/scatter."""
+    cfg, params = stack
+    eng, ora = build_pair(cfg, params)
+    rng = np.random.default_rng(0)
+    t1, t2 = (rng.integers(0, cfg.vocab_size, n) for n in (21, 13))
+    r1 = eng.step_mixed([(1, t1), (2, t2)], [])
+    r2 = ora.step_mixed([(1, t1), (2, t2)], [])
+    assert r1.fused and r2.fused and r1.tokens == r2.tokens
+    # fused decode rows + a fresh prefill in one tick
+    t3 = rng.integers(0, cfg.vocab_size, 9)
+    r1 = eng.step_mixed([(3, t3)], [(1, r1.tokens[1]), (2, r1.tokens[2])])
+    r2 = ora.step_mixed([(3, t3)], [(1, r2.tokens[1]), (2, r2.tokens[2])])
+    assert r1.tokens == r2.tokens
+    # bucketed decode ticks
+    d1 = eng.decode_batch([1, 2, 3], [r1.tokens[s] for s in (1, 2, 3)],
+                          steps=4)
+    d2 = ora.decode_batch([1, 2, 3], [r2.tokens[s] for s in (1, 2, 3)],
+                          steps=4)
+    assert d1 == d2
+    for s in (1, 2, 3):
+        np.testing.assert_allclose(eng.last_logits[s], ora.last_logits[s],
+                                   **TOL)
+    st = eng.stats()
+    assert st["arena_gathers"] == 0 and st["arena_scatters"] == 0
+    assert st["dense_dispatches"] == 0
+    eng.arena.audit()
+
+
+def test_prefix_reuse_matches_cold_prefill(stack):
+    """Turn 2 resubmits the full conversation under a fresh session: the
+    radix index maps the matched prefix onto turn 1's pages, ONLY the
+    suffix is prefilled, and the logits equal a cold prefill of the
+    whole conversation to 1e-5."""
+    cfg, params = stack
+    eng, ora = build_pair(cfg, params)
+    rng = np.random.default_rng(1)
+    conv1 = rng.integers(0, cfg.vocab_size, 53)
+    eng.step_mixed([(10, conv1)], [])
+    eng.close_session(10)          # pages stay alive in the radix tree
+    assert eng.stats()["prefix_hit_tokens"] == 0
+    conv2 = np.concatenate([conv1, rng.integers(0, cfg.vocab_size, 7)])
+    assert eng.probe_prefix(conv2) == 48       # 3 full pages of turn 1
+    r = eng.step_mixed([(11, conv2)], [])
+    ro = ora.step_mixed([(11, conv2)], [])
+    assert eng.stats()["prefix_hit_tokens"] == 48
+    assert eng.history(11) == len(conv2)
+    assert r.tokens[11] == ro.tokens[11]
+    np.testing.assert_allclose(eng.last_logits[11], ora.last_logits[11],
+                               **TOL)
+    # decode continues seamlessly over the adopted pages
+    d = eng.decode_batch([11], [r.tokens[11]], steps=3)
+    do = ora.decode_batch([11], [ro.tokens[11]], steps=3)
+    assert d[11] == do[11]
+    eng.arena.audit()
+
+
+def test_cow_fork_matches_independent_prefill(stack):
+    """Satellite regression: two branches COW-forked from one prefix
+    produce logits identical (1e-5) to two independently prefilled
+    sessions, through decode across ≥ 2 page boundaries; exactly one
+    page is COW-copied per diverging branch."""
+    cfg, params = stack
+    eng, ora = build_pair(cfg, params)
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(0, cfg.vocab_size, 27)   # partial boundary page
+    r = eng.step_mixed([(1, prefix)], [])
+    eng.fork_session(1, 2)
+    assert eng.arena.pages_of(1) == eng.arena.pages_of(2)
+    # both branches decode independently past TWO page boundaries
+    # (27 + 22 = 49 crosses 32 and 48); distinct first tokens diverge
+    # the branches immediately
+    b1 = eng.decode_batch([1], [int(prefix[0])], steps=22)[1]
+    b2 = eng.decode_batch([2], [int(prefix[1])], steps=22)[2]
+    assert eng.stats()["pages_cow_forked"] >= 1
+    assert eng.arena.pages_of(1) != eng.arena.pages_of(2)
+    eng.arena.audit()
+    # oracle: two slot-engine sessions prefilled independently
+    o = ora.step_mixed([(1, prefix), (2, prefix)], [])
+    o1 = ora.decode_batch([1], [int(prefix[0])], steps=22)[1]
+    o2 = ora.decode_batch([2], [int(prefix[1])], steps=22)[2]
+    assert b1 == o1 and b2 == o2
+    np.testing.assert_allclose(eng.last_logits[1], ora.last_logits[1],
+                               **TOL)
+    np.testing.assert_allclose(eng.last_logits[2], ora.last_logits[2],
+                               **TOL)
+
+
+def test_pad_rows_only_touch_scratch_page(stack):
+    """Page hygiene: a padded mixed tick (bucket tail + dummy rows)
+    leaves every page except the step's own new pages and the reserved
+    scratch page bit-identical."""
+    cfg, params = stack
+    eng, _ = build_pair(cfg, params)
+    rng = np.random.default_rng(3)
+    eng.step_mixed([(1, rng.integers(0, cfg.vocab_size, 21))], [])
+    own = set(eng.arena.pages_of(1))
+    before = jax.tree.map(np.array, eng.arena.arena)
+    r = eng.step_mixed([(2, rng.integers(0, cfg.vocab_size, 5))], [])
+    touched = set(eng.arena.pages_of(2)) | {eng.arena.scratch}
+    after = jax.tree.map(np.array, eng.arena.arena)
+    keep = np.asarray(sorted(set(range(eng.arena.num_pages + 1))
+                             - touched), np.int32)
+    assert own <= set(keep.tolist())
+    for cb, ca in zip(before, after):
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(cb[part][:, keep],
+                                          ca[part][:, keep])
+    eng.arena.audit()
+
+
+def test_paged_interpret_backend_parity(stack):
+    """The paged engine under forced-pallas interpret mode matches the
+    jnp-oracle backend on a mixed prefill + decode schedule."""
+    cfg, params = stack
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab_size, 19)
+    outs = {}
+    for backend in ("pallas", "ref"):
+        try:
+            kernel_ops.set_backend(backend)
+            eng, _ = build_pair(cfg, params)
+            r = eng.step_mixed([(1, toks)], [])
+            d = eng.decode_batch([1], [r.tokens[1]], steps=2)
+            outs[backend] = (r.tokens[1], d[1],
+                             np.array(eng.last_logits[1]))
+        finally:
+            kernel_ops.set_backend(None)
+    assert outs["pallas"][0] == outs["ref"][0]
+    assert outs["pallas"][1] == outs["ref"][1]
+    np.testing.assert_allclose(outs["pallas"][2], outs["ref"][2],
+                               **TOL_INTERPRET)
+
+
+def test_paged_engine_guards():
+    """paged_kv demands a pure-attention causal architecture and the
+    packed + arena execution paths."""
+    cfg = get_smoke("mamba2-2.7b")
+    params, _ = tr.init_params(cfg, KEY)
+    with pytest.raises(AssertionError):
+        Engine(cfg, params, EngineConfig(paged_kv=True))

@@ -1,0 +1,179 @@
+"""Property test for the paged-arena share/fork/evict/write state
+machine (DESIGN.md §8) — the §6 no-alias invariant at page granularity.
+
+Drives a bookkeeping-only ``PagedKVArena`` (cfg=None) through random
+interleavings of submit (with radix prefix adoption), decode-style
+extends, COW forks, session frees, and allocation pressure (a tiny pool
+forces LRU eviction of index-only pages), asserting after every step:
+
+  * ``audit()`` — refcounts equal the counted holders, the free list is
+    duplicate-free and exactly the rc==0 pages, and the reserved scratch
+    page appears in no table and no index;
+  * write-range exclusivity — every page returned by ``prepare_extend``
+    that overlaps the write range [h, h+n) has refcount == 1, so no
+    session's write can land in a page another session (or the radix
+    index) still references;
+  * shared-content agreement — any page shared between two sessions sits
+    at the SAME logical position in both and their committed token ids
+    agree over it (prefix sharing and COW forks never alias divergent
+    content).
+
+The machine runs under hypothesis (shrinking, CI) AND as a seeded
+random replay (no extra deps, always on).
+"""
+import random
+
+import pytest
+
+from repro.serving.kvcache import PagedKVArena
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NUM_PAGES = 10
+PS = 4
+MAX_LEN = 24          # 6 pages/session, usable history = MAX_LEN - 2
+
+
+def check_shared_content(arena):
+    sess = list(arena._pages)
+    for ai in range(len(sess)):
+        for bi in range(ai + 1, len(sess)):
+            a, b = sess[ai], sess[bi]
+            pa, pb = arena._pages[a], arena._pages[b]
+            for p in set(pa) & set(pb):
+                i, j = pa.index(p), pb.index(p)
+                assert i == j, \
+                    f"page {p} at logical {i} in {a} but {j} in {b}"
+                lo = i * PS
+                hi = min(arena.lengths[a], arena.lengths[b], lo + PS)
+                assert arena._tokens[a][lo:hi] == arena._tokens[b][lo:hi]
+
+
+def write(arena, session, toks):
+    """prepare_extend + commit, asserting write-range exclusivity in
+    between (the instant the kernel would scatter-write)."""
+    h = arena.length(session)
+    n = len(toks)
+    ps = arena.page_size
+    try:
+        pages = arena.prepare_extend(session, n)
+    except RuntimeError:
+        return False        # pool exhausted / arena overflow: no write
+    for p in pages[h // ps:(h + n - 1) // ps + 1]:
+        assert arena._refcount[p] == 1, \
+            f"write range of {session} overlaps shared page {p}"
+    arena.commit(session, toks)
+    return True
+
+
+def drive(arena, draw_int, draw_choice, steps):
+    """One machine run; draw_int(lo, hi) and draw_choice(seq) abstract
+    over hypothesis draws vs random.Random."""
+    next_sid = [0]
+
+    def fresh():
+        next_sid[0] += 1
+        return next_sid[0]
+
+    for _ in range(steps):
+        live = sorted(arena._pages)
+        ops = ["submit"] + (["extend", "fork", "free"] if live else [])
+        op = draw_choice(ops)
+        if op == "submit":
+            # resubmitting a live conversation + suffix exercises the
+            # radix hit path; fresh tokens exercise cold misses
+            toks = (list(arena._tokens[draw_choice(live)])
+                    if live and draw_int(0, 1) else [])
+            toks += [draw_int(0, 3)            # tiny vocab → collisions
+                     for _ in range(draw_int(1, 10))]
+            toks = toks[:MAX_LEN - 2]
+            s = fresh()
+            matched = arena.match_prefix(s, toks)
+            assert matched % PS == 0 and matched < len(toks)
+            assert arena.length(s) == matched
+            if not write(arena, s, toks[matched:]):
+                arena.free(s)
+        elif op == "extend":
+            s = draw_choice(live)
+            write(arena, s,
+                  [draw_int(0, 3) for _ in range(draw_int(1, 3))])
+        elif op == "fork":
+            parent, child = draw_choice(live), fresh()
+            arena.fork(parent, child)
+            assert arena.pages_of(child) == arena.pages_of(parent)
+            assert arena.length(child) == arena.length(parent)
+        else:
+            arena.free(draw_choice(live))
+        arena.audit()
+        check_shared_content(arena)
+        assert arena.gather_calls == 0 and arena.scatter_calls == 0
+
+    # drain: freeing every session must leave only index-held pages, and
+    # evicting under full pressure must return the pool to empty
+    for s in list(arena._pages):
+        arena.free(s)
+    arena.audit()
+    arena._evict(NUM_PAGES)
+    arena.audit()
+    assert arena.free_pages == NUM_PAGES
+    assert all(r == 0 for r in arena._refcount)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_page_state_machine_seeded(seed):
+    rng = random.Random(seed)
+    drive(PagedKVArena(None, NUM_PAGES, PS, MAX_LEN),
+          rng.randint, rng.choice, steps=40)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_page_state_machine_hypothesis(data):
+        drive(PagedKVArena(None, NUM_PAGES, PS, MAX_LEN),
+              lambda lo, hi: data.draw(st.integers(lo, hi)),
+              lambda seq: data.draw(st.sampled_from(list(seq))),
+              steps=data.draw(st.integers(5, 30), label="steps"))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_page_state_machine_hypothesis():
+        pass
+
+
+def test_eviction_under_pressure_prefers_index_leaves():
+    """A tiny pool oversubscribed by the radix index: allocation evicts
+    LRU index-only leaves but never pages pinned by live sessions."""
+    arena = PagedKVArena(None, num_pages=4, page_size=2, max_len=12)
+    arena.open(1)
+    assert write(arena, 1, [7, 7, 7, 7])      # 2 full pages → indexed
+    pinned = list(arena.pages_of(1))
+    arena.free(2)                              # no-op on unknown session
+    arena.open(2)
+    assert write(arena, 2, [5, 5, 5])          # 2 more pages: pool full
+    arena.free(2)                              # page 1 partial → freed;
+    arena.audit()                              # full page stays indexed
+    arena.open(3)
+    assert write(arena, 3, [6, 6, 6, 6])       # must evict index leaves
+    assert arena.pages_evicted >= 1
+    assert all(arena._refcount[p] >= 1 for p in pinned), \
+        "eviction touched a session-pinned page"
+    assert arena._tokens[1] == [7, 7, 7, 7]
+    arena.audit()
+
+
+def test_match_prefix_leaves_a_suffix():
+    """Even an exact resubmission keeps ≥ 1 token to prefill (the next
+    step needs a query row), and partial pages never match."""
+    arena = PagedKVArena(None, NUM_PAGES, PS, MAX_LEN)
+    arena.open(1)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    assert write(arena, 1, toks)
+    assert arena.probe_prefix(toks) == PS      # last full page excluded
+    m = arena.match_prefix(2, toks)
+    assert m == PS and arena.length(2) == PS
+    assert arena.probe_prefix(toks[:PS - 1]) == 0
+    arena.audit()

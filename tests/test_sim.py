@@ -213,6 +213,92 @@ def test_costmodel_fused_decode_shares_weight_read():
     assert H200_32B.batch_time(mixed) < alternating
 
 
+def test_costmodel_page_walk_pricing():
+    """§8 pricing: page_size set bills exactly one page_lookup per
+    logical KV block walked — packed steps, chunk ticks, and decode
+    buckets all grow by ceil(ctx / page_size) lookups per segment; the
+    slot-mapped model (page_size=None) is the zero-walk baseline."""
+    import dataclasses as dc
+    from repro.core.scheduler import ChunkWork
+
+    paged = dc.replace(H200_32B, page_size=16)
+    reqs = [Request(new_tokens=7, history_tokens=121),
+            Request(new_tokens=40)]
+    b = Batch(requests=list(reqs), token_bucket=64, uses_graph=True)
+    blocks = sum(-(-(r.history_tokens + r.new_tokens) // 16)
+                 for r in reqs)               # ceil(128/16) + ceil(40/16)
+    assert blocks == 11
+    assert paged.packed_batch_time(b) == pytest.approx(
+        H200_32B.packed_batch_time(b) + paged.page_lookup * blocks)
+    w = ChunkWork(req=Request(new_tokens=512), chunk_tokens=64,
+                  done_tokens=64, is_last=False, uses_graph=True)
+    assert paged.chunk_time(w) == pytest.approx(
+        H200_32B.chunk_time(w) + paged.page_lookup * 8)   # ceil(128/16)
+    lens = [15, 16, 200]
+    walk = sum(-(-(h + 1) // 16) for h in lens)
+    assert paged.decode_bucket_time(lens, bucket=4) == pytest.approx(
+        H200_32B.decode_bucket_time(lens, bucket=4)
+        + paged.page_lookup * walk)
+    # prefix hits need NO extra term: matched pages land as history and
+    # bill γ_r reads only — strictly cheaper than prefilling them
+    hit = Batch(requests=[Request(new_tokens=7, history_tokens=121)],
+                token_bucket=64, uses_graph=True)
+    cold = Batch(requests=[Request(new_tokens=128)],
+                 token_bucket=64, uses_graph=True)
+    assert paged.packed_batch_time(hit) < paged.packed_batch_time(cold)
+
+
+def test_sim_prefix_admission_converts_new_to_history():
+    """§8 admission: with prefix_reuse + page_size set, a request's
+    annotated reusable_prefix moves page-aligned tokens from new →
+    history at add time; ≥ 1 new token always survives; the off switch
+    and slot-mapped configs change nothing."""
+    def sim_with(**kw):
+        return ClusterSim(1, lambda i: make_policy(
+            Variant("pla_full"), H200_QWEN32B, threshold=256),
+            H200_32B, SimConfig(**kw))
+
+    r = Request(new_tokens=100, reusable_prefix=70, arrival=0.0)
+    sim_with(page_size=16, prefix_reuse=True).add_requests([r])
+    assert (r.new_tokens, r.history_tokens) == (36, 64)   # 70 → 4 pages
+    # exact resubmission: the suffix floor keeps one prefill token
+    r = Request(new_tokens=10, reusable_prefix=32, arrival=0.0)
+    sim_with(page_size=16, prefix_reuse=True).add_requests([r])
+    assert r.new_tokens >= 1 and r.new_tokens + r.history_tokens == 10
+    # reuse off, or no paged arena: annotation is inert
+    for kw in (dict(page_size=16), dict(prefix_reuse=True)):
+        r = Request(new_tokens=100, reusable_prefix=70, arrival=0.0)
+        sim_with(**kw).add_requests([r])
+        assert (r.new_tokens, r.history_tokens) == (100, 0)
+
+
+def test_sim_multiturn_prefix_reuse_cuts_prefill():
+    """Multi-turn trace through the simulator: prefix reuse on a paged
+    arena bills strictly fewer prefill tokens and finishes the same
+    request set no later than reuse-off."""
+    from repro.data.synthetic import MultiTurnConfig, multiturn_requests
+
+    def run(reuse):
+        cfg = MultiTurnConfig(vocab_size=1000, num_sessions=16,
+                              max_turns=5, seed=4)
+        reqs = multiturn_requests(cfg, decode_tokens=4)
+        pol = make_policy(Variant("pla_full"), H200_QWEN32B, threshold=256)
+        sim = ClusterSim(1, lambda i: None, H200_32B,
+                         SimConfig(mode="mix", page_size=16,
+                                   prefix_reuse=reuse),
+                         shared_policy=pol)
+        sim.add_requests(reqs)               # admission mutates in place
+        billed = sum(r.new_tokens for r in reqs)
+        tr = sim.run(600.0)
+        assert len(tr.finished) == len(reqs)
+        return billed, max(r.finish_time for r in tr.finished)
+
+    billed_on, makespan_on = run(True)
+    billed_off, makespan_off = run(False)
+    assert billed_on < billed_off
+    assert makespan_on <= makespan_off
+
+
 def test_mix_mode_reduces_prefill_throughput():
     """Fig.8: co-residing decode lowers prefill RPS."""
     def run(mode):
