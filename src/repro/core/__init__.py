@@ -19,5 +19,8 @@ from repro.core.request import Batch, Request  # noqa: F401
 from repro.core.scheduler import (ServingMode, Variant, make_policy,  # noqa: F401
                                   TemporalDisaggPolicy, FCFSPolicy, PoolPolicy,
                                   ChunkWork)
-from repro.core.slo import SLOTracker, SLOReport  # noqa: F401
+from repro.core.routing import (EngineView, LeastLoadedRouter,  # noqa: F401
+                                LengthAwareRouter, RoundRobinRouter,
+                                RouteRequest, Router, make_router)
+from repro.core.slo import SLOTracker, SLOReport, percentile  # noqa: F401
 from repro.core import queueing  # noqa: F401

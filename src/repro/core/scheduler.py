@@ -87,6 +87,19 @@ class BasePolicy:
         """Remove and return every queued request (failure re-routing)."""
         raise NotImplementedError
 
+    def purge(self, pred) -> List[Request]:
+        """Remove and return every queued request matching ``pred``
+        (session close, deflection).  Concrete policies override this to
+        preserve queue order and chunk progress; the fallback drains and
+        re-enqueues the survivors."""
+        kept: List[Request] = []
+        out: List[Request] = []
+        for r in self.drain():
+            (out if pred(r) else kept).append(r)
+        for r in kept:
+            self.enqueue(r, 0.0)
+        return out
+
 
 class FCFSPolicy(BasePolicy):
     """Vanilla SGLang-like: memory-constrained FCFS batching; long and
@@ -138,6 +151,13 @@ class FCFSPolicy(BasePolicy):
     def drain(self) -> List[Request]:
         out = list(self.queue)
         self.queue.clear()
+        return out
+
+    def purge(self, pred) -> List[Request]:
+        out = [r for r in self.queue if pred(r)]
+        if out:
+            gone = {r.rid for r in out}
+            self.queue = deque(r for r in self.queue if r.rid not in gone)
         return out
 
 
@@ -258,6 +278,19 @@ class TemporalDisaggPolicy(BasePolicy):
         self.dq.short.clear()
         self.dq.long.clear()
         self._long_progress.clear()
+        return out
+
+    def purge(self, pred) -> List[Request]:
+        out = [r for r in self.dq.short if pred(r)] + \
+              [r for r in self.dq.long if pred(r)]
+        if out:
+            gone = {r.rid for r in out}
+            self.dq.short = deque(r for r in self.dq.short
+                                  if r.rid not in gone)
+            self.dq.long = deque(r for r in self.dq.long
+                                 if r.rid not in gone)
+            for r in out:
+                self._long_progress.pop(r.rid, None)
         return out
 
 

@@ -2,16 +2,23 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.request import Request
 
 
 def percentile(vals: Sequence[float], q: float) -> float:
+    """Standard nearest-rank percentile: the ⌈q·n⌉-th smallest value.
+
+    The previous ``int(q * n)`` index was biased one rank high — p99 over
+    any sample smaller than 100 reported the maximum instead of the
+    99th-percentile rank.
+    """
     if not vals:
         return 0.0
     s = sorted(vals)
-    idx = min(int(q * len(s)), len(s) - 1)
+    idx = min(max(math.ceil(q * len(s)), 1), len(s)) - 1
     return s[idx]
 
 
@@ -32,39 +39,92 @@ class SLOReport:
 
 
 class SLOTracker:
-    def __init__(self, slo_ttft: Optional[float] = None):
+    """Streaming SLO aggregates plus a bounded tail of finished requests.
+
+    Means, violation rate, graph hit rate, and the horizon are folded into
+    O(1) state in :meth:`record`, so a long-lived serve loop never holds
+    more than ``2 * max_finished`` Request objects. ``finished`` keeps the
+    most recent requests for percentile estimation and for callers that
+    inspect individual results — on runs shorter than ``max_finished`` it
+    retains everything and :meth:`report` is exact, matching the old
+    keep-it-all behaviour.
+    """
+
+    def __init__(self, slo_ttft: Optional[float] = None,
+                 max_finished: int = 4096):
         self.slo = slo_ttft
+        self.max_finished = max_finished
         self.finished: List[Request] = []
+        # streaming aggregates over every request ever recorded
+        self.n_recorded = 0
+        self._ttft_sum = 0.0
+        self._ttft_n = 0
+        self._wait_sum = 0.0
+        self._wait_n = 0
+        self._viol = 0
+        self._denom = 0
+        self._graphs = 0
+        self._max_finish = 0.0
 
     def record(self, r: Request) -> None:
+        self.n_recorded += 1
+        t = r.ttft()
+        if t is not None:
+            self._ttft_sum += t
+            self._ttft_n += 1
+        if r.dispatch_time is not None:
+            self._wait_sum += r.dispatch_time - r.arrival
+            self._wait_n += 1
+        ddl = r.deadline if r.deadline is not None else (
+            None if self.slo is None else r.arrival + self.slo)
+        if ddl is not None:
+            self._denom += 1
+            if r.finish_time is None or r.finish_time > ddl:
+                self._viol += 1
+        if r.used_graph:
+            self._graphs += 1
+        if r.finish_time is not None:
+            self._max_finish = max(self._max_finish, r.finish_time)
         self.finished.append(r)
+        if len(self.finished) > 2 * self.max_finished:
+            del self.finished[:-self.max_finished]
+
+    @classmethod
+    def merged(cls, trackers: Sequence["SLOTracker"]) -> "SLOTracker":
+        """Fold several trackers (one per cluster engine) into one view."""
+        out = cls(trackers[0].slo if trackers else None,
+                  max_finished=max((t.max_finished for t in trackers),
+                                   default=4096))
+        for t in trackers:
+            out.n_recorded += t.n_recorded
+            out._ttft_sum += t._ttft_sum
+            out._ttft_n += t._ttft_n
+            out._wait_sum += t._wait_sum
+            out._wait_n += t._wait_n
+            out._viol += t._viol
+            out._denom += t._denom
+            out._graphs += t._graphs
+            out._max_finish = max(out._max_finish, t._max_finish)
+            out.finished.extend(t.finished)
+        if len(out.finished) > 2 * out.max_finished:
+            out.finished.sort(key=lambda r: r.finish_time or 0.0)
+            del out.finished[:-out.max_finished]
+        return out
 
     def report(self, horizon: Optional[float] = None) -> SLOReport:
-        rs = self.finished
-        ttfts = [r.ttft() for r in rs if r.ttft() is not None]
-        waits = [r.dispatch_time - r.arrival for r in rs
-                 if r.dispatch_time is not None]
+        ttfts = [r.ttft() for r in self.finished if r.ttft() is not None]
         if horizon is None:
-            horizon = max((r.finish_time or 0.0) for r in rs) if rs else 1.0
-        viol = 0
-        denom = 0
-        for r in rs:
-            ddl = r.deadline if r.deadline is not None else (
-                None if self.slo is None else r.arrival + self.slo)
-            if ddl is None:
-                continue
-            denom += 1
-            if r.finish_time is None or r.finish_time > ddl:
-                viol += 1
-        graphs = sum(1 for r in rs if r.used_graph)
+            horizon = self._max_finish if self.n_recorded else 1.0
         return SLOReport(
-            n=len(rs),
-            rps=len(rs) / max(horizon, 1e-9),
-            mean_ttft=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            n=self.n_recorded,
+            rps=self.n_recorded / max(horizon, 1e-9),
+            mean_ttft=self._ttft_sum / self._ttft_n if self._ttft_n else 0.0,
             p50_ttft=percentile(ttfts, 0.50),
             p90_ttft=percentile(ttfts, 0.90),
             p99_ttft=percentile(ttfts, 0.99),
-            violation_rate=viol / denom if denom else 0.0,
-            mean_queue_wait=sum(waits) / len(waits) if waits else 0.0,
-            graph_hit_rate=graphs / len(rs) if rs else 0.0,
+            violation_rate=self._viol / self._denom if self._denom else 0.0,
+            mean_queue_wait=(self._wait_sum / self._wait_n
+                             if self._wait_n else 0.0),
+            graph_hit_rate=(self._graphs / self.n_recorded
+                            if self.n_recorded else 0.0),
         )

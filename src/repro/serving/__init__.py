@@ -7,4 +7,6 @@ from repro.serving.executor import (BucketExecutor,  # noqa: F401
                                     PackedBucketExecutor)
 from repro.serving.sampling import SamplingParams, GREEDY  # noqa: F401
 from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
-                                  MixedStepResult)
+                                  MixedStepResult, SessionExport)
+from repro.serving.loop import PendingRequest, ServeLoop  # noqa: F401
+from repro.serving.cluster import ServeCluster  # noqa: F401

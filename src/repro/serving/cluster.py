@@ -1,0 +1,260 @@
+"""Multi-engine spatial disaggregation: the ServeCluster (DESIGN.md §9).
+
+Owns N independent ``Engine``/``ServeLoop`` pairs and a pluggable
+:class:`~repro.core.routing.Router`.  Three mechanisms reproduce the
+paper's fig7/fig8 multi-instance mode on real JAX engines:
+
+* **Length-aware routing** — every fresh session is placed by the
+  router over live :class:`EngineView` snapshots; later turns follow the
+  session's home engine (its KV lives there).
+* **Arena→arena KV handoff** — a session prefilled on a prefill-role
+  engine migrates to a decode-role engine before generating:
+  ``Engine.export_session`` → ``Engine.import_session`` moves slot rows
+  or page lists as DEVICE arrays (``handoff_host_bytes == 0`` is the
+  no-host-bounce proof), the loop-side decode bookkeeping moves with
+  it, and the source slot frees for the next long prefill.
+* **Deflection** — a short that spilled onto an idle prefill engine is
+  bounced back to the router (``ServeLoop.withdraw`` + re-route with
+  ``exclude={engine}``) if long work lands behind it before it
+  dispatches — Load-Aware Prefill Deflection's admission control.
+
+The cluster drives all loops round-robin through ``ServeLoop.tick``, so
+one thread interleaves every engine — the same unified-tick semantics
+as a single loop, summed over instances.  The JAX-free mirror is
+``sim.simulator.ClusterSim`` with ``router_obj`` + ``decode_handoff``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+from repro.core.routing import EngineView, LengthAwareRouter, RouteRequest, \
+    Router
+from repro.core.slo import SLOReport, SLOTracker
+from repro.serving.loop import ServeLoop
+from repro.serving.sampling import SamplingParams
+
+
+class ServeCluster:
+    """N serve loops behind one submit() + a routing/migration brain."""
+
+    def __init__(self, loops: Sequence[ServeLoop], router: Router,
+                 roles: Optional[Sequence[str]] = None,
+                 migrate_decodes: Optional[bool] = None,
+                 deflect_backlog_tokens: Optional[int] = None):
+        assert loops, "a cluster needs at least one engine"
+        self.loops: List[ServeLoop] = list(loops)
+        self.router = router
+        self.roles: List[str] = (list(roles) if roles is not None
+                                 else ["general"] * len(self.loops))
+        assert len(self.roles) == len(self.loops)
+        pagedness = {lp.engine._paged for lp in self.loops}
+        assert len(pagedness) == 1, \
+            "mixed slot/paged clusters cannot hand sessions off"
+        spatial = (any(r == "prefill" for r in self.roles)
+                   and any(r != "prefill" for r in self.roles))
+        # migrate by default exactly when the cluster HAS a spatial
+        # split and its engines support handoff
+        self.migrate = (spatial and all(lp.engine.can_handoff
+                                        for lp in self.loops)
+                        if migrate_decodes is None else migrate_decodes)
+        self.deflect_tokens = deflect_backlog_tokens
+        self._home: Dict[int, int] = {}            # session → engine
+        self._deflectable: Dict[int, int] = {}     # rid → engine
+        self.deflections = 0
+        self.migrated_sessions = 0
+
+    # ------------------------------------------------------------- state
+    def views(self) -> List[EngineView]:
+        out = []
+        for i, lp in enumerate(self.loops):
+            eng = lp.engine
+            free = (eng.arena.free_pages if eng._paged
+                    else eng.arena.free_slots)
+            out.append(EngineView(
+                engine_id=i, role=self.roles[i],
+                queue_len=lp.policy.queue_len(),
+                backlog_tokens=lp.policy.backlog_tokens(),
+                active_decodes=len(lp.active_decodes),
+                free_slots=free))
+        return out
+
+    def engine_of(self, session: int) -> Optional[int]:
+        return self._home.get(session)
+
+    def generated(self, session: int) -> List[int]:
+        home = self._home.get(session)
+        if home is None:
+            return []
+        return self.loops[home].generated.get(session, [])
+
+    # ------------------------------------------------------------ intake
+    def submit(self, session: int, tokens: np.ndarray,
+               decode_tokens: int = 0,
+               deadline: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None) -> Request:
+        """Route one turn.  A session's first turn is placed by the
+        router; later turns pin to the home engine (that is where the
+        cached KV lives — cross-engine reuse is exactly what
+        migration/handoff is for, not re-routing)."""
+        eid = self._home.get(session)
+        fresh = eid is None
+        meta = RouteRequest(new_tokens=len(tokens),
+                            decode_tokens=decode_tokens, session=session)
+        if fresh:
+            eid = self.router.route(meta, self.views())
+            self._home[session] = eid
+        r = self.loops[eid].submit(session, tokens,
+                                   decode_tokens=decode_tokens,
+                                   deadline=deadline, sampling=sampling)
+        # a fresh SHORT parked on a prefill-role engine (spillover) is
+        # a deflection candidate until it dispatches
+        if (fresh and self.deflect_tokens is not None
+                and self.roles[eid] == "prefill"
+                and isinstance(self.router, LengthAwareRouter)
+                and not self.router.is_long(meta)):
+            self._deflectable[r.rid] = eid
+        return r
+
+    def close_session(self, session: int) -> None:
+        home = self._home.pop(session, None)
+        if home is not None:
+            self.loops[home].close_session(session)
+
+    # --------------------------------------------------------- deflection
+    def _maybe_deflect(self) -> None:
+        """Bounce spilled shorts off prefill engines that turned busy.
+
+        A deflected request leaves the bouncing engine exactly as if it
+        had never been submitted there (ServeLoop.withdraw) and goes
+        back through the router with that engine excluded; its original
+        arrival timestamp is preserved so TTFT/SLO accounting charges
+        the detour to the request, not to the clock."""
+        if self.deflect_tokens is None or not self._deflectable:
+            return
+        for rid, eid in list(self._deflectable.items()):
+            lp = self.loops[eid]
+            pr = lp._tokens.get(rid)
+            if pr is None or pr.req.dispatch_time is not None:
+                self._deflectable.pop(rid, None)   # served or gone
+                continue
+            if lp.policy.backlog_tokens() - pr.req.new_tokens \
+                    <= self.deflect_tokens:
+                continue                           # engine still quiet
+            w = lp.withdraw(rid)
+            self._deflectable.pop(rid, None)
+            if w is None:
+                continue
+            session = w.req.session
+            self._home.pop(session, None)
+            tokens = w.prompt if w.prompt is not None else w.tokens
+            meta = RouteRequest(new_tokens=len(tokens),
+                                decode_tokens=w.decode_tokens,
+                                session=session)
+            new_eid = self.router.route(meta, self.views(),
+                                        exclude=frozenset({eid}))
+            self._home[session] = new_eid
+            r2 = self.loops[new_eid].submit(
+                session, tokens, decode_tokens=w.decode_tokens,
+                deadline=w.req.deadline, sampling=w.sampling)
+            r2.arrival = w.req.arrival
+            self.deflections += 1
+
+    # ---------------------------------------------------------- migration
+    def _migratable(self, lp: ServeLoop, session: int) -> bool:
+        # only sessions that are PURELY decoding move: no queued turn
+        # (its prefill belongs where it was routed) — and the engine
+        # pair must support handoff at all
+        return not any(p.req.session == session
+                       for p in lp._tokens.values())
+
+    def _maybe_migrate(self) -> None:
+        """Move decode-phase sessions off prefill-role engines.
+
+        In spatial mode a prefill engine exists to run long prefills
+        back to back; a session that finished its prefill there would
+        otherwise pin a slot and steal tick time for its decode steps.
+        Export → import moves its KV device-to-device to the least
+        decode-loaded non-prefill engine, the loop bookkeeping follows,
+        and the source slot frees."""
+        if not self.migrate:
+            return
+        dsts = [i for i, role in enumerate(self.roles) if role != "prefill"]
+        if not dsts:
+            return
+        for src, lp in enumerate(self.loops):
+            if self.roles[src] != "prefill":
+                continue
+            for session in list(lp.active_decodes):
+                if not self._migratable(lp, session):
+                    continue
+                dst = min(dsts, key=lambda i: (
+                    len(self.loops[i].active_decodes),
+                    self.loops[i].policy.backlog_tokens(), i))
+                self._migrate_session(src, dst, session)
+
+    def _migrate_session(self, src: int, dst: int, session: int) -> None:
+        a, b = self.loops[src], self.loops[dst]
+        payload = a.engine.export_session(session)
+        b.engine.import_session(session, payload)
+        # decode bookkeeping moves with the KV
+        b.active_decodes[session] = a.active_decodes.pop(session)
+        for d_src, d_dst in ((a.last_token, b.last_token),
+                             (a.generated, b.generated),
+                             (a.first_tokens, b.first_tokens),
+                             (a._last_emit, b._last_emit)):
+            if session in d_src:
+                d_dst[session] = d_src.pop(session)
+        if session in a._session_pending:
+            b._session_pending[session] = a._session_pending.pop(session)
+        a.engine.close_session(session)
+        self._home[session] = dst
+        self.migrated_sessions += 1
+
+    # --------------------------------------------------------------- run
+    @property
+    def has_work(self) -> bool:
+        return any(lp.has_work for lp in self.loops)
+
+    def run_until_idle(self, max_wall: float = 60.0) -> None:
+        """Interleave every loop's unified tick until the whole cluster
+        drains (or max_wall elapses).  Deflection runs before the ticks
+        (bounce while still queued), migration after (a prefill that
+        just finished starts decoding elsewhere next tick)."""
+        clock = self.loops[0].clock
+        start = clock()
+        while self.has_work and clock() - start < max_wall:
+            self._maybe_deflect()
+            did_any = False
+            for lp in self.loops:
+                if not lp.has_work:
+                    continue
+                did, _ = lp.tick()
+                did_any = did_any or did
+            self._maybe_migrate()
+            if not did_any:
+                time.sleep(0.0005)
+
+    # ------------------------------------------------------------ reports
+    def report(self, horizon: Optional[float] = None) -> SLOReport:
+        return SLOTracker.merged(
+            [lp.tracker for lp in self.loops]).report(horizon)
+
+    def stats(self) -> Dict:
+        per_engine = [lp.engine.stats() for lp in self.loops]
+        return {
+            "engines": len(self.loops),
+            "roles": list(self.roles),
+            "router": self.router.name,
+            "deflections": self.deflections,
+            "migrated_sessions": self.migrated_sessions,
+            "handoff_sessions": sum(s["handoff_sessions"]
+                                    for s in per_engine),
+            "handoff_tokens": sum(s["handoff_tokens"] for s in per_engine),
+            "handoff_host_bytes": sum(s["handoff_host_bytes"]
+                                      for s in per_engine),
+            "per_engine": per_engine,
+        }

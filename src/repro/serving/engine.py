@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,26 @@ class MixedStepResult:
     bucket: Optional[int] = None  # token bucket used (fused path)
     n_prefill: int = 0            # prefill + chunk segments
     n_decode: int = 0             # fused decode segments
+
+
+@dataclasses.dataclass
+class SessionExport:
+    """Device-resident snapshot of one session's cached context for
+    arena→arena KV handoff (DESIGN.md §9).
+
+    ``kv`` stays on device end to end: slot arenas export per-leaf
+    ``(G, length, Hkv, D)`` slices, paged arenas ``(G, n_pages,
+    page_size, Hkv, D)`` page gathers.  ``Engine.import_session`` counts
+    the bytes of any HOST array that crosses it into
+    ``handoff_host_bytes`` — the proof counter benches assert == 0."""
+
+    length: int
+    kv: Any
+    paged: bool
+    token_ids: Optional[List[int]] = None   # paged: committed ids
+    sampling: Optional[SamplingParams] = None
+    rng: Optional[np.random.Generator] = None
+    last_logits: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -178,6 +198,13 @@ class Engine:
         # on-device argmax without shipping full-vocab logits to host
         self.fused_greedy_steps = 0
         self.logits_rows_shipped = 0
+        # §9 arena→arena handoff proof counters: sessions imported from
+        # a peer engine, tokens of KV that crossed, and the bytes of any
+        # HOST array among the crossing leaves (must stay 0 — the copy
+        # is device-to-device)
+        self.handoff_sessions = 0
+        self.handoff_tokens = 0
+        self.handoff_host_bytes = 0
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -222,6 +249,71 @@ class Engine:
         partial boundary page, which then copies on demand."""
         assert self._paged, "fork_session requires paged_kv=True"
         self.arena.fork(parent, child)
+
+    # ------------------------------------------------------------ handoff
+    @property
+    def can_handoff(self) -> bool:
+        """Arena→arena session handoff is defined for pure-attention,
+        non-rolling layouts: every cache leaf is a k/v tensor with the
+        sequence on one contiguous axis.  Rolling SWA slots write
+        modularly and SSM state is not a token sequence — migrating
+        those needs a layout-aware repack (ROADMAP)."""
+        return self.capability.pure_attn and not self._rolling
+
+    def export_session(self, session: int) -> SessionExport:
+        """Handoff source (DESIGN.md §9): snapshot the session's cached
+        KV as DEVICE arrays — slot rows sliced or page rows gathered,
+        never copied through host — plus the sampling state a decode on
+        the destination needs (params, the replayable rng, last
+        logits).  The source keeps the session; the cluster closes it
+        after a successful import."""
+        assert self.can_handoff, \
+            "KV handoff requires a pure-attention, non-rolling arena"
+        h = self.history(session)
+        if self._paged:
+            kv = self.arena.export_pages(session)
+            ids = list(self.arena._tokens.get(session, []))
+        else:
+            kv = self.arena.export_slot(session)
+            ids = None
+        return SessionExport(length=h, kv=kv, paged=self._paged,
+                             token_ids=ids,
+                             sampling=self.sampling.get(session),
+                             rng=self._rngs.get(session),
+                             last_logits=self.last_logits.get(session))
+
+    def import_session(self, session: int, payload: SessionExport) -> None:
+        """Handoff destination: write the exported KV into this arena
+        (fresh slot or fresh pages) with device-to-device copies and
+        restore the sampling state.  Any host array among the KV leaves
+        is counted into ``handoff_host_bytes`` — benches assert it
+        stays 0."""
+        assert self.can_handoff, \
+            "KV handoff requires a pure-attention, non-rolling arena"
+        assert payload.paged == self._paged, \
+            "handoff between arena families (slot vs paged) not supported"
+        assert self.history(session) == 0, \
+            f"import into non-empty session {session}"
+        if payload.kv is not None:
+            for leaf in jax.tree.leaves(payload.kv):
+                if not isinstance(leaf, jax.Array):
+                    self.handoff_host_bytes += int(
+                        getattr(leaf, "nbytes", 0))
+        if self._paged:
+            self.arena.import_session(session, payload.token_ids or [],
+                                      payload.kv, payload.length)
+        else:
+            if session in self.arena._session_slot:
+                self.arena.free(session)
+            self.arena.import_slot(session, payload.kv, payload.length)
+        if payload.sampling is not None:
+            self.sampling[session] = payload.sampling
+            if payload.rng is not None:
+                self._rngs[session] = payload.rng
+        if payload.last_logits is not None:
+            self.last_logits[session] = payload.last_logits
+        self.handoff_sessions += 1
+        self.handoff_tokens += payload.length
 
     # ----------------------------------------------------------- sampling
     def set_sampling(self, session: int,
@@ -845,6 +937,10 @@ class Engine:
             "prefix_hit_tokens": getattr(self.arena, "prefix_hit_tokens", 0),
             "pages_cow_forked": getattr(self.arena, "pages_cow_forked", 0),
             "pages_evicted": getattr(self.arena, "pages_evicted", 0),
+            # §9 arena→arena handoff proof counters
+            "handoff_sessions": self.handoff_sessions,
+            "handoff_tokens": self.handoff_tokens,
+            "handoff_host_bytes": self.handoff_host_bytes,
         }
         if self._paged:
             out["free_pages"] = self.arena.free_pages

@@ -123,6 +123,28 @@ class KVArena:
         advanced by the engine per session."""
         self.arena = new_arena
 
+    # ----------------------------------------------------------- handoff
+    def export_slot(self, session: int) -> Any:
+        """Handoff source (DESIGN.md §9): slice the session's cached rows
+        as DEVICE arrays — one dynamic-slice per leaf, no host transfer.
+        Only valid for pure-attention, non-rolling layouts (seq axis 2)."""
+        slot = self._session_slot[session]
+        h = self.lengths[session]
+        return jax.tree.map(lambda a: a[:, slot, :h], self.arena)
+
+    def import_slot(self, session: int, kv: Any, n_tokens: int) -> int:
+        """Handoff destination: allocate a slot and device-copy the
+        exported rows into it.  Returns the slot."""
+        assert session not in self._session_slot, \
+            f"import into live session {session}"
+        slot = self.alloc(session)
+        if n_tokens:
+            self.arena = jax.tree.map(
+                lambda a, b: a.at[:, slot, :n_tokens].set(b.astype(a.dtype)),
+                self.arena, kv)
+        self.set_length(session, n_tokens)
+        return slot
+
 
 class _RadixNode:
     """One edge of the prefix trie: a page_size-token chunk → one page."""
@@ -455,6 +477,47 @@ class PagedKVArena:
         self._pages[child] = list(self._pages[parent])
         self._tokens[child] = list(self._tokens[parent])
         self.lengths[child] = self.lengths[parent]
+
+    # ------------------------------------------------------------- handoff
+    def export_pages(self, session: int) -> Any:
+        """Handoff source (DESIGN.md §9): gather the session's page rows
+        from the pool as DEVICE arrays (no host transfer)."""
+        pages = self._pages.get(session, [])
+        if self.arena is None or not pages:
+            return None
+        idx = jnp.asarray(pages, jnp.int32)
+        return jax.tree.map(lambda a: jnp.take(a, idx, axis=1), self.arena)
+
+    def import_session(self, session: int, token_ids: Sequence[int],
+                       kv: Any, n_tokens: int) -> List[int]:
+        """Handoff destination: allocate fresh pages, device-copy the
+        exported pool rows into them, rebuild the session bookkeeping,
+        and index every full page — the imported prefix becomes
+        shareable here exactly as if it had been prefilled locally."""
+        self.open(session)
+        assert self.lengths[session] == 0 and not self._pages[session], \
+            f"import into non-empty session {session}"
+        if n_tokens > self.max_len - 2:
+            raise RuntimeError(
+                f"imported session {session} overflows arena "
+                f"({n_tokens} > {self.max_len - 2})")
+        ps = self.page_size
+        n_pages = -(-n_tokens // ps)
+        pages = [self._alloc_page() for _ in range(n_pages)]
+        if self.arena is not None and kv is not None and pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            self.arena = jax.tree.map(
+                lambda a, b: a.at[:, idx].set(b.astype(a.dtype)),
+                self.arena, kv)
+        self._pages[session] = pages
+        self._tokens[session] = [int(t) for t in token_ids[:n_tokens]]
+        self.lengths[session] = n_tokens
+        if self.index is not None:
+            n_full = n_tokens // ps
+            for p in self.index.insert(self._tokens[session][:n_full * ps],
+                                       pages[:n_full]):
+                self._ref(p)
+        return pages
 
     # ------------------------------------------------------- device arrays
     def _copy_page(self, src: int, dst: int) -> None:

@@ -38,8 +38,10 @@ from repro.serving.sampling import SamplingParams
 @dataclasses.dataclass
 class PendingRequest:
     req: Request
-    tokens: np.ndarray
+    tokens: np.ndarray            # prompt suffix past any adopted prefix
     decode_tokens: int = 0
+    prompt: Optional[np.ndarray] = None   # full original prompt (deflection)
+    sampling: Optional[SamplingParams] = None
 
 
 class ServeLoop:
@@ -64,17 +66,37 @@ class ServeLoop:
         self.tpot_samples: List[float] = []        # s between decode tokens
         self.max_tpot_samples = 4096               # keep the tail only
         self._last_emit: Dict[int, float] = {}
+        # tokens accepted for a session but not yet written to the engine
+        # cache (queued prefills + unserved decode budgets): the history
+        # estimate for a turn enqueued behind another turn of the same
+        # session is engine.history + this
+        self._session_pending: Dict[int, int] = {}
+
+    def _dec_pending(self, session: int, n: int) -> None:
+        if n <= 0 or session not in self._session_pending:
+            return
+        left = self._session_pending[session] - n
+        if left > 0:
+            self._session_pending[session] = left
+        else:
+            self._session_pending.pop(session, None)
 
     def close_session(self, session: int) -> None:
         """Release a finished session: its engine slot and every piece
         of per-session loop state (transcripts, decode bookkeeping) —
-        long-running loops must not accumulate dead sessions."""
+        long-running loops must not accumulate dead sessions.  Queued
+        turns for the session are purged FIRST: a later tick must never
+        dispatch a prefill into the freed (or reallocated) slot."""
+        for r in self.policy.purge(lambda q: q.session == session):
+            self._tokens.pop(r.rid, None)
+            self._outstanding -= 1
         self.engine.close_session(session)
         self.active_decodes.pop(session, None)
         self.last_token.pop(session, None)
         self.generated.pop(session, None)
         self.first_tokens.pop(session, None)
         self._last_emit.pop(session, None)
+        self._session_pending.pop(session, None)
 
     # ------------------------------------------------------------ intake
     def submit(self, session: int, tokens: np.ndarray,
@@ -89,29 +111,76 @@ class ServeLoop:
         logits gather."""
         now = self.clock()
         # a new turn preempts any generation still running on the session
-        self.active_decodes.pop(session, None)
+        # — including decode budgets of EARLIER turns still queued: those
+        # tokens will never be generated, so the pending-token estimate
+        # must forget them too
+        preempted = self.active_decodes.pop(session, 0)
+        for p in self._tokens.values():
+            if p.req.session == session and p.decode_tokens:
+                preempted += p.decode_tokens
+                p.decode_tokens = 0
+        self._dec_pending(session, preempted)
         self.engine.open_session(session)
         self.engine.set_sampling(session, sampling)
-        hist = self.engine.history(session)
+        pending = self._session_pending.get(session, 0)
+        # history ESTIMATE: cache length now plus every queued-but-unwritten
+        # token of this session.  Reading engine.history alone is stale the
+        # moment a second turn is submitted before the first dispatches —
+        # wrong dual-queue classification and AWD billing.  The estimate is
+        # refined to the exact cache length at dispatch time.
+        hist = self.engine.history(session) + pending
         # paged engines with a radix prefix index: adopt the longest
         # indexed prefix of the prompt RIGHT HERE, so length-aware
         # classification, the AWD token budget, and the long-prefill
         # chunker all see (and slice) exactly the true suffix — the
         # matched pages are refcount-pinned while the request waits and
         # the prefill step only ever touches tokens past them (§8).
-        reusable = self.engine.adopt_prefix(session, tokens) if hist == 0 \
+        # Adoption is gated on a TRULY empty session: adopting under a
+        # queued prior turn would bump the arena length and corrupt the
+        # queued turn's write offset.
+        prompt = np.asarray(tokens)
+        reusable = self.engine.adopt_prefix(session, prompt) if hist == 0 \
             else 0
-        tokens = np.asarray(tokens)[reusable:]
+        tokens = prompt[reusable:]
         r = Request(new_tokens=len(tokens),
                     history_tokens=hist + reusable,
                     arrival=now,
                     deadline=deadline if deadline is not None else
                     (now + self.slo if self.slo else None),
                     session=session, reusable_prefix=reusable)
-        self._tokens[r.rid] = PendingRequest(r, tokens, decode_tokens)
+        self._tokens[r.rid] = PendingRequest(r, tokens, decode_tokens,
+                                             prompt=prompt,
+                                             sampling=sampling)
+        self._session_pending[session] = \
+            pending + len(tokens) + decode_tokens
         self.policy.enqueue(r, now)
         self._outstanding += 1
         return r
+
+    def withdraw(self, rid: int) -> Optional[PendingRequest]:
+        """Deflection support (§9): pull a still-queued request back out
+        of the loop — removed from the policy and every intake-side
+        record as if it had never been submitted — so the cluster can
+        re-route it.  Returns None when the request is unknown or has
+        already dispatched (too late to bounce)."""
+        pr = self._tokens.get(rid)
+        if pr is None or pr.req.dispatch_time is not None:
+            return None
+        if not self.policy.purge(lambda q: q.rid == rid):
+            return None
+        self._tokens.pop(rid, None)
+        self._outstanding -= 1
+        session = pr.req.session
+        self._dec_pending(session, len(pr.tokens) + pr.decode_tokens)
+        # free the engine session when nothing else references it — the
+        # withdrawn request wrote no KV (at most adopted pins, which
+        # close releases)
+        others = any(p.req.session == session
+                     for p in self._tokens.values())
+        if not others and session not in self.active_decodes and \
+                self.engine.history(session) <= pr.req.reusable_prefix:
+            self.engine.close_session(session)
+        return pr
 
     # ------------------------------------------------- decode bookkeeping
     def _start_decoding(self, session: int, first_token: int,
@@ -130,6 +199,7 @@ class ServeLoop:
         if len(self.tpot_samples) > 2 * self.max_tpot_samples:
             self.tpot_samples = self.tpot_samples[-self.max_tpot_samples:]
         self._last_emit[session] = now
+        self._dec_pending(session, 1)   # this token's KV is now cached
         left = self.active_decodes.get(session, 0) - 1
         if left > 0:
             self.active_decodes[session] = left
@@ -147,6 +217,10 @@ class ServeLoop:
         sessions, token_lists = [], []
         for r in batch.requests:
             r.dispatch_time = now
+            # the enqueue-time history was an estimate (a prior turn of
+            # the session may still have been queued); the cache length
+            # NOW is the truth the prefill writes against
+            r.history_tokens = self.engine.history(r.session)
             pr = self._tokens[r.rid]
             sessions.append(r.session)
             token_lists.append(pr.tokens)
@@ -180,6 +254,7 @@ class ServeLoop:
             r.finish_time = done
             self.tracker.record(r)
             pr = self._tokens.pop(r.rid)     # prefill served: drop prompt
+            self._dec_pending(r.session, len(pr.tokens))
             self._start_decoding(r.session, firsts[r.session],
                                  pr.decode_tokens, done)
             self._outstanding -= 1
@@ -189,6 +264,10 @@ class ServeLoop:
         r = work.req
         if r.dispatch_time is None:
             r.dispatch_time = now
+            # first chunk: refine the enqueue-time history estimate to
+            # the exact cache length (later chunks keep it — done chunks
+            # are accounted by ChunkWork.done_tokens)
+            r.history_tokens = self.engine.history(r.session)
         pr = self._tokens[r.rid]
         chunk = np.asarray(
             pr.tokens[work.done_tokens:work.done_tokens + work.chunk_tokens])
@@ -209,6 +288,7 @@ class ServeLoop:
         else:
             firsts = self.engine.prefill_batch([r.session], [chunk])
             done = self.clock()
+        self._dec_pending(r.session, len(chunk))
         if work.is_last:
             r.finish_time = done
             self.tracker.record(r)
@@ -230,37 +310,55 @@ class ServeLoop:
             self._record_decoded(s, out[s][0], done)
 
     # --------------------------------------------------------------- run
+    @property
+    def has_work(self) -> bool:
+        """True while any prefill is queued or any decode budget remains."""
+        return self._outstanding > 0 or bool(self.active_decodes)
+
+    def tick(self) -> Tuple[bool, Optional[float]]:
+        """One unified scheduler tick: ask the policy for work, run it
+        (or a decode-only step when the backlog is the only work), and
+        periodically re-fit the §2.1 boundary.  Returns ``(did_work,
+        wake_time)`` so multi-engine drivers (ServeCluster) can
+        interleave many loops without nesting their drain loops."""
+        now = self.clock()
+        self.policy.note_decode_backlog(len(self.active_decodes))
+        work, wake = self.policy.next_work(now)
+        did = True
+        if isinstance(work, Batch) and work.requests:
+            self._run_batch(work)
+            self.policy.on_complete(work, self.clock())
+        elif isinstance(work, ChunkWork):
+            self._run_chunk(work)
+            self.policy.on_complete(work, self.clock())
+        elif self.active_decodes:
+            # the decode backlog fills what would be an idle wait —
+            # temporal sharing without a separate decode phase
+            self._run_decode_only()
+        else:
+            did = False
+        self._since_fit += 1
+        if self._since_fit >= self.refit_every:
+            self._since_fit = 0
+            fit = self.engine.fit_boundary()
+            if fit is not None and hasattr(self.policy, "dq") and \
+                    self.policy.dq.override is None:
+                self.policy.dq.model = None  # fitted threshold wins
+                self.policy.dq.override = fit.boundary()
+        return did, wake
+
     def run_until_idle(self, max_wall: float = 60.0) -> None:
         """Drive the unified tick until every prefill AND every session's
         decode budget is drained (or max_wall elapses)."""
         start = self.clock()
-        while (self._outstanding > 0 or self.active_decodes) and \
-                self.clock() - start < max_wall:
-            now = self.clock()
-            self.policy.note_decode_backlog(len(self.active_decodes))
-            work, wake = self.policy.next_work(now)
-            if isinstance(work, Batch) and work.requests:
-                self._run_batch(work)
-                self.policy.on_complete(work, self.clock())
-            elif isinstance(work, ChunkWork):
-                self._run_chunk(work)
-                self.policy.on_complete(work, self.clock())
-            elif self.active_decodes:
-                # the decode backlog fills what would be an idle wait —
-                # temporal sharing without a separate decode phase
-                self._run_decode_only()
-            elif wake is not None:
-                time.sleep(max(0.0, min(wake - now, 0.01)))
-            else:
-                time.sleep(0.0005)
-            self._since_fit += 1
-            if self._since_fit >= self.refit_every:
-                self._since_fit = 0
-                fit = self.engine.fit_boundary()
-                if fit is not None and hasattr(self.policy, "dq") and \
-                        self.policy.dq.override is None:
-                    self.policy.dq.model = None  # fitted threshold wins
-                    self.policy.dq.override = fit.boundary()
+        while self.has_work and self.clock() - start < max_wall:
+            did, wake = self.tick()
+            if not did:
+                now = self.clock()
+                if wake is not None:
+                    time.sleep(max(0.0, min(wake - now, 0.01)))
+                else:
+                    time.sleep(0.0005)
 
     def decode(self, session: int, steps: int) -> List[int]:
         """Manual greedy continuation (legacy API).  Keeps the loop's

@@ -58,8 +58,19 @@ class CostModel:
     # what the suffix-only step executes.
     page_size: Optional[int] = None
     page_lookup: float = 2.0e-7    # s per page-table entry walked
+    # §9 arena→arena KV handoff (spatial disaggregation): migrating a
+    # session's cached KV between engines is a device-to-device copy —
+    # ~0.26 MB/token for a 32B bf16 config over an NVLink-class fabric
+    # (~0.9 TB/s) plus a fixed launch.  Billed by ClusterSim when
+    # decode_handoff moves a prefilled session to a decode instance.
+    handoff_per_token: float = 2.9e-7
+    handoff_launch: float = 5.0e-4
 
     # ------------------------------------------------------------ pieces
+    def handoff_time(self, ctx: int) -> float:
+        """Migrate ``ctx`` cached tokens engine→engine (§9)."""
+        return self.handoff_launch + self.handoff_per_token * max(ctx, 0)
+
     @property
     def tail_coef(self) -> float:
         """Linear cost of one tail/pad row (β_tail, falling back to β)."""

@@ -24,6 +24,7 @@ from repro.core.buckets import DEFAULT_DECODE_BUCKETS, DecodeBucketLadder
 from repro.core.controller import (InstanceStats, Migration,
                                    PressureController)
 from repro.core.request import Batch, Request
+from repro.core.routing import EngineView, Router
 from repro.core.scheduler import BasePolicy, ChunkWork, PoolPolicy
 from repro.core.slo import SLOTracker
 from repro.sim.costmodel import CostModel
@@ -62,6 +63,12 @@ class SimConfig:
     # (CostModel.page_size separately prices the page-table walk.)
     page_size: Optional[int] = None
     prefix_reuse: bool = False
+    # §9 spatial disaggregation: when a prefill-role instance finishes a
+    # request with decode budget, the session's KV hands off (device-to-
+    # device, priced by CostModel.handoff_time) to the least-decode-
+    # loaded non-prefill instance instead of decoding in place —
+    # mirroring ServeCluster._maybe_migrate on the real engines.
+    decode_handoff: bool = False
 
 
 class _Instance:
@@ -100,16 +107,34 @@ class ClusterSim:
                  shared_policy: Optional[BasePolicy] = None,
                  classifier: Optional[Callable[[Request], str]] = None,
                  controller: Optional[PressureController] = None,
-                 pools: Optional[Dict[int, str]] = None):
+                 pools: Optional[Dict[int, str]] = None,
+                 router_obj: Optional[Router] = None,
+                 roles: Optional[Sequence[str]] = None):
         self.cfg = cfg or SimConfig()
         self.cost = cost
         self.shared = shared_policy
         self.classifier = classifier
         self.controller = controller
+        # router_obj: a core.routing Router drives placement over live
+        # EngineView snapshots — the SAME object the real ServeCluster
+        # uses, so policies tuned here drop into serving unchanged.
+        # Takes precedence over the cfg.router string dispatch.
+        self.router_obj = router_obj
         self.instances = [
             _Instance(i, None if shared_policy is not None else policy_factory(i))
             for i in range(n_instances)]
+        # instance roles for the router + decode handoff ("prefill" =
+        # long-prefill pool).  Default derives from PoolPolicy pools.
+        if roles is not None:
+            self.roles = list(roles)
+        else:
+            self.roles = [
+                {"long": "prefill", "short": "decode"}.get(
+                    getattr(i.policy, "pool", None) or "", "general")
+                for i in self.instances]
         self.pools = pools or {}
+        self.handoffs = 0
+        self.handoff_tokens = 0
         self._decode_ladder = DecodeBucketLadder(self.cfg.decode_buckets)
         self.tracker = SLOTracker(self.cfg.slo_ttft)
         self._events: List[Tuple[float, int, str, object]] = []
@@ -157,10 +182,22 @@ class ClusterSim:
         self.instances[instance].speed = speed
 
     # ------------------------------------------------------------ routing
+    def _views(self) -> List[EngineView]:
+        return [EngineView(engine_id=i.idx,
+                           role=(self.roles[i.idx]
+                                 if i.idx < len(self.roles) else "general"),
+                           alive=i.alive,
+                           queue_len=i.policy.queue_len(),
+                           backlog_tokens=i.policy.backlog_tokens(),
+                           active_decodes=len(i.decode_sessions))
+                for i in self.instances if i.alive and i.policy is not None]
+
     def _route(self, r: Request) -> Optional[_Instance]:
         alive = [i for i in self.instances if i.alive]
         if not alive:
             return None
+        if self.router_obj is not None:
+            return self.instances[self.router_obj.route(r, self._views())]
         if self.cfg.router == "round_robin":
             self._rr = (self._rr + 1) % len(alive)
             return alive[self._rr]
@@ -294,12 +331,30 @@ class ClusterSim:
             self.tracker.record(work.req)
             self._after_request(inst, work.req)
 
+    def _role(self, inst: _Instance) -> str:
+        return self.roles[inst.idx] if inst.idx < len(self.roles) \
+            else "general"
+
     def _after_request(self, inst: _Instance, r: Request) -> None:
         inst.prefill_done += 1
         if r.deadline is not None:
             inst.recent_dev.append(max(0.0, (r.finish_time or 0.0) - r.deadline))
         if self.cfg.mode == "mix" and r.decode_tokens > 0:
-            inst.decode_sessions.append((r.decode_tokens, r.total_context))
+            if self.cfg.decode_handoff and self._role(inst) == "prefill" \
+                    and any(i.alive and self._role(i) != "prefill"
+                            for i in self.instances):
+                # §9 spatial split: the prefilled session decodes on a
+                # decode instance — its KV crosses engine→engine after
+                # the (priced) device-to-device copy; the destination is
+                # picked when the copy lands (load may have shifted)
+                delay = self.cost.handoff_time(r.total_context)
+                self.handoffs += 1
+                self.handoff_tokens += r.total_context
+                self._push(self.now + delay, "handoff",
+                           (r.decode_tokens, r.total_context))
+            else:
+                inst.decode_sessions.append((r.decode_tokens,
+                                             r.total_context))
         if 0 <= r.session < len(self.clients) and \
                 self._client_busy.get(r.session, False):
             self._client_busy[r.session] = False
@@ -380,6 +435,17 @@ class ClusterSim:
                                 self._try(inst)
             elif kind == "try":
                 self._try(self.instances[data])
+            elif kind == "handoff":
+                # the migrated session's KV has landed: attach its decode
+                # to the least decode-loaded non-prefill instance
+                budget, ctx = data
+                cands = [i for i in self.instances
+                         if i.alive and self._role(i) != "prefill"]
+                dst = min(cands, key=lambda i: (len(i.decode_sessions),
+                                                i.idx)) if cands else None
+                if dst is not None:
+                    dst.decode_sessions.append((budget, ctx))
+                    self._try(dst)
             elif kind == "done":
                 idx, work = data
                 inst = self.instances[idx]

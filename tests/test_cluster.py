@@ -1,0 +1,291 @@
+"""Spatial disaggregation (DESIGN.md §9): router policies over scripted
+cluster snapshots, arena→arena KV handoff parity on real engines (slot
+AND paged), deflection, and the end-to-end multi-engine ServeCluster."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import H200_QWEN32B
+from repro.core.routing import (EngineView, LeastLoadedRouter,
+                                LengthAwareRouter, RoundRobinRouter,
+                                RouteRequest, make_router)
+from repro.core.scheduler import PoolPolicy
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig, ServeCluster
+from repro.serving.loop import ServeLoop
+
+KEY = jax.random.key(21)
+
+
+# ------------------------------------------------------------- router units
+def _views(*specs):
+    """specs: (role, backlog_tokens[, active_decodes[, queue_len]])"""
+    out = []
+    for i, s in enumerate(specs):
+        role, backlog = s[0], s[1]
+        dec = s[2] if len(s) > 2 else 0
+        q = s[3] if len(s) > 3 else (1 if backlog else 0)
+        out.append(EngineView(engine_id=i, role=role, queue_len=q,
+                              backlog_tokens=backlog, active_decodes=dec))
+    return out
+
+
+SHORT = RouteRequest(new_tokens=32)
+LONG = RouteRequest(new_tokens=512)
+
+
+def test_round_robin_cycles():
+    r = RoundRobinRouter()
+    v = _views(("general", 0), ("general", 0), ("general", 0))
+    assert [r.route(SHORT, v) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_round_robin_skips_dead():
+    r = RoundRobinRouter()
+    v = _views(("general", 0), ("general", 0), ("general", 0))
+    v[1].alive = False
+    assert set(r.route(SHORT, v) for _ in range(4)) == {0, 2}
+
+
+def test_least_loaded_minimizes_backlog():
+    r = LeastLoadedRouter()
+    v = _views(("general", 90), ("general", 10), ("general", 40))
+    assert r.route(SHORT, v) == 1
+    v[1].active_decodes = 200        # decode load counts too
+    assert r.route(SHORT, v) == 2
+
+
+def test_least_loaded_tie_breaks_deterministic():
+    r = LeastLoadedRouter()
+    v = _views(("general", 10, 0, 3), ("general", 10, 0, 1),
+               ("general", 10, 0, 1))
+    assert r.route(SHORT, v) == 1    # queue_len, then engine id
+
+
+def test_length_aware_longs_only_on_prefill_engines():
+    """The spatial invariant: a long goes to a prefill engine even when
+    every prefill engine is busier than every short engine."""
+    r = LengthAwareRouter(threshold=256)
+    v = _views(("prefill", 900), ("prefill", 700), ("decode", 0),
+               ("decode", 0))
+    assert r.route(LONG, v) == 1               # least-loaded prefill
+    assert r.route(SHORT, v) in (2, 3)         # never the prefill pool
+
+
+def test_length_aware_threshold_boundary():
+    r = LengthAwareRouter(threshold=256)
+    v = _views(("prefill", 0), ("decode", 0))
+    assert r.route(RouteRequest(new_tokens=256), v) == 0   # >= is long
+    assert r.route(RouteRequest(new_tokens=255), v) == 1
+
+
+def test_length_aware_long_falls_back_without_prefill_pool():
+    r = LengthAwareRouter(threshold=256)
+    v = _views(("general", 50), ("general", 5))
+    assert r.route(LONG, v) == 1
+
+
+def test_length_aware_spillover_only_to_idle_prefill():
+    r = LengthAwareRouter(threshold=256, spill_tokens=64)
+    busy_shorts = _views(("prefill", 0), ("decode", 100), ("decode", 80))
+    assert r.route(SHORT, busy_shorts) == 0    # shorts drowning → spill
+    calm_shorts = _views(("prefill", 0), ("decode", 10), ("decode", 80))
+    assert r.route(SHORT, calm_shorts) == 1    # under spill_tokens → stay
+    busy_prefill = _views(("prefill", 300), ("decode", 100), ("decode", 80))
+    assert r.route(SHORT, busy_prefill) == 2   # prefill not idle → stay
+
+
+def test_exclude_reroutes_and_never_strands():
+    r = LeastLoadedRouter()
+    v = _views(("general", 5), ("general", 50))
+    assert r.route(SHORT, v, exclude=frozenset({0})) == 1
+    # exclusion that empties the eligible set is ignored, not fatal
+    assert r.route(SHORT, v, exclude=frozenset({0, 1})) == 0
+    v[0].alive = v[1].alive = False
+    with pytest.raises(RuntimeError):
+        r.route(SHORT, v)
+
+
+def test_make_router_names():
+    assert make_router("rr").name == "round_robin"
+    assert make_router("least_loaded").name == "least_loaded"
+    assert make_router("spatial", threshold=128).threshold == 128
+    with pytest.raises(ValueError):
+        make_router("nope")
+
+
+# ------------------------------------------------------- real-engine fixtures
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _ecfg(paged):
+    return EngineConfig(num_slots=4, max_len=96, chunk_tokens=16,
+                        paged_kv=paged, page_size=8)
+
+
+def _mk_loop(cfg, params, pool, paged=False):
+    eng = Engine(cfg, params, _ecfg(paged))
+    pol = PoolPolicy(H200_QWEN32B, pool=pool, threshold=24, chunk_tokens=16)
+    return ServeLoop(eng, pol, slo_ttft=30.0)
+
+
+# ------------------------------------------------------------ handoff parity
+@pytest.mark.parametrize("paged", [False, True], ids=["slot", "paged"])
+def test_kv_handoff_parity(smoke, paged):
+    """Prefill on engine A, export→import into engine B, decode on B:
+    tokens identical to the single-engine run and last logits within
+    1e-5 — the KV crossed arenas losslessly, without touching host."""
+    cfg, params = smoke
+    eng_a = Engine(cfg, params, _ecfg(paged))
+    eng_b = Engine(cfg, params, _ecfg(paged))
+    one = Engine(cfg, params, _ecfg(paged))
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 21)   # partial page on paged
+
+    fa = eng_a.prefill_batch([0], [prompt])
+    payload = eng_a.export_session(0)
+    eng_b.import_session(0, payload)
+    assert eng_b.history(0) == len(prompt)
+    db = eng_b.decode_batch([0], [fa[0]], steps=4)
+
+    fo = one.prefill_batch([0], [prompt])
+    do = one.decode_batch([0], [fo[0]], steps=4)
+
+    assert fa == fo
+    assert db == do
+    np.testing.assert_allclose(np.asarray(eng_b.last_logits[0]),
+                               np.asarray(one.last_logits[0]), atol=1e-5)
+    st = eng_b.stats()
+    assert st["handoff_sessions"] == 1
+    assert st["handoff_tokens"] == len(prompt)
+    assert st["handoff_host_bytes"] == 0
+    if paged:
+        eng_b.arena.audit()
+
+
+def test_handoff_source_slot_frees(smoke):
+    """After export+close on the source, its slot serves a new session."""
+    cfg, params = smoke
+    eng_a = Engine(cfg, params, _ecfg(False))
+    eng_b = Engine(cfg, params, _ecfg(False))
+    rng = np.random.default_rng(7)
+    p = rng.integers(0, cfg.vocab_size, 9)
+    eng_a.prefill_batch([0], [p])
+    eng_b.import_session(0, eng_a.export_session(0))
+    eng_a.close_session(0)
+    free = eng_a.arena.free_slots
+    assert free == eng_a.ecfg.num_slots
+    eng_a.prefill_batch([5], [p])           # slot reused cleanly
+    assert eng_a.history(5) == 9
+
+
+# --------------------------------------------------------------- deflection
+def test_deflection_bounces_exactly_the_spilled_short(smoke):
+    """A short spilled onto an idle prefill engine is withdrawn and
+    re-routed (engine excluded) when long work lands behind it; the long
+    stays, the short's arrival timestamp survives the detour."""
+    cfg, params = smoke
+    cluster = ServeCluster(
+        [_mk_loop(cfg, params, "long"), _mk_loop(cfg, params, "short")],
+        LengthAwareRouter(threshold=24, spill_tokens=0),
+        roles=["prefill", "decode"], deflect_backlog_tokens=8)
+    rng = np.random.default_rng(8)
+    cluster.submit(1, rng.integers(0, cfg.vocab_size, 6))   # decode engine
+    spilled = cluster.submit(2, rng.integers(0, cfg.vocab_size, 5))
+    assert cluster.engine_of(2) == 0        # spilled onto idle prefill
+    assert spilled.rid in cluster._deflectable
+    cluster._maybe_deflect()
+    assert cluster.deflections == 0         # no long behind it yet
+    cluster.submit(3, rng.integers(0, cfg.vocab_size, 40))  # long arrives
+    cluster._maybe_deflect()
+    assert cluster.deflections == 1
+    assert cluster.engine_of(2) == 1        # bounced to the short pool
+    assert cluster.engine_of(3) == 0        # the long did NOT move
+    lp0, lp1 = cluster.loops
+    assert all(p.req.session != 2 for p in lp0._tokens.values())
+    re_routed = [p.req for p in lp1._tokens.values() if p.req.session == 2]
+    assert len(re_routed) == 1
+    assert re_routed[0].arrival == spilled.arrival   # SLO charges the detour
+    cluster.run_until_idle(max_wall=180.0)
+    assert not cluster.has_work
+    assert cluster.report(horizon=1.0).n == 3
+
+
+# ------------------------------------------------------------- end to end
+@pytest.mark.parametrize("paged", [False, True], ids=["slot", "paged"])
+def test_cluster_end_to_end_with_migration(smoke, paged):
+    """Longs route to the prefill engine, migrate device-to-device after
+    prefill, and decode to full budget on the decode engine — transcripts
+    complete and no byte of KV bounced through host."""
+    cfg, params = smoke
+    cluster = ServeCluster(
+        [_mk_loop(cfg, params, "long", paged),
+         _mk_loop(cfg, params, "short", paged)],
+        LengthAwareRouter(threshold=24), roles=["prefill", "decode"])
+    assert cluster.migrate
+    rng = np.random.default_rng(9)
+    n_tok = {0: 40, 1: 7, 2: 11, 3: 33}     # two longs, two shorts
+    for s, n in n_tok.items():
+        cluster.submit(s, rng.integers(0, cfg.vocab_size, n),
+                       decode_tokens=3)
+    assert cluster.engine_of(0) == 0 and cluster.engine_of(3) == 0
+    assert cluster.engine_of(1) == 1 and cluster.engine_of(2) == 1
+    cluster.run_until_idle(max_wall=300.0)
+    assert not cluster.has_work
+    for s in n_tok:
+        assert len(cluster.generated(s)) == 4, s    # first + 3
+    st = cluster.stats()
+    assert st["migrated_sessions"] >= 1
+    assert st["handoff_sessions"] == st["migrated_sessions"]
+    assert st["handoff_host_bytes"] == 0
+    # migrated sessions now live on the decode engine
+    assert cluster.engine_of(0) == 1 and cluster.engine_of(3) == 1
+    assert cluster.report(horizon=1.0).n == 4
+
+
+def test_cluster_later_turns_pin_to_home(smoke):
+    cfg, params = smoke
+    cluster = ServeCluster(
+        [_mk_loop(cfg, params, "short"), _mk_loop(cfg, params, "short")],
+        RoundRobinRouter())
+    rng = np.random.default_rng(10)
+    cluster.submit(0, rng.integers(0, cfg.vocab_size, 6))
+    home = cluster.engine_of(0)
+    cluster.run_until_idle(max_wall=120.0)
+    cluster.submit(0, rng.integers(0, cfg.vocab_size, 5))
+    assert cluster.engine_of(0) == home     # KV lives there
+    cluster.run_until_idle(max_wall=120.0)
+    assert cluster.loops[home].engine.history(0) == 11
+
+
+# ------------------------------------------------------------ sim mirror
+def test_sim_cluster_decode_handoff():
+    """The JAX-free mirror: ClusterSim with a router object and priced
+    decode handoff completes every request and fires handoffs from the
+    prefill role to the short pool."""
+    from repro.sim import ClusterSim, SimConfig
+    from repro.sim.costmodel import H200_32B
+    from repro.sim.workload import WorkloadConfig, lmsys_like_requests
+
+    wl = WorkloadConfig(slo_ttft=0.4)
+    reqs = lmsys_like_requests(120, 30.0, wl, seed=3)
+    horizon = reqs[-1].arrival
+
+    def factory(i):
+        return PoolPolicy(H200_QWEN32B, pool="long" if i == 0 else "short",
+                          threshold=256.0)
+
+    sim = ClusterSim(3, factory, H200_32B,
+                     SimConfig(mode="mix", decode_handoff=True),
+                     router_obj=LengthAwareRouter(threshold=256.0),
+                     roles=["prefill", "decode", "decode"])
+    sim.add_requests(reqs)
+    tracker = sim.run(horizon + 300)
+    assert tracker.report(horizon).n == 120
+    assert sim.handoffs > 0
+    assert sim.handoff_tokens > 0

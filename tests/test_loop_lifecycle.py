@@ -1,0 +1,205 @@
+"""Serve-loop lifecycle regressions (PR 7 bugfix sweep).
+
+Each test pins a bug that shipped in an earlier PR:
+
+* ``submit`` read ``engine.history`` at enqueue time only — stale the
+  moment a second turn of the same session was queued behind the first
+  (wrong dual-queue class, wrong AWD billing, wrong write offset).
+* ``SLOTracker.finished`` grew without bound — a long-lived loop held
+  every Request ever served.
+* ``close_session`` freed the engine slot but left the session's queued
+  turns in the policy and its prompts in ``_tokens`` — a later tick
+  dispatched a prefill into the freed (or reallocated) slot and
+  ``_outstanding`` never drained.
+* ``percentile`` used ``int(q * n)`` — one rank high; p99 of any sample
+  smaller than 100 reported the maximum.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import H200_QWEN32B, Variant, make_policy
+from repro.core.request import Request
+from repro.core.slo import SLOTracker, percentile
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+from repro.serving.loop import ServeLoop
+
+KEY = jax.random.key(11)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _loop(cfg, params, **ecfg_kw):
+    ecfg_kw.setdefault("num_slots", 4)
+    ecfg_kw.setdefault("max_len", 96)
+    ecfg_kw.setdefault("chunk_tokens", 16)
+    engine = Engine(cfg, params, EngineConfig(**ecfg_kw))
+    policy = make_policy(Variant("pla_full"), H200_QWEN32B, threshold=24,
+                         chunk_tokens=16)
+    return ServeLoop(engine, policy, slo_ttft=30.0)
+
+
+# --------------------------------------------------- stale history on submit
+def test_back_to_back_submits_history(smoke):
+    """Turn 2 queued before turn 1 dispatches: its enqueue-time history
+    must count turn 1's queued tokens (the estimate), and its dispatch-time
+    history must equal the true cache length.  The pre-fix code reported
+    history 0 for turn 2 in both places."""
+    cfg, params = smoke
+    loop = _loop(cfg, params)
+    rng = np.random.default_rng(1)
+    t1 = rng.integers(0, cfg.vocab_size, 7)
+    t2 = rng.integers(0, cfg.vocab_size, 5)
+    r1 = loop.submit(0, t1)
+    r2 = loop.submit(0, t2)          # queued behind turn 1
+    assert r1.history_tokens == 0
+    assert r2.history_tokens == 7    # estimate: turn 1's queued tokens
+    loop.run_until_idle(max_wall=120.0)
+    assert r1.history_tokens == 0
+    assert r2.history_tokens == 7    # exact at dispatch: 7 cached tokens
+    assert loop.engine.history(0) == 12
+    # nothing leaks once served
+    assert loop._outstanding == 0
+    assert not loop._tokens
+    assert not loop._session_pending
+
+
+def test_pending_estimate_forgets_preempted_decode_budget(smoke):
+    """A new turn preempts generation — including decode budgets of
+    EARLIER turns still queued.  The pending-token estimate must forget
+    those never-to-be-generated tokens or turn 3's history would be
+    overcounted."""
+    cfg, params = smoke
+    loop = _loop(cfg, params)
+    rng = np.random.default_rng(2)
+    loop.submit(0, rng.integers(0, cfg.vocab_size, 6), decode_tokens=8)
+    r2 = loop.submit(0, rng.integers(0, cfg.vocab_size, 4))
+    # turn 1's 8-token budget was cancelled by turn 2's arrival
+    assert r2.history_tokens == 6
+    loop.run_until_idle(max_wall=120.0)
+    assert r2.history_tokens == 6
+    assert loop.engine.history(0) == 10
+    assert not loop._session_pending
+
+
+# --------------------------------------------------- close purges queued work
+def test_close_session_purges_queued_turns(smoke):
+    """close_session with turns still queued: the policy queue, the
+    prompt store, and the outstanding count all drop — and the other
+    session still completes.  Pre-fix, the purged session's prefill
+    later dispatched into the freed slot."""
+    cfg, params = smoke
+    loop = _loop(cfg, params)
+    rng = np.random.default_rng(3)
+    loop.submit(0, rng.integers(0, cfg.vocab_size, 6), decode_tokens=4)
+    loop.submit(0, rng.integers(0, cfg.vocab_size, 30))   # long, queued
+    loop.submit(1, rng.integers(0, cfg.vocab_size, 5), decode_tokens=2)
+    assert loop._outstanding == 3
+    loop.close_session(0)
+    assert loop._outstanding == 1
+    assert all(p.req.session != 0 for p in loop._tokens.values())
+    assert loop.policy.queue_len() == 1
+    assert 0 not in loop._session_pending
+    loop.run_until_idle(max_wall=120.0)
+    assert loop._outstanding == 0 and not loop.active_decodes
+    assert len(loop.generated[1]) == 3          # first + 2
+    assert loop.tracker.report().n == 1         # only session 1 finished
+    assert 0 not in loop.generated
+
+
+def test_close_session_mid_decode(smoke):
+    """Closing while a session is actively decoding drops its budget and
+    frees the slot for reuse."""
+    cfg, params = smoke
+    loop = _loop(cfg, params)
+    rng = np.random.default_rng(4)
+    loop.submit(0, rng.integers(0, cfg.vocab_size, 6), decode_tokens=50)
+    loop.tick()                                 # prefill dispatched
+    assert 0 in loop.active_decodes
+    loop.close_session(0)
+    assert not loop.has_work
+    assert 0 not in loop.active_decodes and 0 not in loop.generated
+    # the slot is genuinely free: a fresh session can take it
+    loop.submit(0, rng.integers(0, cfg.vocab_size, 5))
+    loop.run_until_idle(max_wall=60.0)
+    assert loop.engine.history(0) == 5
+
+
+# ------------------------------------------------------ bounded SLO tracker
+def _fake_request(i: int, ttft: float, slo: float = 0.4) -> Request:
+    r = Request(new_tokens=8, arrival=float(i),
+                deadline=float(i) + slo, session=i)
+    r.dispatch_time = float(i) + ttft / 2
+    r.finish_time = float(i) + ttft
+    r.used_graph = (i % 3 == 0)
+    return r
+
+
+def test_slotracker_bounded_memory():
+    """10k records through a max_finished=64 tracker hold at most 128
+    Request objects, yet every streaming aggregate is exact."""
+    tr_ = SLOTracker(0.4, max_finished=64)
+    ttfts = [0.05 + 0.001 * (i % 500) for i in range(10_000)]
+    for i, t in enumerate(ttfts):
+        tr_.record(_fake_request(i, t))
+    assert len(tr_.finished) <= 2 * tr_.max_finished
+    rep = tr_.report()
+    assert rep.n == 10_000
+    assert rep.mean_ttft == pytest.approx(sum(ttfts) / len(ttfts))
+    viol = sum(1 for t in ttfts if t > 0.4)
+    assert rep.violation_rate == pytest.approx(viol / 10_000)
+    assert rep.graph_hit_rate == pytest.approx(
+        sum(1 for i in range(10_000) if i % 3 == 0) / 10_000)
+
+
+def test_slotracker_exact_on_short_runs():
+    """Runs shorter than max_finished keep every request: report() is
+    bit-identical to the keep-it-all behaviour, percentiles included."""
+    tr_ = SLOTracker(0.4)
+    ttfts = [0.01 * (i + 1) for i in range(50)]
+    for i, t in enumerate(ttfts):
+        tr_.record(_fake_request(i, t))
+    rep = tr_.report()
+    assert len(tr_.finished) == 50
+    assert rep.p50_ttft == pytest.approx(percentile(ttfts, 0.50))
+    assert rep.p99_ttft == pytest.approx(percentile(ttfts, 0.99))
+    assert rep.mean_ttft == pytest.approx(sum(ttfts) / 50)
+
+
+def test_slotracker_merged_matches_single():
+    """Cluster report = merged per-engine trackers: aggregates must equal
+    one tracker fed the union."""
+    a, b, one = SLOTracker(0.4), SLOTracker(0.4), SLOTracker(0.4)
+    for i in range(40):
+        r = _fake_request(i, 0.1 + 0.01 * i)
+        (a if i % 2 else b).record(r)
+        one.record(r)
+    m = SLOTracker.merged([a, b]).report()
+    s = one.report()
+    assert (m.n, m.violation_rate) == (s.n, s.violation_rate)
+    assert m.mean_ttft == pytest.approx(s.mean_ttft)
+    assert m.mean_queue_wait == pytest.approx(s.mean_queue_wait)
+
+
+# ----------------------------------------------------- nearest-rank percentile
+def test_percentile_nearest_rank():
+    vals = list(range(1, 11))            # 1..10
+    assert percentile(vals, 0.50) == 5   # ceil(5)=5th smallest; old code: 6
+    assert percentile(vals, 0.90) == 9   # old code returned the max (10)
+    assert percentile(vals, 1.00) == 10
+    assert percentile(vals, 0.01) == 1
+    assert percentile([], 0.99) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+    # p99 over 200 samples: rank ceil(198)=198 → value 198, not the max
+    assert percentile(list(range(1, 201)), 0.99) == 198
+
+
+def test_percentile_unsorted_input():
+    assert percentile([5.0, 1.0, 9.0, 3.0, 7.0], 0.5) == 5.0
