@@ -1,0 +1,188 @@
+"""Speculative decoding bench (DESIGN.md §10): multi-token commits per
+dispatch on the packed mixed stream.
+
+Scenario: one chat session decodes a long greedy stream.  The plain
+baseline is the PR 3 arena-resident decode ladder — one dispatch (one
+amortized weight read, one full-history KV stream) per token.  The
+speculative run arms a ScriptedDraft at target acceptance ~0.7 with
+k = 4: each dispatch verifies [pending, d1..d4] as ONE packed verify
+segment and commits the accepted prefix plus a corrective token, so the
+per-token cost of the weight read and the history stream divides by the
+commit count.  Greedy acceptance is exact-match, so the spec stream is
+asserted BIT-IDENTICAL to the baseline (losslessness), with zero
+whole-slot gather/scatter and zero full-vocab logits rows shipped.  A
+third phase samples (temperature/top-k/top-p) through the fused
+on-device sampling kernel and asserts the logits stay on device there
+too.  Writes BENCH_spec.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.engine import Engine, EngineConfig  # noqa: E402
+from repro.serving.draft import ScriptedDraft  # noqa: E402
+from repro.serving.sampling import SamplingParams  # noqa: E402
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_spec.json")
+
+K = 4
+BUDGET = 48          # decoded tokens per run (past the TTFT token)
+ACCEPT = 0.7
+
+
+def _engine(cfg, params, **kw) -> Engine:
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("chunk_tokens", 16)
+    kw.setdefault("keep_last_logits", False)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+def _kv_row_bytes(cfg) -> int:
+    return (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
+            * np.dtype(cfg.np_dtype).itemsize)
+
+
+def _drive_plain(cfg, params, prompt) -> Dict:
+    """PR 3 baseline: the arena-resident decode ladder, one token per
+    dispatch, billed at (history + 1) KV rows each."""
+    eng = _engine(cfg, params)
+    kvb = _kv_row_bytes(cfg)
+    eng.open_session(0)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    stream, cur, hbm = [t0], t0, 0.0
+    wall = time.perf_counter()
+    for _ in range(BUDGET):
+        h = eng.history(0)
+        hbm += (h + 1) * kvb          # stream the prefix, write one row
+        cur = eng.decode_batch([0], [cur], steps=1)[0][0]
+        stream.append(cur)
+    wall = time.perf_counter() - wall
+    st = eng.stats()
+    disp = eng.decode_executor.dispatches
+    return {
+        "stream": stream,
+        "row": {"dispatches": disp,
+                "tokens_per_dispatch": round(BUDGET / max(disp, 1), 2),
+                "hbm_bytes_per_token": round(hbm / BUDGET, 1),
+                "logits_rows_shipped": st["logits_rows_shipped"],
+                "arena_gathers": st["arena_gathers"],
+                "arena_scatters": st["arena_scatters"],
+                "wall_ms": round(1e3 * wall, 1)},
+    }
+
+
+def _drive_spec(cfg, params, prompt, script: List[int],
+                sampling=None, fused=False) -> Dict:
+    """Speculative run: ScriptedDraft proposals at target acceptance
+    ~ACCEPT, verified k+1 tokens per packed dispatch.  HBM model per
+    dispatch: stream the history once, write 1+k rows (rejected tails
+    are truncated bookkeeping, but their rows WERE written)."""
+    eng = _engine(cfg, params, fused_sampling=fused)
+    kvb = _kv_row_bytes(cfg)
+    draft = ScriptedDraft({0: script}, accept=ACCEPT,
+                          vocab=cfg.vocab_size, seed=1)
+    eng.enable_spec(draft, k=K)
+    eng.open_session(0)
+    if sampling is not None:
+        eng.set_sampling(0, sampling)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    stream, cur, hbm = [t0], t0, 0.0
+    wall = time.perf_counter()
+    while len(stream) < 1 + BUDGET:
+        h = eng.history(0)
+        hbm += (h + 1 + K) * kvb
+        got = eng.spec_step([(0, cur)],
+                            max_new={0: 1 + BUDGET - len(stream)})[0]
+        stream.extend(got)
+        cur = got[-1]
+    wall = time.perf_counter() - wall
+    st = eng.stats()
+    return {
+        "stream": stream,
+        "row": {"dispatches": st["spec_dispatches"],
+                "tokens_per_dispatch": st["spec_tokens_per_dispatch"],
+                "acceptance": st["spec_acceptance"],
+                "tokens_drafted": st["tokens_drafted"],
+                "tokens_accepted": st["tokens_accepted"],
+                "hbm_bytes_per_token": round(hbm / BUDGET, 1),
+                "logits_rows_shipped": st["logits_rows_shipped"],
+                "fused_sample_steps": st["fused_sample_steps"],
+                "arena_gathers": st["arena_gathers"],
+                "arena_scatters": st["arena_scatters"],
+                "wall_ms": round(1e3 * wall, 1)},
+    }
+
+
+def spec_scenario(write: bool = True) -> List[Dict]:
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, 11)
+
+    plain = _drive_plain(cfg, params, prompt)
+    spec = _drive_spec(cfg, params, prompt, plain["stream"])
+    new, old = spec["row"], plain["row"]
+
+    # ---- §10 acceptance gates -----------------------------------------
+    assert spec["stream"] == plain["stream"], \
+        "speculative greedy stream diverged from the plain decode"
+    assert new["tokens_per_dispatch"] > 1.8, new["tokens_per_dispatch"]
+    assert new["hbm_bytes_per_token"] < old["hbm_bytes_per_token"], \
+        (new["hbm_bytes_per_token"], old["hbm_bytes_per_token"])
+    assert new["arena_gathers"] == 0 and new["arena_scatters"] == 0
+    assert new["logits_rows_shipped"] == 0, new["logits_rows_shipped"]
+    assert new["dispatches"] < old["dispatches"]
+
+    # ---- fused on-device sampling under speculation -------------------
+    sp = SamplingParams(temperature=0.8, top_k=32, top_p=0.95, seed=17)
+    fused = _drive_spec(cfg, params, prompt, plain["stream"],
+                        sampling=sp, fused=True)
+    assert fused["row"]["logits_rows_shipped"] == 0, \
+        fused["row"]["logits_rows_shipped"]
+    assert fused["row"]["fused_sample_steps"] > 0
+    assert len(fused["stream"]) == 1 + BUDGET
+
+    rows = [
+        {"bench": "spec_decode", "tag": "spec", "mean_ms": 0.0,
+         "k": K, "target_accept": ACCEPT, **new},
+        {"bench": "spec_decode", "tag": "plain", "mean_ms": 0.0, **old},
+        {"bench": "spec_decode", "tag": "fused_sampled", "mean_ms": 0.0,
+         **fused["row"]},
+        {"bench": "spec_decode", "tag": "gain", "mean_ms": 0.0,
+         "tokens_per_dispatch": new["tokens_per_dispatch"],
+         "dispatch_reduction": old["dispatches"] - new["dispatches"],
+         "hbm_reduction_x": round(old["hbm_bytes_per_token"]
+                                  / max(new["hbm_bytes_per_token"], 1e-9),
+                                  2),
+         "lossless": True},
+    ]
+    if write:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    for r in rows:
+        print(r)
+    print("BENCH_spec OK: "
+          f"{new['tokens_per_dispatch']:.2f} tokens/dispatch at "
+          f"acceptance {new['acceptance']:.2f}, HBM/token "
+          f"{old['hbm_bytes_per_token']:.0f} -> "
+          f"{new['hbm_bytes_per_token']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    spec_scenario()

@@ -78,13 +78,19 @@ class AWDScheduler:
         self.dispatches = 0
         self.graph_hits = 0
         self.decode_backlog = 0   # active decode sessions awaiting fusion
+        self.decode_tokens_per = 1   # stream tokens one fused session costs
 
-    def note_decode_backlog(self, n: int) -> None:
+    def note_decode_backlog(self, n: int, tokens_per_decode: int = 1) -> None:
         """Continuous batching: the loop reports how many in-flight
         sessions are waiting on their next decode token.  The backlog
         shrinks the waiting window (their TPOT stalls while we wait) and
-        reserves stream rows in packed batch formation."""
+        reserves stream rows in packed batch formation.
+        ``tokens_per_decode`` is the stream cost of ONE fused session —
+        1 plain, 1 + k when the engine speculates (a verify segment
+        carries k draft tokens besides the pending one, DESIGN.md §10) —
+        so the token reserve scales while the row reserve does not."""
         self.decode_backlog = max(0, int(n))
+        self.decode_tokens_per = max(1, int(tokens_per_decode))
 
     # ------------------------------------------------------------ signals
     def on_arrival(self, now: float) -> None:
@@ -142,8 +148,8 @@ class AWDScheduler:
         padding exists), order is plain FCFS (packing is composition-
         independent), and the fill target is the token-bucket ladder.
         ``decode_tokens`` active decode sessions each reserve one stream
-        row AND one cache row for continuous-batching fusion (clamped so
-        at least one prefill always fits)."""
+        row AND ``decode_tokens_per`` stream tokens for continuous-
+        batching fusion (clamped so at least one prefill always fits)."""
         if not queue:
             return []
         cap = depth_cap if depth_cap is not None else self.d_target
@@ -151,7 +157,8 @@ class AWDScheduler:
         if self.ladder is not None:
             reserve = min(decode_tokens, self.ladder.max_seqs - 1)
             cap = min(cap, self.ladder.max_seqs - reserve)
-            budget = min(budget, self.ladder.max_tokens - reserve)
+            budget = min(budget, max(1, self.ladder.max_tokens
+                                     - reserve * self.decode_tokens_per))
             ordered = sorted(queue, key=lambda r: r.arrival)
         else:
             ordered = sorted(
@@ -275,18 +282,20 @@ class AWDScheduler:
         if self.ladder is not None:
             # packed path: one flat stream in the total-token bucket —
             # the profitability guard only sees the bucket tail.  Fused
-            # decode rows (continuous batching) count as real tokens:
+            # decode rows (continuous batching) count as real tokens —
+            # ``decode_tokens_per`` each when the engine speculates —
             # the bucket must cover them and they discount the tail.
             # When the full reserve busts the ladder, fuse FEWER decodes
             # rather than losing the packed path for the whole batch.
+            per = self.decode_tokens_per
             fused = max(0, min(decode_tokens,
                                self.ladder.max_seqs - len(requests)))
-            tb = self.ladder.bucket_for(sum(lengths) + fused)
+            tb = self.ladder.bucket_for(sum(lengths) + fused * per)
             while tb is None and fused > 0:
                 fused -= 1
-                tb = self.ladder.bucket_for(sum(lengths) + fused)
+                tb = self.ladder.bucket_for(sum(lengths) + fused * per)
             if tb is not None and len(requests) <= self.ladder.max_seqs \
-                    and tb <= ratio * (real + fused):
+                    and tb <= ratio * (real + fused * per):
                 batch.token_bucket = tb
                 batch.uses_graph = True
                 batch.decode_tokens = fused

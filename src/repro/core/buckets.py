@@ -181,17 +181,20 @@ class DecodeBucketLadder:
 
 def fit_decodes(prefill_tokens: int, n_prefill: int, n_decodes: int,
                 ladder: TokenBucketLadder,
-                token_bucket: Optional[int] = None
+                token_bucket: Optional[int] = None,
+                tokens_per_decode: int = 1
                 ) -> Tuple[int, Optional[int]]:
-    """How many decode tokens can fuse into a packed step already
+    """How many decode sessions can fuse into a packed step already
     carrying ``prefill_tokens`` over ``n_prefill`` segments
     (continuous batching, DESIGN.md §4).
 
-    Each decode costs one stream row AND one cache row, so the fit is
-    min over the token room and the sequence-row room.  Returns
-    (n_fit, bucket) — bucket is the smallest ladder rung covering the
-    fused total (or ``token_bucket`` when the caller pinned one);
-    (0, None) when even the prefill part is off-ladder.
+    Each fused session costs ``tokens_per_decode`` stream tokens — 1
+    for a plain decode row, 1 + k when a speculative verify segment
+    carries k draft tokens (DESIGN.md §10) — but always ONE sequence
+    row, so the fit is min over the token room and the row room.
+    Returns (n_fit, bucket) — bucket is the smallest ladder rung
+    covering the fused total (or ``token_bucket`` when the caller
+    pinned one); (0, None) when even the prefill part is off-ladder.
 
     Pure ladder arithmetic (no serving deps): the real engine's mixed
     step and the discrete-event simulator's pricing share this exact
@@ -200,7 +203,7 @@ def fit_decodes(prefill_tokens: int, n_prefill: int, n_decodes: int,
     row_room = max(0, ladder.max_seqs - n_prefill)
     want = min(n_decodes, row_room)
     while want >= 0:
-        total = prefill_tokens + want
+        total = prefill_tokens + want * tokens_per_decode
         if total == 0:
             return 0, None
         bucket = token_bucket if token_bucket is not None \

@@ -71,10 +71,12 @@ class BasePolicy:
     def on_complete(self, work, now: float) -> None:
         pass
 
-    def note_decode_backlog(self, n: int) -> None:
+    def note_decode_backlog(self, n: int, tokens_per_decode: int = 1) -> None:
         """Continuous batching: the serving loop reports how many
-        in-flight sessions await their next decode token.  Policies that
-        form packed batches reserve fusion room; others ignore it."""
+        in-flight sessions await their next decode token (each costing
+        ``tokens_per_decode`` stream tokens — > 1 under speculation).
+        Policies that form packed batches reserve fusion room; others
+        ignore it."""
         pass
 
     def backlog_tokens(self) -> int:
@@ -189,9 +191,9 @@ class TemporalDisaggPolicy(BasePolicy):
         if cls == "short" and self.awd is not None:
             self.awd.on_arrival(now)
 
-    def note_decode_backlog(self, n: int) -> None:
+    def note_decode_backlog(self, n: int, tokens_per_decode: int = 1) -> None:
         if self.awd is not None:
-            self.awd.note_decode_backlog(n)
+            self.awd.note_decode_backlog(n, tokens_per_decode)
 
     # ------------------------------------------------------------- short
     def _short_work(self, now: float):

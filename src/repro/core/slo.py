@@ -33,6 +33,12 @@ class SLOReport:
     violation_rate: float
     mean_queue_wait: float
     graph_hit_rate: float = 0.0
+    # speculative decoding (DESIGN.md §10) — zeros when no draft is armed
+    tokens_drafted: int = 0
+    tokens_accepted: int = 0
+    spec_dispatches: int = 0
+    spec_acceptance: float = 0.0        # accepted / drafted
+    spec_tokens_per_dispatch: float = 0.0
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -65,6 +71,22 @@ class SLOTracker:
         self._denom = 0
         self._graphs = 0
         self._max_finish = 0.0
+        # speculative decoding totals, synced from Engine.stats() by the
+        # serve loop (absolute values, not deltas — idempotent)
+        self.tokens_drafted = 0
+        self.tokens_accepted = 0
+        self.spec_dispatches = 0
+        self.spec_committed = 0
+
+    def note_spec(self, drafted: int, accepted: int, dispatches: int,
+                  committed: int = 0) -> None:
+        """Sync the engine's speculative counters into the tracker.
+        Absolute totals (one tracker per engine), so calling after every
+        tick is safe; :meth:`merged` sums them across engines."""
+        self.tokens_drafted = int(drafted)
+        self.tokens_accepted = int(accepted)
+        self.spec_dispatches = int(dispatches)
+        self.spec_committed = int(committed)
 
     def record(self, r: Request) -> None:
         self.n_recorded += 1
@@ -105,6 +127,10 @@ class SLOTracker:
             out._denom += t._denom
             out._graphs += t._graphs
             out._max_finish = max(out._max_finish, t._max_finish)
+            out.tokens_drafted += t.tokens_drafted
+            out.tokens_accepted += t.tokens_accepted
+            out.spec_dispatches += t.spec_dispatches
+            out.spec_committed += t.spec_committed
             out.finished.extend(t.finished)
         if len(out.finished) > 2 * out.max_finished:
             out.finished.sort(key=lambda r: r.finish_time or 0.0)
@@ -127,4 +153,11 @@ class SLOTracker:
                              if self._wait_n else 0.0),
             graph_hit_rate=(self._graphs / self.n_recorded
                             if self.n_recorded else 0.0),
+            tokens_drafted=self.tokens_drafted,
+            tokens_accepted=self.tokens_accepted,
+            spec_dispatches=self.spec_dispatches,
+            spec_acceptance=(self.tokens_accepted
+                             / max(1, self.tokens_drafted)),
+            spec_tokens_per_dispatch=(self.spec_committed
+                                      / max(1, self.spec_dispatches)),
         )

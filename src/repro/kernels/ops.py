@@ -25,6 +25,8 @@ from repro.kernels.ragged_prefill import \
     ragged_prefill_arena as _ragged_arena_pallas
 from repro.kernels.ragged_prefill import \
     ragged_prefill_paged as _ragged_paged_pallas
+from repro.kernels.sampling import MAX_BIAS  # noqa: F401  (re-export)
+from repro.kernels.sampling import fused_sample as _fused_sample_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _FORCE: Optional[str] = None  # None=auto, "pallas", "ref"
@@ -140,6 +142,20 @@ def decode_paged(q, k, v, page_table, lengths):
         return _decode_paged_pallas(q, k, v, page_table, lengths,
                                     interpret=not _on_tpu())
     return ref_mod.ref_decode_attn_paged(q, k, v, page_table, lengths)
+
+
+def fused_sample(logits, temp, top_k, top_p, bias_ids, bias_vals, u, draft):
+    """Fused on-device sampling: bias → temperature → exact top-k →
+    tie-inclusive top-p → inverse-CDF draw, plus the speculative
+    accept/resample outputs.  logits: (R, V); returns (token (R,) int32,
+    p_draft (R,) float32, alt (R,) int32) — full-vocab rows never reach
+    host.  See kernels.sampling."""
+    if _use_pallas():
+        return _fused_sample_pallas(logits, temp, top_k, top_p, bias_ids,
+                                    bias_vals, u, draft,
+                                    interpret=not _on_tpu())
+    return ref_mod.ref_fused_sample(logits, temp, top_k, top_p, bias_ids,
+                                    bias_vals, u, draft)
 
 
 def ssd(x, dt, a, bmat, cmat, init_state, *, chunk=128):

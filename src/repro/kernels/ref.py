@@ -271,6 +271,20 @@ def ref_decode_attn_arena(q: jax.Array, k: jax.Array, v: jax.Array,
     return ref_decode_attn(q, k[slot_map], v[slot_map], lengths)
 
 
+def ref_fused_sample(logits, temp, top_k, top_p, bias_ids, bias_vals,
+                     u, draft):
+    """Oracle for kernels.sampling.fused_sample (fused on-device
+    sampling).  logits: (R, V); temp/top_p/u: (R,) float32;
+    top_k/draft: (R,) int32 (top_k == 0 → off, top_p >= 1 → off);
+    bias_ids/bias_vals: (R, MAX_BIAS).  Returns (token (R,) int32,
+    p_draft (R,) float32, alt (R,) int32).  Delegates to the kernel
+    module's shared-core vmap so both paths run ONE copy of the math
+    (imported lazily — ref must stay importable without Pallas)."""
+    from repro.kernels.sampling import fused_sample_reference
+    return fused_sample_reference(logits, temp, top_k, top_p, bias_ids,
+                                  bias_vals, u, draft)
+
+
 def ref_ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
                  cmat: jax.Array,
                  init_state: Optional[jax.Array] = None):

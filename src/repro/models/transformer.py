@@ -660,6 +660,66 @@ def forward_packed_paged(params: Dict, cfg: ModelConfig, *,
     return _lm_head_logits(params, cfg, x_last), new_arena
 
 
+def forward_packed_verify_arena(params: Dict, cfg: ModelConfig, *,
+                                tokens: jax.Array,
+                                positions: jax.Array,
+                                seg_slots: jax.Array,
+                                slot_map: jax.Array,
+                                cu_seqlens: jax.Array,
+                                q_offsets: jax.Array,
+                                kv_lengths: jax.Array,
+                                arena: List[Any],
+                                gather_idx: jax.Array,
+                                ) -> Tuple[jax.Array, List[Any]]:
+    """Speculative verification step (DESIGN.md §10): the UNCHANGED
+    :func:`forward_packed_arena` dispatch, gathering L logits per
+    segment instead of one.
+
+    Verification is already the packed mixed step's shape — each decode
+    session becomes a length-L re-prefill segment ``[t0, d_1..d_L-1]``
+    scored against its arena history — so no new transformer or kernel
+    code runs here: ``last_idx`` accepts any flat row-index vector, and
+    ``gather_idx (B, L)`` simply names every row of every segment (pad
+    segments point at row 0; their logits are discarded).  Row j of a
+    segment scores position ``history + j + 1``, i.e. the draft d_{j+1}
+    — acceptance walks that (B, L, V) block on host or in the fused
+    sampling kernel.  Returns (logits (B, L, V), new_arena).
+    """
+    b, l = gather_idx.shape
+    logits, new_arena = forward_packed_arena(
+        params, cfg, tokens=tokens, positions=positions,
+        seg_slots=seg_slots, slot_map=slot_map, cu_seqlens=cu_seqlens,
+        q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+        last_idx=gather_idx.reshape(-1))
+    return logits.reshape(b, l, -1), new_arena
+
+
+def forward_packed_verify_paged(params: Dict, cfg: ModelConfig, *,
+                                tokens: jax.Array,
+                                positions: jax.Array,
+                                token_pages: jax.Array,
+                                token_offs: jax.Array,
+                                page_table: jax.Array,
+                                cu_seqlens: jax.Array,
+                                q_offsets: jax.Array,
+                                kv_lengths: jax.Array,
+                                arena: List[Any],
+                                gather_idx: jax.Array,
+                                ) -> Tuple[jax.Array, List[Any]]:
+    """Paged speculative verification: :func:`forward_packed_paged`
+    gathering L logits per segment via ``gather_idx (B, L)`` (see
+    :func:`forward_packed_verify_arena`).  Pure-attention stacks only.
+    Returns (logits (B, L, V), new_pool)."""
+    b, l = gather_idx.shape
+    logits, new_arena = forward_packed_paged(
+        params, cfg, tokens=tokens, positions=positions,
+        token_pages=token_pages, token_offs=token_offs,
+        page_table=page_table, cu_seqlens=cu_seqlens,
+        q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+        last_idx=gather_idx.reshape(-1))
+    return logits.reshape(b, l, -1), new_arena
+
+
 def forward_decode_paged(params: Dict, cfg: ModelConfig, *,
                          tokens: jax.Array,
                          positions: jax.Array,

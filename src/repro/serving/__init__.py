@@ -6,6 +6,8 @@ from repro.serving.executor import (BucketExecutor,  # noqa: F401
                                     DecodeBucketExecutor,
                                     PackedBucketExecutor)
 from repro.serving.sampling import SamplingParams, GREEDY  # noqa: F401
+from repro.serving.draft import (DraftProposer, NGramDraft,  # noqa: F401
+                                 ScriptedDraft, SmallModelDraft)
 from repro.serving.engine import (Engine, EngineConfig,  # noqa: F401
                                   MixedStepResult, SessionExport)
 from repro.serving.loop import PendingRequest, ServeLoop  # noqa: F401

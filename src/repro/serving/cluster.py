@@ -256,5 +256,10 @@ class ServeCluster:
             "handoff_tokens": sum(s["handoff_tokens"] for s in per_engine),
             "handoff_host_bytes": sum(s["handoff_host_bytes"]
                                       for s in per_engine),
+            "tokens_drafted": sum(s["tokens_drafted"] for s in per_engine),
+            "tokens_accepted": sum(s["tokens_accepted"]
+                                   for s in per_engine),
+            "spec_dispatches": sum(s["spec_dispatches"]
+                                   for s in per_engine),
             "per_engine": per_engine,
         }

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import boundary as boundary_mod
+from repro.kernels import ops as kernel_ops
 from repro.core.buckets import (DEFAULT_DECODE_BUCKETS, DEFAULT_TOKEN_BUCKETS,
                                 BucketGrid)
 from repro.models import transformer as tr
@@ -49,6 +50,10 @@ class MixedStepResult:
     bucket: Optional[int] = None  # token bucket used (fused path)
     n_prefill: int = 0            # prefill + chunk segments
     n_decode: int = 0             # fused decode segments
+    # speculative ticks (DESIGN.md §10) commit SEVERAL tokens per decode
+    # session in one dispatch; ``committed[s]`` is the full emitted list
+    # (``tokens[s]`` stays the LAST of them for non-spec callers)
+    committed: Optional[Dict[int, List[int]]] = None
 
 
 @dataclasses.dataclass
@@ -105,6 +110,15 @@ class EngineConfig:
     page_size: int = 16
     num_pages: Optional[int] = None  # None → num_slots·max_len/page_size
     prefix_cache: bool = True        # radix prefix index on/off
+    # ---- fused on-device sampling (DESIGN.md §10) ---------------------
+    # route non-greedy rows through the fused sampling kernel (bias +
+    # temperature + top-k/top-p + the inverse-CDF draw on device, host
+    # uniforms shipped in): only the (R,) sampled ids cross to host.
+    # Takes effect with keep_last_logits=False (a kept host logits copy
+    # forces the transfer anyway); a session with more than
+    # kernels.sampling.MAX_BIAS bias entries drops its step back to the
+    # host sampler
+    fused_sampling: bool = False
 
 
 class Engine:
@@ -205,6 +219,20 @@ class Engine:
         self.handoff_sessions = 0
         self.handoff_tokens = 0
         self.handoff_host_bytes = 0
+        # §10 speculative decoding: a draft proposer attached via
+        # enable_spec turns decode segments into length-(k+1) "verify"
+        # segments on the SAME packed stream; counters prove the
+        # multi-token commits (benches assert tokens/dispatch)
+        self.draft: Optional[Any] = None     # serving.draft.DraftProposer
+        self.spec_k = 0
+        self.tokens_drafted = 0
+        self.tokens_accepted = 0
+        self.spec_dispatches = 0
+        self.spec_committed = 0
+        self._spec_by_session: Dict[int, List[int]] = {}  # s → [drafted, accepted]
+        # non-greedy steps served by the fused sampling kernel (no
+        # full-vocab logits transfer)
+        self.fused_sample_steps = 0
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -218,6 +246,8 @@ class Engine:
         self.last_logits.pop(session, None)
         self.sampling.pop(session, None)
         self._rngs.pop(session, None)
+        if self.draft is not None:
+            self.draft.forget(session)
 
     def history(self, session: int) -> int:
         return self.arena.length(session)
@@ -315,6 +345,100 @@ class Engine:
         self.handoff_sessions += 1
         self.handoff_tokens += payload.length
 
+    # ------------------------------------------------ speculative decode
+    @property
+    def can_spec(self) -> bool:
+        """Speculative verify/rollback is defined exactly where
+        ``arena.truncate`` is: pure-attention, non-rolling layouts
+        (mirrors :attr:`can_handoff`).  A rolling SWA slot writes
+        modularly — a rejected tail has already overwritten window
+        history — and SSM state folds every token irreversibly into the
+        recurrence; both need layout-aware rollback (ROADMAP)."""
+        return self.capability.pure_attn and not self._rolling
+
+    def enable_spec(self, draft: Any, k: int = 4) -> None:
+        """Attach a draft proposer (serving.draft): decode sessions now
+        advance through length-(k+1) ``verify`` segments on the packed
+        mixed stream (DESIGN.md §10) — up to k accepted drafts plus one
+        corrective/bonus token per dispatch, rejected tails rolled back
+        via ``arena.truncate``.  Greedy sessions stay bit-identical to
+        plain decode; sampled sessions commit by rejection sampling,
+        which preserves the target distribution."""
+        assert self.can_spec, \
+            "speculative decoding needs a pure-attention, non-rolling arena"
+        assert self.packed_executor is not None and self.ecfg.arena_prefill, \
+            "speculative decoding rides the packed arena stream"
+        assert k >= 1, k
+        self.draft = draft
+        self.spec_k = int(k)
+
+    def disable_spec(self) -> None:
+        self.draft = None
+        self.spec_k = 0
+
+    def _spec_ready(self) -> bool:
+        return (self.draft is not None and self.spec_k > 0
+                and self.packed_executor is not None
+                and self.ecfg.arena_prefill and self.can_spec)
+
+    @property
+    def spec_enabled(self) -> bool:
+        """True when decode ticks will actually run speculative verify
+        segments — the serve loop reads this to size its stream-token
+        reservations (1 + k per fused session instead of 1)."""
+        return self._spec_ready()
+
+    def _plan_spec(self, decodes: Sequence[Tuple[int, int]],
+                   max_new: Optional[Dict[int, int]]
+                   ) -> Dict[int, List[int]]:
+        """Ask the draft for up to k tokens per eligible decode session.
+        A session sits the tick out (plain 1-token decode segment) when
+        its k+1 verify rows would overflow the arena, its remaining
+        token budget cannot cover even one accepted draft, or the
+        proposer has nothing to say."""
+        spec: Dict[int, List[int]] = {}
+        lim = self.ecfg.max_len - 2
+        for s, tok in decodes:
+            h = self.arena.length(s)
+            budget = self.spec_k + 1
+            if max_new is not None:
+                budget = min(budget, int(max_new.get(s, budget)))
+            if h <= 0 or budget < 2 or h + self.spec_k + 1 > lim:
+                continue
+            d = self.draft.propose(s, int(tok), self.spec_k)
+            d = [int(x) for x in list(d)[:min(self.spec_k, budget - 1)]]
+            if d:
+                spec[s] = d
+        return spec
+
+    def spec_step(self, decodes: Sequence[Tuple[int, int]],
+                  max_new: Optional[Dict[int, int]] = None
+                  ) -> Dict[int, List[int]]:
+        """One speculative decode tick: every eligible session's
+        ``[pending, draft_1..draft_k]`` verify segment fused into ONE
+        packed dispatch, 1..k+1 tokens committed each.  ``max_new``
+        caps a session's emitted tokens (its last max_new gap).
+        Returns {session: emitted tokens}."""
+        res = self.step_mixed([], decodes, max_new=max_new)
+        if res.committed is not None:
+            return res.committed
+        return {s: [res.tokens[s]] for s, _ in decodes}
+
+    def _spec_draws(self, session: int, m: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(u_acc, u_samp) uniforms for one verify walk, drawn as
+        interleaved pairs j = 0..m from the session's replayable rng —
+        row j's accept test is ``u_acc[j] < p_j(draft)``, its reject
+        resample (or the row-m bonus draw) consumes ``u_samp[j]``.  The
+        2(m+1) draws happen up front whatever prefix is accepted, so
+        the per-step rng consumption is deterministic.  Greedy sessions
+        draw nothing (accept = exact id match)."""
+        rng = self._rngs.get(session)
+        if rng is None:
+            return np.zeros(m + 1), np.zeros(m + 1)
+        u = np.asarray([rng.random() for _ in range(2 * (m + 1))])
+        return u[0::2], u[1::2]
+
     # ----------------------------------------------------------- sampling
     def set_sampling(self, session: int,
                      params: Optional[SamplingParams]) -> None:
@@ -357,9 +481,54 @@ class Engine:
         if all_greedy and not self.ecfg.keep_last_logits:
             self.fused_greedy_steps += 1
             return np.asarray(ids_dev)[:n].astype(np.int64), None
+        if (self.ecfg.fused_sampling and not self.ecfg.keep_last_logits
+                and self._fused_bias_ok(sessions)):
+            return self._fused_sample_rows(sessions, logits_dev), None
         logits_np = np.asarray(logits_dev)
         self.logits_rows_shipped += int(logits_np.shape[0])
         return self._sample_rows(sessions, logits_np[:n]), logits_np
+
+    def _fused_bias_ok(self, sessions: Sequence[int]) -> bool:
+        """The fused sampling kernel carries MAX_BIAS bias slots per
+        row; a step with a heavier-biased session keeps the host path."""
+        return all(len(self.sampling[s].logit_bias or ())
+                   <= kernel_ops.MAX_BIAS
+                   for s in sessions if s in self.sampling)
+
+    def _fused_sample_rows(self, sessions: Sequence[int],
+                           logits_dev) -> np.ndarray:
+        """Sample one token per live row through the fused on-device
+        kernel (DESIGN.md §10): bias + temperature + top-k/top-p + the
+        inverse-CDF draw all happen on device; host-drawn uniforms go
+        in, (R,) token ids come out, and the full-vocab logits never
+        cross.  Consumes ONE uniform per non-greedy row — the same rng
+        protocol as the host sampler, so a session can hop between
+        paths mid-stream."""
+        r = int(logits_dev.shape[0])
+        n = len(sessions)
+        temp = np.zeros(r, np.float32)
+        topk = np.zeros(r, np.int32)
+        topp = np.ones(r, np.float32)
+        u = np.zeros(r, np.float32)
+        draft = np.full(r, -1, np.int32)
+        bias_ids = np.full((r, kernel_ops.MAX_BIAS), -1, np.int32)
+        bias_vals = np.zeros((r, kernel_ops.MAX_BIAS), np.float32)
+        for i, s in enumerate(sessions):
+            sp = self.sampling.get(s)
+            if sp is None:
+                continue
+            temp[i] = max(float(sp.temperature), 0.0)
+            topk[i] = int(sp.top_k or 0)
+            topp[i] = float(sp.top_p) if sp.top_p is not None else 1.0
+            for j, (t, v) in enumerate(sp.logit_bias or ()):
+                bias_ids[i, j] = int(t)
+                bias_vals[i, j] = float(v)
+            if not sp.is_greedy:
+                u[i] = float(self._rngs[s].random())
+        tok, _, _ = kernel_ops.fused_sample(logits_dev, temp, topk, topp,
+                                            bias_ids, bias_vals, u, draft)
+        self.fused_sample_steps += 1
+        return np.asarray(tok)[:n].astype(np.int64)
 
     def _note_dense(self, kind: str, cause: str) -> None:
         key = (kind, cause)
@@ -477,7 +646,9 @@ class Engine:
     # ------------------------------------------------- continuous batching
     def step_mixed(self, prefills: Sequence[Tuple[int, np.ndarray]],
                    decodes: Sequence[Tuple[int, int]],
-                   token_bucket: Optional[int] = None) -> MixedStepResult:
+                   token_bucket: Optional[int] = None,
+                   max_new: Optional[Dict[int, int]] = None
+                   ) -> MixedStepResult:
         """One continuous-batching tick: short prefills, long-prefill
         chunks, and single-token decode segments fused into ONE packed
         flat stream — one dispatch instead of a prefill step plus a
@@ -514,7 +685,15 @@ class Engine:
                 rewritten.append((s, toks))
             prefills = rewritten
         lens = [len(t) for _, t in prefills]
-        total = sum(lens) + n_d
+        # §10 speculative planning: with a draft attached, each eligible
+        # decode session's segment grows from 1 token to 1 + k (pending
+        # + drafts) — the ladder prices the true verify stream
+        spec: Dict[int, List[int]] = {}
+        if decodes and self._spec_ready():
+            spec = self._plan_spec(decodes, max_new)
+        spec_len = 1 + self.spec_k
+        total = sum(lens) + sum(spec_len if s in spec else 1
+                                for s, _ in decodes)
         px = self.packed_executor
         bucket = None
         # px.max_seqs already accounts for the scratch pad row that
@@ -530,6 +709,15 @@ class Engine:
             bucket = token_bucket or px.bucket_for(total)
             if bucket is not None and bucket < total:
                 bucket = None
+        if bucket is None and spec:
+            # speculative lengths pushed the tick off the ladder — this
+            # dispatch drops back to plain 1-token decode segments
+            spec = {}
+            total = sum(lens) + n_d
+            if fits:
+                bucket = token_bucket or px.bucket_for(total)
+                if bucket is not None and bucket < total:
+                    bucket = None
         if bucket is None:
             if not self._dense_ok:
                 # rolling windowed arenas have no dense escape hatch:
@@ -562,9 +750,24 @@ class Engine:
             else:
                 assert self.arena.slot_of(s) is not None, \
                     f"decode session {s} has no cache slot"
-            segments.append(packing.SegmentSpec(
-                s, np.asarray([tok], np.int32), self.arena.length(s),
-                kind="decode"))
+            if s in spec:
+                # uniform verify length 1 + k (short proposals pad with
+                # pad_token rows — written KV past the commit is rolled
+                # back anyway) so every spec dispatch shares one
+                # (bucket, L) compiled shape
+                d = spec[s]
+                toks = np.asarray(
+                    [tok] + d + [self.ecfg.pad_token]
+                    * (self.spec_k - len(d)), np.int32)
+                segments.append(packing.SegmentSpec(
+                    s, toks, self.arena.length(s), kind="verify"))
+            else:
+                segments.append(packing.SegmentSpec(
+                    s, np.asarray([tok], np.int32), self.arena.length(s),
+                    kind="decode"))
+        if spec:
+            return self._run_spec(segments, bucket,
+                                  {s: len(d) for s, d in spec.items()})
         return self._run_packed(segments, bucket)
 
     def _step_split(self, prefills: Sequence[Tuple[int, np.ndarray]],
@@ -665,6 +868,16 @@ class Engine:
         out: Dict[int, int] = {}
         for i, seg in enumerate(segments):
             self.arena.set_length(seg.session, seg.history + seg.length)
+            if self.draft is not None:
+                if seg.kind == "decode":
+                    # keep the draft's view of the cached stream in sync
+                    # on non-speculative ticks too
+                    self.draft.observe(seg.session, [int(seg.tokens[0])])
+                else:
+                    # prompt/chunk tokens seed the draft's history
+                    self.draft.observe(seg.session,
+                                       [int(t) for t in seg.tokens],
+                                       prompt=True)
             out[seg.session] = int(toks[i])
             if last_np is not None:
                 self.last_logits[seg.session] = last_np[i]
@@ -732,6 +945,13 @@ class Engine:
         out: Dict[int, int] = {}
         for i, seg in enumerate(segments):
             ar.commit(seg.session, seg.tokens)
+            if self.draft is not None:
+                if seg.kind == "decode":
+                    self.draft.observe(seg.session, [int(seg.tokens[0])])
+                else:
+                    self.draft.observe(seg.session,
+                                       [int(t) for t in seg.tokens],
+                                       prompt=True)
             out[seg.session] = int(toks[i])
             if last_np is not None:
                 self.last_logits[seg.session] = last_np[i]
@@ -745,6 +965,286 @@ class Engine:
         n_d = stream.decode_tokens
         return MixedStepResult(tokens=out, fused=True, bucket=bucket,
                                n_prefill=n - n_d, n_decode=n_d)
+
+    # ------------------------------------------- speculative verify step
+    def _run_spec(self, segments: List[packing.SegmentSpec], bucket: int,
+                  n_drafts: Dict[int, int]) -> MixedStepResult:
+        """Dispatch a mixed stream carrying ``verify`` segments
+        (DESIGN.md §10).
+
+        The SAME packed arena step runs — a verify segment is
+        mechanically a length-(k+1) re-prefill — but every verify row's
+        output is gathered back ((B, L) on-device argmax ids for fused
+        greedy steps, (R,) fused-kernel samples, or (B, L, V) host rows)
+        so acceptance can walk each session's drafts: row j scores the
+        token AFTER inputs [pending, d_1..d_j], so accepted drafts and
+        the corrective/bonus token commit together, 1..k+1 per session
+        per dispatch.  Accepted prefixes stay in place; rejected tails
+        roll back via ``arena.truncate`` (slot: length bookkeeping;
+        paged: page release + radix de-index)."""
+        px = self.packed_executor
+        n = len(segments)
+        L = 1 + self.spec_k
+        b_max = px.stream_rows
+        stream = packing.assemble_mixed_stream(
+            segments, bucket, b_max, park_position=self.arena.max_len - 1,
+            pad_token=self.ecfg.pad_token)
+        sessions = [seg.session for seg in segments]
+        # gather row i: a verify segment reads ALL its L rows back;
+        # other kinds repeat their last row (their token is column 0)
+        gather = np.zeros((b_max, L), np.int32)
+        cu = stream.cu_seqlens
+        for i, seg in enumerate(segments):
+            if seg.kind == "verify":
+                gather[i] = cu[i] + np.arange(L, dtype=np.int32)
+            else:
+                gather[i] = stream.last_idx[i]
+
+        if self._paged:
+            ar = self.arena
+            ps = ar.page_size
+            page_table = np.full((b_max, ar.max_pages_per_seq), ar.scratch,
+                                 np.int32)
+            token_pages = np.full(bucket, ar.scratch, np.int32)
+            token_offs = np.full(bucket, ps - 1, np.int32)
+            for i, seg in enumerate(segments):
+                pages = ar.prepare_extend(seg.session, seg.length)
+                page_table[i, :len(pages)] = pages
+                pos = stream.positions[cu[i]:cu[i + 1]]
+                pt = np.asarray(pages, np.int32)
+                token_pages[cu[i]:cu[i + 1]] = pt[pos // ps]
+                token_offs[cu[i]:cu[i + 1]] = pos % ps
+            t0 = time.perf_counter()
+            logits, ids, new_arena = px.verify_step_paged(
+                self.params, jnp.asarray(stream.tokens),
+                jnp.asarray(stream.positions), jnp.asarray(token_pages),
+                jnp.asarray(token_offs), jnp.asarray(page_table),
+                jnp.asarray(stream.cu_seqlens),
+                jnp.asarray(stream.q_offsets),
+                jnp.asarray(stream.kv_lengths), ar.arena,
+                jnp.asarray(gather))
+        else:
+            slots = [self.arena.alloc(seg.session) for seg in segments]
+            pad_slot = self.arena.scratch if self.arena.scratch is not None \
+                else slots[0]
+            all_slots = slots + [pad_slot] * (b_max - n)
+            slot_map = np.asarray(all_slots, np.int32)
+            seg_slots = slot_map[stream.seg_ids]
+            t0 = time.perf_counter()
+            logits, ids, new_arena = px.verify_step_arena(
+                self.params, jnp.asarray(stream.tokens),
+                jnp.asarray(stream.positions), jnp.asarray(seg_slots),
+                jnp.asarray(slot_map), jnp.asarray(stream.cu_seqlens),
+                jnp.asarray(stream.q_offsets),
+                jnp.asarray(stream.kv_lengths), self.arena.arena,
+                jnp.asarray(gather))
+
+        # interleaved uniforms per verify session, drawn up front so the
+        # fused kernel and the host oracle consume one rng stream layout
+        draws = {seg.session: self._spec_draws(seg.session,
+                                               n_drafts[seg.session])
+                 for seg in segments if seg.kind == "verify"}
+        all_greedy = all(s not in self.sampling for s in sessions)
+        logits_np = None
+        frows = None            # fused-kernel (tok, p_draft, alt) rows
+        if all_greedy and not self.ecfg.keep_last_logits:
+            self.fused_greedy_steps += 1
+            ids_np = np.asarray(ids)
+        elif (self.ecfg.fused_sampling and not self.ecfg.keep_last_logits
+                and self._fused_bias_ok(sessions)):
+            frows = self._fused_verify_rows(segments, n_drafts, logits, L,
+                                            draws)
+            ids_np = np.asarray(ids)
+        else:
+            logits_np = np.asarray(logits)
+            self.logits_rows_shipped += int(logits_np.shape[0]
+                                            * logits_np.shape[1])
+            ids_np = np.asarray(ids)
+        elapsed = time.perf_counter() - t0
+        px.note_padding(stream.total_tokens, bucket)
+        self.arena.replace(new_arena)
+
+        committed: Dict[int, List[int]] = {}
+        out: Dict[int, int] = {}
+        n_verify = 0
+        for i, seg in enumerate(segments):
+            s = seg.session
+            if seg.kind != "verify":
+                if logits_np is not None:
+                    row = logits_np[i, 0]
+                    sp = self.sampling.get(s)
+                    if sp is None or sp.is_default:
+                        tok = int(np.argmax(row))
+                    else:
+                        tok = int(sampling_mod.sample_token(
+                            row, sp, self._rngs.get(s)))
+                    self.last_logits[s] = row
+                elif frows is not None:
+                    tok = int(frows[0][i * L])
+                else:
+                    tok = int(ids_np[i, 0])
+                if self._paged:
+                    self.arena.commit(s, [int(t) for t in seg.tokens])
+                else:
+                    self.arena.set_length(s, seg.history + seg.length)
+                if self.draft is not None:
+                    if seg.kind == "decode":
+                        self.draft.observe(s, [int(seg.tokens[0])])
+                    else:
+                        self.draft.observe(s, [int(t) for t in seg.tokens],
+                                           prompt=True)
+                committed[s] = [tok]
+                out[s] = tok
+                continue
+            # ---- verify segment: walk the drafts ----------------------
+            m = n_drafts[s]
+            d = [int(t) for t in seg.tokens[1:1 + m]]
+            if logits_np is not None:
+                tok_r, pd_r, alt_r = self._host_verify_row(
+                    s, logits_np[i], d, draws[s][1])
+            elif frows is not None:
+                base = i * L
+                tok_r = [int(frows[0][base + j]) for j in range(m + 1)]
+                pd_r = [float(frows[1][base + j]) for j in range(m + 1)]
+                alt_r = [int(frows[2][base + j]) for j in range(m + 1)]
+            else:
+                ids_row = ids_np[i]
+                tok_r = [int(ids_row[j]) for j in range(m + 1)]
+                pd_r = [1.0 if (j < m and tok_r[j] == d[j]) else 0.0
+                        for j in range(m + 1)]
+                alt_r = list(tok_r)
+            u_acc = draws[s][0]
+            emitted: List[int] = []
+            for j in range(m):
+                if u_acc[j] < pd_r[j]:
+                    emitted.append(d[j])     # draft accepted
+                else:
+                    emitted.append(alt_r[j])  # corrective token; stop
+                    break
+            else:
+                emitted.append(tok_r[m])     # all accepted → bonus token
+            c = len(emitted)
+            if self._paged:
+                # the radix index must only ever see tokens whose KV is
+                # REAL: pending + accepted drafts.  commit advances the
+                # length to h + c; truncate then releases the
+                # over-allocated tail pages the verify write touched
+                self.arena.commit(s, [int(t) for t in seg.tokens[:c]])
+                self.arena.truncate(s, seg.history + c)
+            else:
+                self.arena.set_length(s, seg.history + seg.length)
+                self.arena.truncate(s, seg.history + c)
+            if logits_np is not None:
+                self.last_logits[s] = logits_np[i, c - 1]
+            if self.draft is not None:
+                self.draft.observe(s, [int(t) for t in seg.tokens[:c]])
+            self.tokens_drafted += m
+            self.tokens_accepted += c - 1
+            self.spec_committed += c
+            acc = self._spec_by_session.setdefault(s, [0, 0])
+            acc[0] += m
+            acc[1] += c - 1
+            n_verify += 1
+            committed[s] = emitted
+            out[s] = emitted[-1]
+        if self.ecfg.measure:
+            pre = [seg for seg in segments
+                   if seg.kind not in ("decode", "verify")]
+            if pre:
+                per = elapsed / len(pre)
+                for seg in pre:
+                    self.samples.append((per, float(seg.length),
+                                         float(seg.history)))
+        if n_verify:
+            self.spec_dispatches += 1
+        n_dec = sum(1 for seg in segments
+                    if seg.kind in ("decode", "verify"))
+        return MixedStepResult(tokens=out, fused=True, bucket=bucket,
+                               n_prefill=n - n_dec, n_decode=n_dec,
+                               committed=committed)
+
+    def _host_verify_row(self, session: int, logits_row: np.ndarray,
+                         d: List[int], u_samp: np.ndarray
+                         ) -> Tuple[List[int], List[float], List[int]]:
+        """Per verify row j, the triple the fused kernel returns —
+        (plain sample, p(draft_j), residual resample with the draft
+        zeroed) — computed by the host oracle sampler over the
+        session's filtered distribution."""
+        m = len(d)
+        sp = self.sampling.get(session)
+        tok_r: List[int] = []
+        pd_r: List[float] = []
+        alt_r: List[int] = []
+        for j in range(m + 1):
+            row = logits_row[j]
+            if sp is None or sp.is_greedy:
+                t = (int(sampling_mod.sample_token(row, sp))
+                     if sp is not None else int(np.argmax(row)))
+                tok_r.append(t)
+                pd_r.append(1.0 if (j < m and t == d[j]) else 0.0)
+                alt_r.append(t)
+                continue
+            probs = sampling_mod.filtered_probs(row, sp)
+            v = probs.shape[0]
+            u = float(u_samp[j])
+            tok_r.append(sampling_mod.sample_from_probs(probs, u))
+            in_range = j < m and 0 <= d[j] < v
+            pd_r.append(float(probs[d[j]]) if in_range else 0.0)
+            if in_range and probs[d[j]] < 1.0:
+                resid = probs.copy()
+                resid[d[j]] = 0.0
+                alt_r.append(sampling_mod.sample_from_probs(
+                    resid / resid.sum(), u))
+            else:
+                alt_r.append(tok_r[-1])
+        return tok_r, pd_r, alt_r
+
+    def _fused_verify_rows(self, segments: List[packing.SegmentSpec],
+                           n_drafts: Dict[int, int], logits_dev, L: int,
+                           draws: Dict[int, Tuple[np.ndarray, np.ndarray]]
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Run the fused sampling kernel over EVERY flat gathered row
+        ((b_max·L, V) logits reshaped on device): each row's plain
+        sample, p(draft) and residual resample come back as (R,)
+        scalars — the full-vocab logits never cross to host even for
+        sampled speculative sessions.  Non-verify segments use column 0
+        (their repeated last row); pad rows run greedy into the void."""
+        b_max = int(logits_dev.shape[0])
+        r = b_max * L
+        temp = np.zeros(r, np.float32)
+        topk = np.zeros(r, np.int32)
+        topp = np.ones(r, np.float32)
+        u = np.zeros(r, np.float32)
+        draft = np.full(r, -1, np.int32)
+        bias_ids = np.full((r, kernel_ops.MAX_BIAS), -1, np.int32)
+        bias_vals = np.zeros((r, kernel_ops.MAX_BIAS), np.float32)
+        for i, seg in enumerate(segments):
+            s = seg.session
+            sp = self.sampling.get(s)
+            verify = seg.kind == "verify"
+            m = n_drafts.get(s, 0)
+            for j in range(L if verify else 1):
+                rr = i * L + j
+                if sp is not None:
+                    temp[rr] = max(float(sp.temperature), 0.0)
+                    topk[rr] = int(sp.top_k or 0)
+                    topp[rr] = (float(sp.top_p)
+                                if sp.top_p is not None else 1.0)
+                    for jj, (t, v) in enumerate(sp.logit_bias or ()):
+                        bias_ids[rr, jj] = int(t)
+                        bias_vals[rr, jj] = float(v)
+                if verify:
+                    if j <= m:
+                        u[rr] = float(draws[s][1][j])
+                    if j < m:
+                        draft[rr] = int(seg.tokens[1 + j])
+                elif sp is not None and not sp.is_greedy:
+                    u[rr] = float(self._rngs[s].random())
+        tok, p_d, alt = kernel_ops.fused_sample(
+            jnp.reshape(logits_dev, (r, -1)), temp, topk, topp,
+            bias_ids, bias_vals, u, draft)
+        self.fused_sample_steps += 1
+        return np.asarray(tok), np.asarray(p_d), np.asarray(alt)
 
     # ------------------------------------------------------ long prefill
     def prefill_long(self, session: int, token_list: np.ndarray) -> int:
@@ -813,6 +1313,9 @@ class Engine:
                 jnp.asarray(rows.kv_lengths), self.arena.arena)
             self.arena.replace(new_arena)
             dx.note_padding(n, bucket)
+            if self.draft is not None:
+                for i, s in enumerate(sessions):
+                    self.draft.observe(s, [int(cur[i])])
             toks, logits_np = self._tokens_from_step(sessions, logits, ids)
             cur = toks.astype(np.int32)
             for i, s in enumerate(sessions):
@@ -866,6 +1369,8 @@ class Engine:
             # radix index must see the ids whose keys occupy the pages
             for i, s in enumerate(sessions):
                 ar.commit(s, [int(cur[i])])
+                if self.draft is not None:
+                    self.draft.observe(s, [int(cur[i])])
             toks, logits_np = self._tokens_from_step(sessions, logits, ids)
             cur = toks.astype(np.int32)
             for i, s in enumerate(sessions):
@@ -899,6 +1404,9 @@ class Engine:
             self.arena.scatter(slots, new_caches)
             self.executor.note_padding(n, n)
             logits_np = np.asarray(logits)
+            if self.draft is not None:
+                for i, s in enumerate(sessions):
+                    self.draft.observe(s, [int(cur[i])])
             cur = self._sample_rows(sessions, logits_np).astype(np.int32)
             for i, s in enumerate(sessions):
                 self.arena.set_length(s, hists[i] + 1)
@@ -981,5 +1489,20 @@ class Engine:
             by_cause[kind][cause] += count
         out["dense_dispatches_by_cause"] = by_cause
         out["fused_greedy_steps"] = self.fused_greedy_steps
+        out["fused_sample_steps"] = self.fused_sample_steps
         out["logits_rows_shipped"] = self.logits_rows_shipped
+        # §10 speculative decoding counters: drafted vs accepted tokens,
+        # verify dispatches, total commits, and per-session acceptance
+        out["tokens_drafted"] = self.tokens_drafted
+        out["tokens_accepted"] = self.tokens_accepted
+        out["spec_dispatches"] = self.spec_dispatches
+        out["spec_committed"] = self.spec_committed
+        out["spec_acceptance"] = (self.tokens_accepted
+                                  / max(1, self.tokens_drafted))
+        out["spec_tokens_per_dispatch"] = (self.spec_committed
+                                           / max(1, self.spec_dispatches))
+        out["spec_by_session"] = {
+            s: {"drafted": v[0], "accepted": v[1],
+                "acceptance": v[1] / max(1, v[0])}
+            for s, v in self._spec_by_session.items()}
         return out

@@ -108,6 +108,49 @@ def make_packed_paged_fn(cfg: ModelConfig) -> Callable:
     return packed_step
 
 
+def make_packed_verify_arena_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(T,), positions(T,), seg_slots(T,), slot_map(B,),
+    cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,), arena,
+    gather_idx(B,L)) → (logits(B,L,V), greedy_ids(B,L), new_arena).
+    Speculative verification (DESIGN.md §10): the unchanged arena
+    dispatch gathering EVERY row's logits per segment instead of one.
+    ``greedy_ids`` is the per-row on-device argmax — all-greedy
+    acceptance walks it without shipping (B, L, V) to host."""
+
+    def verify_step(params, tokens, positions, seg_slots, slot_map,
+                    cu_seqlens, q_offsets, kv_lengths, arena, gather_idx):
+        logits, new_arena = tr.forward_packed_verify_arena(
+            params, cfg, tokens=tokens, positions=positions,
+            seg_slots=seg_slots, slot_map=slot_map, cu_seqlens=cu_seqlens,
+            q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+            gather_idx=gather_idx)
+        return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                new_arena)
+
+    return verify_step
+
+
+def make_packed_verify_paged_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens(T,), positions(T,), token_pages(T,), token_offs(T,),
+    page_table(B,P_max), cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,),
+    arena, gather_idx(B,L)) → (logits(B,L,V), greedy_ids(B,L), new_pool).
+    Paged speculative verification (DESIGN.md §10)."""
+
+    def verify_step(params, tokens, positions, token_pages, token_offs,
+                    page_table, cu_seqlens, q_offsets, kv_lengths, arena,
+                    gather_idx):
+        logits, new_arena = tr.forward_packed_verify_paged(
+            params, cfg, tokens=tokens, positions=positions,
+            token_pages=token_pages, token_offs=token_offs,
+            page_table=page_table, cu_seqlens=cu_seqlens,
+            q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
+            gather_idx=gather_idx)
+        return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                new_arena)
+
+    return verify_step
+
+
 def make_paged_decode_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(B,), positions(B,), write_pages(B,), write_offs(B,),
     page_table(B,P_max), kv_lengths(B,), arena) → (logits(B,V),
@@ -358,11 +401,28 @@ class PackedBucketExecutor(_ExecutorBase):
             self._jit_packed_paged = jax.jit(
                 self._packed_paged,
                 donate_argnums=(9,) if self.donate_cache else ())
+        # speculative verification forms (DESIGN.md §10): the SAME
+        # packed dispatch with an L-per-segment logits gather.  Their
+        # compile cache is keyed on (token bucket, L) via the
+        # gather_idx shape — fixed L keeps the shape space small
+        self._verify_arena = make_packed_verify_arena_fn(cfg)
+        self._jit_verify_arena = jax.jit(
+            self._verify_arena,
+            donate_argnums=(8,) if self.donate_cache else ())
+        self._jit_verify_paged = None
+        if self.capability.pure_attn:
+            self._verify_paged = make_packed_verify_paged_fn(cfg)
+            self._jit_verify_paged = jax.jit(
+                self._verify_paged,
+                donate_argnums=(9,) if self.donate_cache else ())
         # continuous-batching counters: a mixed step fuses decode rows
         # into the same packed stream (and the SAME compiled executable —
         # the shape key is (token bucket, max_seqs), not the segment mix)
         self.mixed_steps = 0
         self.decode_tokens_fused = 0
+        # speculative counters: verify dispatches and draft rows verified
+        self.verify_steps = 0
+        self.verify_rows = 0
 
     # ------------------------------------------------------------ lookup
     @property
@@ -461,6 +521,36 @@ class PackedBucketExecutor(_ExecutorBase):
                 page_table, cu_seqlens, q_offsets, kv_lengths, arena,
                 last_idx)
         exe = self._get("packed_paged", self._jit_packed_paged, args)
+        return exe(*args)
+
+    def verify_step_arena(self, params, tokens, positions, seg_slots,
+                          slot_map, cu_seqlens, q_offsets, kv_lengths,
+                          arena, gather_idx):
+        """One speculative verification dispatch (DESIGN.md §10): the
+        arena-resident packed step scoring every session's k-token draft
+        segment at once, returning (logits (B, L, V), greedy_ids (B, L),
+        new_arena).  Kernel-identical to :meth:`mixed_step_arena` — only
+        the final logits gather widens from 1 to L rows per segment."""
+        self.verify_steps += 1
+        self.verify_rows += int(gather_idx.shape[0] * gather_idx.shape[1])
+        args = (params, tokens, positions, seg_slots, slot_map, cu_seqlens,
+                q_offsets, kv_lengths, arena, gather_idx)
+        exe = self._get("verify_arena", self._jit_verify_arena, args)
+        return exe(*args)
+
+    def verify_step_paged(self, params, tokens, positions, token_pages,
+                          token_offs, page_table, cu_seqlens, q_offsets,
+                          kv_lengths, arena, gather_idx):
+        """Paged speculative verification dispatch (DESIGN.md §10) —
+        :meth:`verify_step_arena` over the shared page pool."""
+        assert self._jit_verify_paged is not None, \
+            f"{self.cfg.name}: paged serving is attention-only"
+        self.verify_steps += 1
+        self.verify_rows += int(gather_idx.shape[0] * gather_idx.shape[1])
+        args = (params, tokens, positions, token_pages, token_offs,
+                page_table, cu_seqlens, q_offsets, kv_lengths, arena,
+                gather_idx)
+        exe = self._get("verify_paged", self._jit_verify_paged, args)
         return exe(*args)
 
     def precapture(self, params, arena_gather) -> float:
@@ -592,5 +682,6 @@ __all__ = ["BucketExecutor", "PackedBucketExecutor", "DecodeBucketExecutor",
            "DEFAULT_TOKEN_BUCKETS", "DEFAULT_DECODE_BUCKETS",
            "make_prefill_fn", "make_packed_prefill_fn",
            "make_packed_arena_fn", "make_packed_paged_fn",
+           "make_packed_verify_arena_fn", "make_packed_verify_paged_fn",
            "make_decode_fn", "make_arena_decode_fn",
            "make_paged_decode_fn", "resolve_donation"]

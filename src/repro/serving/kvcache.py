@@ -95,6 +95,19 @@ class KVArena:
                 f"session {session} overflows arena ({n} > {self.max_len - 2})")
         self.lengths[session] = n
 
+    def truncate(self, session: int, n: int) -> None:
+        """Speculative rollback (DESIGN.md §10): drop cached rows past
+        ``n``.  The slot layout needs no data movement — rows beyond the
+        valid length are unreachable by invariant (attention masks to
+        kv_length, the next append overwrites them in place) — so
+        truncate is pure length bookkeeping here; the paged arena's
+        version releases pages and de-indexes the radix suffix."""
+        h = self.lengths.get(session, 0)
+        if not 0 <= n <= h:
+            raise ValueError(
+                f"truncate session {session} to {n} outside [0, {h}]")
+        self.lengths[session] = n
+
     @property
     def free_slots(self) -> int:
         return len(self._free)
@@ -464,6 +477,66 @@ class PagedKVArena:
             for p in self.index.insert(toks[:n_full * self.page_size],
                                        self._pages[session][:n_full]):
                 self._ref(p)
+
+    # ------------------------------------------------------------ rollback
+    def truncate(self, session: int, n: int) -> None:
+        """Speculative rollback (DESIGN.md §10): forget every cached
+        token past ``n``.
+
+        Three things unwind, in order:
+
+        1. **Radix de-index** — the session's indexed chunk path is
+           walked and suffix nodes covering chunks ≥ ``n // ps`` are
+           unlinked deepest-first, including the boundary chunk whose
+           page goes full → partial (an indexed page must stay
+           append-only; the session will write into the partial page
+           again).  A node survives when it still has children (a longer
+           indexed prefix — shared, not ours to drop) or when it names a
+           different physical page (a private duplicate was never
+           indexed); in either case every shallower node survives too,
+           and any such still-indexed boundary page keeps rc > 1 so
+           ``prepare_extend``'s COW shields it from the re-extend.
+        2. **Page-refcount release** — the session unrefs every page
+           past ``ceil(n / ps)``; pages held by the index or by a fork
+           sibling stay alive (rc > 0), exclusively-owned tails return
+           to the free pool.  Pages over-allocated by a speculative
+           ``prepare_extend`` (never committed) are released the same
+           way even when ``n == length``.
+        3. **Token trim** — ``_tokens``/``lengths`` shrink to ``n``.
+
+        ``audit()`` holds afterwards: every unref is mirrored by a table
+        or index removal.
+        """
+        h = self.lengths.get(session, 0)
+        if not 0 <= n <= h:
+            raise ValueError(
+                f"truncate session {session} to {n} outside [0, {h}]")
+        self.open(session)
+        ps = self.page_size
+        toks = self._tokens[session]
+        pages = self._pages[session]
+        new_full = n // ps
+        keep_pages = -(-n // ps)
+        if self.index is not None:
+            # the session's indexed chain, chunk by chunk
+            path: List[_RadixNode] = []
+            node = self.index.root
+            for i in range(h // ps):
+                child = node.children.get(tuple(toks[i * ps:(i + 1) * ps]))
+                if child is None:
+                    break
+                path.append(child)
+                node = child
+            for i in range(len(path) - 1, new_full - 1, -1):
+                nd = path[i]
+                if nd.children or nd.page != pages[i]:
+                    break
+                self._unref(self.index.remove(nd))
+        for p in pages[keep_pages:]:
+            self._unref(p)
+        del pages[keep_pages:]
+        del toks[n:]
+        self.lengths[session] = n
 
     # ---------------------------------------------------------------- fork
     def fork(self, parent: int, child: int) -> None:

@@ -192,15 +192,26 @@ class ServeLoop:
         if budget > 0:
             self.active_decodes[session] = budget
 
-    def _record_decoded(self, session: int, token: int, now: float) -> None:
-        self.generated.setdefault(session, []).append(token)
-        self.last_token[session] = token
-        self.tpot_samples.append(now - self._last_emit.get(session, now))
+    def _record_decoded(self, session: int, tokens: List[int],
+                        now: float) -> None:
+        """Commit the tokens one tick emitted for a session.  A
+        speculative tick commits up to k+1 tokens in ONE dispatch
+        (DESIGN.md §10); the tick's wall-clock gap covers that many
+        inter-token intervals, so TPOT credits m samples of gap/m each —
+        billing the full gap to every token would overstate TPOT m-fold,
+        and billing it once would hide the speculative speedup."""
+        m = len(tokens)
+        if m == 0:
+            return
+        self.generated.setdefault(session, []).extend(tokens)
+        self.last_token[session] = tokens[-1]
+        gap = (now - self._last_emit.get(session, now)) / m
+        self.tpot_samples.extend([gap] * m)
         if len(self.tpot_samples) > 2 * self.max_tpot_samples:
             self.tpot_samples = self.tpot_samples[-self.max_tpot_samples:]
         self._last_emit[session] = now
-        self._dec_pending(session, 1)   # this token's KV is now cached
-        left = self.active_decodes.get(session, 0) - 1
+        self._dec_pending(session, m)   # these tokens' KV is now cached
+        left = self.active_decodes.get(session, 0) - m
         if left > 0:
             self.active_decodes[session] = left
         else:
@@ -210,6 +221,22 @@ class ServeLoop:
                          ) -> List[Tuple[int, int]]:
         return [(s, self.last_token[s]) for s in self.active_decodes
                 if s not in exclude]
+
+    def _tokens_per_decode(self) -> int:
+        """Stream tokens one fused decode session costs this tick: 1 +
+        spec_k when the engine runs speculative verify segments, else 1.
+        Sizing the ladder/AWD reserves with this keeps verify segments
+        from busting the token bucket mid-assembly."""
+        return 1 + self.engine.spec_k if self.engine.spec_enabled else 1
+
+    @staticmethod
+    def _committed(res, session: int) -> List[int]:
+        """Tokens a mixed step emitted for a fused decode session — the
+        full speculative commit when present, the single sampled token
+        otherwise."""
+        if res.committed and session in res.committed:
+            return list(res.committed[session])
+        return [res.tokens[session]]
 
     # ----------------------------------------------------------- execute
     def _run_batch(self, batch: Batch) -> None:
@@ -234,16 +261,18 @@ class ServeLoop:
                 cand = self._fusable_decodes(exclude=tuple(sessions))
                 n_fit, bucket = packing.fit_decodes(
                     sum(len(t) for t in token_lists), len(sessions),
-                    len(cand), px.ladder, token_bucket=batch.token_bucket)
+                    len(cand), px.ladder, token_bucket=batch.token_bucket,
+                    tokens_per_decode=self._tokens_per_decode())
                 fused = cand[:n_fit]
             batch.decode_tokens = len(fused)
             res = self.engine.step_mixed(
                 list(zip(sessions, token_lists)), fused,
-                token_bucket=bucket)
+                token_bucket=bucket,
+                max_new={s: self.active_decodes[s] for s, _ in fused})
             firsts = res.tokens
             done = self.clock()
             for s, _ in fused:
-                self._record_decoded(s, res.tokens[s], done)
+                self._record_decoded(s, self._committed(res, s), done)
         else:
             bucket = None
             if batch.uses_graph:
@@ -276,15 +305,17 @@ class ServeLoop:
             # a long-prefill chunk shares the packed stream with the
             # decode backlog instead of serializing against it
             cand = self._fusable_decodes(exclude=(r.session,))
-            n_fit, bucket = packing.fit_decodes(len(chunk), 1, len(cand),
-                                                px.ladder)
+            n_fit, bucket = packing.fit_decodes(
+                len(chunk), 1, len(cand), px.ladder,
+                tokens_per_decode=self._tokens_per_decode())
             fused = cand[:n_fit] if bucket is not None else []
-            res = self.engine.step_mixed([(r.session, chunk)], fused,
-                                         token_bucket=bucket)
+            res = self.engine.step_mixed(
+                [(r.session, chunk)], fused, token_bucket=bucket,
+                max_new={s: self.active_decodes[s] for s, _ in fused})
             firsts = res.tokens
             done = self.clock()
             for s, _ in fused:
-                self._record_decoded(s, res.tokens[s], done)
+                self._record_decoded(s, self._committed(res, s), done)
         else:
             firsts = self.engine.prefill_batch([r.session], [chunk])
             done = self.clock()
@@ -298,16 +329,26 @@ class ServeLoop:
             self._outstanding -= 1
 
     def _run_decode_only(self) -> None:
-        """No prefill work this tick: advance every in-flight session one
-        token in a single decode dispatch — the arena-resident bucketed
-        path when the engine supports it (batch padded to a decode-ladder
-        rung, KV read in place), else the dense gather step."""
+        """No prefill work this tick: advance every in-flight session in
+        a single dispatch.  With a draft armed this is one speculative
+        verify step — each session commits up to spec_k + 1 tokens per
+        dispatch (DESIGN.md §10), capped by its remaining budget — else
+        one token via the arena-resident bucketed decode path (or the
+        dense gather step)."""
         sessions = list(self.active_decodes)
+        if self.engine.spec_enabled:
+            out = self.engine.spec_step(
+                [(s, self.last_token[s]) for s in sessions],
+                max_new=dict(self.active_decodes))
+            done = self.clock()
+            for s in sessions:
+                self._record_decoded(s, out[s], done)
+            return
         tokens = [self.last_token[s] for s in sessions]
         out = self.engine.decode_batch(sessions, tokens, steps=1)
         done = self.clock()
         for s in sessions:
-            self._record_decoded(s, out[s][0], done)
+            self._record_decoded(s, [out[s][0]], done)
 
     # --------------------------------------------------------------- run
     @property
@@ -322,7 +363,9 @@ class ServeLoop:
         wake_time)`` so multi-engine drivers (ServeCluster) can
         interleave many loops without nesting their drain loops."""
         now = self.clock()
-        self.policy.note_decode_backlog(len(self.active_decodes))
+        self.policy.note_decode_backlog(
+            len(self.active_decodes),
+            tokens_per_decode=self._tokens_per_decode())
         work, wake = self.policy.next_work(now)
         did = True
         if isinstance(work, Batch) and work.requests:
@@ -337,6 +380,13 @@ class ServeLoop:
             self._run_decode_only()
         else:
             did = False
+        if self.engine.spec_dispatches:
+            # mirror the engine's speculative totals into the tracker so
+            # cluster-merged SLO reports carry acceptance statistics
+            self.tracker.note_spec(self.engine.tokens_drafted,
+                                   self.engine.tokens_accepted,
+                                   self.engine.spec_dispatches,
+                                   self.engine.spec_committed)
         self._since_fit += 1
         if self._since_fit >= self.refit_every:
             self._since_fit = 0

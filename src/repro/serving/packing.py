@@ -10,7 +10,10 @@ segment kinds side by side:
     instead of running the dense path solo;
   * ``decode``  — ONE token of an in-flight session (history = its
     full cached context), attending over ``history + 1`` keys through
-    the ragged kernel's offset prefetch.
+    the ragged kernel's offset prefetch;
+  * ``verify``  — a speculative session's ``[pending, d_1..d_{L-1}]``
+    draft segment (DESIGN.md §10): a length-L re-prefill whose logits
+    are ALL gathered back so acceptance can walk the drafts.
 
 Mechanically a decode segment is a length-1 re-prefill, so the packed
 executor serves every mix with the SAME compiled shape — prefill and
@@ -31,7 +34,7 @@ from repro.core.buckets import fit_decodes  # noqa: F401
 # fit_decodes lives in core.buckets (pure ladder arithmetic shared with
 # the JAX-free simulator) and is re-exported here for the serving side
 
-SEGMENT_KINDS = ("prefill", "chunk", "decode")
+SEGMENT_KINDS = ("prefill", "chunk", "decode", "verify")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,13 +43,16 @@ class SegmentSpec:
     session: int
     tokens: np.ndarray        # (len,) int32 new tokens (decode: length 1)
     history: int              # cached KV tokens before this step
-    kind: str = "prefill"     # prefill | chunk | decode
+    kind: str = "prefill"     # prefill | chunk | decode | verify
 
     def __post_init__(self):
         assert self.kind in SEGMENT_KINDS, self.kind
         assert len(self.tokens) >= 1, "empty segment"
         if self.kind == "decode":
             assert len(self.tokens) == 1, "decode segments carry ONE token"
+        # a "verify" segment is [pending token, draft_1..draft_{L-1}] —
+        # mechanically a length-L re-prefill whose logits are ALL read
+        # back (speculative verification, DESIGN.md §10); any length ≥ 1
 
     @property
     def length(self) -> int:
@@ -87,7 +93,12 @@ class MixedStream:
 
     @property
     def prefill_tokens(self) -> int:
-        return sum(s.length for s in self.segments if s.kind != "decode")
+        return sum(s.length for s in self.segments
+                   if s.kind not in ("decode", "verify"))
+
+    @property
+    def verify_tokens(self) -> int:
+        return sum(s.length for s in self.segments if s.kind == "verify")
 
     @property
     def tail_tokens(self) -> int:

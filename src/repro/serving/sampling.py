@@ -60,40 +60,63 @@ def make_rng(session: int, params: SamplingParams) -> np.random.Generator:
 
 def _apply_bias(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
     """Additive per-token bias, IN PLACE (out-of-range ids are ignored).
-    Callers pass a private float64 copy — no second allocation here."""
+    Callers pass a private float32 copy — no second allocation here."""
     if not params.logit_bias:
         return logits
     for tok, bias in params.logit_bias:
         if 0 <= int(tok) < logits.size:
-            logits[int(tok)] += bias
+            logits[int(tok)] += np.float32(bias)
     return logits
+
+
+def filtered_probs(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
+    """The (V,) distribution a non-greedy session actually samples from:
+    bias → temperature → exact top-k (kth-value threshold, ties kept) →
+    tie-inclusive top-p (a token survives iff the mass of STRICTLY
+    GREATER probs is < top_p) → renormalized softmax.
+
+    float32 throughout, matching the fused on-device sampling kernel
+    bit-for-bit up to summation order.  Speculative rejection sampling
+    reads draft probabilities straight off this distribution.
+    """
+    scaled = _apply_bias(np.asarray(logits, np.float32).copy(), params)
+    scaled = scaled / np.float32(max(params.temperature, 1e-6))
+    if params.top_k is not None and 0 < params.top_k < scaled.size:
+        kth = np.partition(scaled, -params.top_k)[-params.top_k]
+        scaled = np.where(scaled < kth, -np.inf, scaled)
+    if params.top_p is not None and 0.0 < params.top_p < 1.0:
+        shifted = scaled - scaled.max()
+        probs = np.exp(shifted)
+        probs /= probs.sum()
+        # strict-greater mass G(v) = Σ p_j for p_j > v, via the sorted
+        # prefix: ties share one G, so equal-prob tokens live or die
+        # together (the value-threshold rule the device kernel uses)
+        sp = np.sort(probs)[::-1]
+        cs = np.concatenate(([np.float32(0.0)], np.cumsum(sp)))
+        first_le = np.searchsorted(-sp, -probs, side="left")
+        scaled = np.where(cs[first_le] < params.top_p, scaled, -np.inf)
+    scaled = scaled - scaled.max()
+    probs = np.exp(scaled)
+    probs /= probs.sum()
+    return probs.astype(np.float32)
+
+
+def sample_from_probs(probs: np.ndarray, u: float) -> int:
+    """Inverse-CDF draw: the smallest index whose cumulative mass
+    exceeds ``u``.  One uniform per draw — the same protocol the fused
+    sampling kernel consumes, so host and device paths share one rng
+    stream layout."""
+    cdf = np.cumsum(probs)
+    return int(min(np.searchsorted(cdf, u, side="right"), probs.size - 1))
 
 
 def sample_token(logits: np.ndarray, params: SamplingParams,
                  rng: Optional[np.random.Generator] = None) -> int:
     """Sample one token from a (V,) logits row."""
-    scaled = _apply_bias(np.array(logits, np.float64), params)  # one copy
     if params.is_greedy or rng is None:
+        scaled = _apply_bias(np.asarray(logits, np.float32).copy(), params)
         return int(np.argmax(scaled))
-    scaled = scaled / params.temperature
-    if params.top_k is not None and 0 < params.top_k < scaled.size:
-        kth = np.partition(scaled, -params.top_k)[-params.top_k]
-        scaled = np.where(scaled < kth, -np.inf, scaled)
-    if params.top_p is not None and 0.0 < params.top_p < 1.0:
-        # nucleus: keep the smallest prob-mass set covering top_p — a
-        # token survives iff the mass STRICTLY BEFORE it (descending
-        # order) is < top_p, so the first token always survives
-        shifted = scaled - scaled.max()
-        probs = np.exp(shifted)
-        probs /= probs.sum()
-        order = np.argsort(probs)[::-1]
-        before = np.cumsum(probs[order]) - probs[order]
-        drop = order[before >= params.top_p]
-        scaled[drop] = -np.inf
-    scaled = scaled - scaled.max()
-    probs = np.exp(scaled)
-    probs /= probs.sum()
-    return int(rng.choice(scaled.size, p=probs))
+    return sample_from_probs(filtered_probs(logits, params), rng.random())
 
 
 def sample_batch(logits: np.ndarray, sessions: Sequence[int],
@@ -118,4 +141,4 @@ def sample_batch(logits: np.ndarray, sessions: Sequence[int],
 
 
 __all__ = ["SamplingParams", "GREEDY", "make_rng", "sample_token",
-           "sample_batch"]
+           "sample_batch", "filtered_probs", "sample_from_probs"]

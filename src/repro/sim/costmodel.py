@@ -65,6 +65,10 @@ class CostModel:
     # decode_handoff moves a prefilled session to a decode instance.
     handoff_per_token: float = 2.9e-7
     handoff_launch: float = 5.0e-4
+    # §10 speculative decoding: host-side draft proposal cost per draft
+    # token (n-gram table lookups — tiny next to a dispatch; a
+    # small-model draft would calibrate this much higher)
+    draft_per_token: float = 2.0e-5
 
     # ------------------------------------------------------------ pieces
     def handoff_time(self, ctx: int) -> float:
@@ -212,6 +216,33 @@ class CostModel:
                    for h in cached_lens)
         return self.graph_launch + self.graph_lookup + walk \
             + max(comp, mem) + self.decode_per_seq * n
+
+    def spec_step_time(self, cached_lens: Sequence[int], k: int,
+                       bucket: Optional[int] = None) -> float:
+        """One speculative verify tick (DESIGN.md §10): every session's
+        segment carries 1 + k stream tokens (pending + drafts), so the
+        linear work and KV writes scale like a (1+k)-token packed row
+        per session — but the weight read is still paid ONCE for the
+        whole dispatch.  That amortization is the speculative win: a
+        tick that commits 1 + α·k tokens costs far less than 1 + α·k
+        plain decode ticks, each of which re-reads the weights.  Draft
+        proposal adds draft_per_token per proposed token (host-side)."""
+        n = len(cached_lens)
+        if n == 0:
+            return 0.0
+        rows = n * (1 + k)
+        b = bucket if bucket is not None else rows
+        comp = self.beta * rows + self.tail_coef * max(0, b - rows) \
+            + self.alpha * sum((1 + k) * ((1 + k) + 2 * self._h_eff(h))
+                               for h in cached_lens)
+        mem = self.weight_read + sum(
+            self.gamma_r * self._h_eff(h) + self.w_tok * (1 + k)
+            for h in cached_lens)
+        walk = sum(self._page_walk(self._h_eff(h) + 1 + k)
+                   for h in cached_lens)
+        return self.graph_launch + self.graph_lookup + walk \
+            + max(comp, mem) + self.decode_per_seq * n \
+            + self.draft_per_token * k * n
 
     def work_time(self, work, gather_rows: int = 0) -> float:
         if isinstance(work, ChunkWork):

@@ -69,6 +69,15 @@ class SimConfig:
     # loaded non-prefill instance instead of decoding in place —
     # mirroring ServeCluster._maybe_migrate on the real engines.
     decode_handoff: bool = False
+    # §10 speculative decoding: decode-only ticks become verify steps.
+    # Each session's segment carries 1 + spec_k stream tokens, priced by
+    # CostModel.spec_step_time (one amortized weight read for the whole
+    # dispatch), and commits the EXPECTED 1 + round(spec_accept·spec_k)
+    # tokens.  Fused decode rows inside mixed ticks stay 1-token in the
+    # model (conservative: the real engine speculates there too).
+    speculative: bool = False
+    spec_k: int = 4
+    spec_accept: float = 0.7
 
 
 class _Instance:
@@ -89,11 +98,12 @@ class _Instance:
         self.prefill_done = 0
         self.current = None
 
-    def advance_decodes(self) -> None:
-        """Every in-flight session emitted one token: budgets shrink,
-        cached contexts grow."""
-        self.decode_sessions = [(r - 1, h + 1)
-                                for r, h in self.decode_sessions if r > 1]
+    def advance_decodes(self, m: int = 1) -> None:
+        """Every in-flight session emitted ``m`` tokens (1 plain, up to
+        1 + k speculative): budgets shrink, cached contexts grow — a
+        session with fewer than m tokens left just finishes."""
+        self.decode_sessions = [(r - m, h + m)
+                                for r, h in self.decode_sessions if r > m]
 
     @property
     def decode_ctx_lens(self) -> List[int]:
@@ -213,19 +223,34 @@ class ClusterSim:
         return None  # shared
 
     # ------------------------------------------------------------- engine
-    def _decode_tick_time(self, ctx_lens: List[int]) -> float:
+    def _decode_tick_time(self, ctx_lens: List[int],
+                          spec: bool = True) -> float:
         """One decode-only tick, mirroring the real engine's routing:
         on-ladder counts run the arena-resident bucketed step billed on
         actual cached lengths (window-clamped for SWA configs — the §7
         rolling arena streams min(cached, window) rows); ladder overflow
         falls back to the dense gather path's per-count pricing (the
-        engine does exactly this)."""
+        engine does exactly this).  ``spec=False`` forces plain pricing
+        for ticks that only commit one token per session (the leftover
+        decode step alongside a mixed tick) — verify-row cost is only
+        paid where the multi-token commit happens."""
         if self.cfg.window is not None:
             ctx_lens = [min(h, self.cfg.window) for h in ctx_lens]
+        if self.cfg.speculative and spec:
+            # §10: the tick is one packed verify dispatch — (1+k)-token
+            # segments, one amortized weight read, host draft cost
+            return self.cost.spec_step_time(ctx_lens, self.cfg.spec_k)
         bucket = self._decode_ladder.bucket_for(len(ctx_lens))
         if bucket is None:
             return self.cost.decode_step_time(len(ctx_lens))
         return self.cost.decode_bucket_time(ctx_lens, bucket)
+
+    def _spec_commit(self) -> int:
+        """Tokens one decode-only tick commits per session: the expected
+        speculative prefix 1 + round(α·k), or 1 when not speculating."""
+        if not self.cfg.speculative:
+            return 1
+        return 1 + int(round(self.cfg.spec_accept * self.cfg.spec_k))
 
     def _try(self, inst: _Instance) -> None:
         if inst.busy or not inst.alive:
@@ -298,7 +323,7 @@ class ClusterSim:
                 # sessions beyond the fusion room advance in a separate
                 # bucketed decode tick, billed on their cached contexts
                 service += self._decode_tick_time(
-                    inst.decode_ctx_lens[fused:]) * inst.speed
+                    inst.decode_ctx_lens[fused:], spec=False) * inst.speed
             inst.advance_decodes()
         if isinstance(work, Batch):
             for r in work.requests:
@@ -317,7 +342,7 @@ class ClusterSim:
         inst.busy = False
         inst.current = None
         if work == "decode":
-            inst.advance_decodes()
+            inst.advance_decodes(self._spec_commit())
             return
         policy = self.shared if self.shared is not None else inst.policy
         policy.on_complete(work, self.now)

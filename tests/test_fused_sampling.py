@@ -1,0 +1,115 @@
+"""Fused on-device sampling kernel vs the host sampler (DESIGN.md §10).
+
+``serving/sampling.py`` is the bit-level oracle: the kernel applies the
+same bias → temperature → exact top-k → tie-inclusive top-p pipeline and
+consumes the SAME host-drawn uniform, so for every row the kernel token
+must equal ``sample_from_probs(filtered_probs(row, sp), u)`` (greedy
+rows: the biased argmax), the draft probability must match
+``filtered_probs(row, sp)[draft]``, and the alt token must match the
+residual resample with the draft token zeroed out.  Runs the Pallas
+kernel in interpret mode so parity holds on any backend.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels.sampling import MAX_BIAS, fused_sample
+from repro.serving.sampling import (SamplingParams, filtered_probs,
+                                    sample_from_probs)
+
+V = 128
+
+CASES = [
+    SamplingParams(),                                       # greedy
+    SamplingParams(logit_bias={3: 5.0, 7: -4.0}),           # biased greedy
+    SamplingParams(temperature=1.0),                        # no truncation
+    SamplingParams(temperature=0.7, top_k=16),
+    SamplingParams(temperature=1.3, top_p=0.9),
+    SamplingParams(temperature=0.8, top_k=24, top_p=0.85,
+                   logit_bias={11: 3.0, 40: 1.5, 90: -2.0}),
+]
+
+
+def _encode(sp: SamplingParams):
+    """SamplingParams → the kernel's scalar encodings (top_k == 0 off,
+    top_p >= 1.0 off, bias id == -1 empty slot)."""
+    ids = -np.ones(MAX_BIAS, np.int32)
+    vals = np.zeros(MAX_BIAS, np.float32)
+    for j, (tok, b) in enumerate(sp.logit_bias or ()):
+        ids[j], vals[j] = tok, b
+    return (np.float32(max(sp.temperature, 0.0)),
+            np.int32(sp.top_k or 0),
+            np.float32(sp.top_p if sp.top_p is not None else 1.0),
+            ids, vals)
+
+
+def _host_expect(row, sp, u, draft):
+    """(token, p_draft, alt) per the host oracle."""
+    if sp.is_greedy:
+        biased = np.asarray(row, np.float32).copy()
+        for tok, b in sp.logit_bias or ():
+            biased[int(tok)] += np.float32(b)
+        g = int(np.argmax(biased))
+        return g, float(g == draft), g
+    probs = filtered_probs(row, sp)
+    tok = sample_from_probs(probs, u)
+    p_d = float(probs[draft])
+    resid = probs.copy()
+    resid[draft] = 0.0
+    mass = resid.sum()
+    alt = sample_from_probs(resid / mass, u) if mass > 0 else tok
+    return tok, p_d, alt
+
+
+@pytest.mark.parametrize("logits_seed", [0, 1, 2])
+def test_fused_sample_matches_host(logits_seed):
+    rng = np.random.default_rng(100 + logits_seed)
+    n = len(CASES)
+    logits = rng.normal(0.0, 3.0, (n, V)).astype(np.float32)
+    u = rng.random(n).astype(np.float32)
+    draft = rng.integers(0, V, n).astype(np.int32)
+
+    temp = np.zeros(n, np.float32)
+    top_k = np.zeros(n, np.int32)
+    top_p = np.ones(n, np.float32)
+    bids = -np.ones((n, MAX_BIAS), np.int32)
+    bvals = np.zeros((n, MAX_BIAS), np.float32)
+    for i, sp in enumerate(CASES):
+        temp[i], top_k[i], top_p[i], bids[i], bvals[i] = _encode(sp)
+
+    tok, p_d, alt = fused_sample(logits, temp, top_k, top_p, bids,
+                                 bvals, u, draft, interpret=True)
+    tok, p_d, alt = np.asarray(tok), np.asarray(p_d), np.asarray(alt)
+
+    for i, sp in enumerate(CASES):
+        want_tok, want_pd, want_alt = _host_expect(
+            logits[i], sp, float(u[i]), int(draft[i]))
+        assert int(tok[i]) == want_tok, (i, sp)
+        assert int(alt[i]) == want_alt, (i, sp)
+        assert np.isclose(float(p_d[i]), want_pd, atol=1e-5), (i, sp)
+
+
+def test_fused_sample_draft_accept_semantics():
+    """The speculative accept test reads p_draft: when the draft token
+    IS the sampled/greedy token under a near-deterministic distribution,
+    p_draft ~ 1; a truncated-out draft gets exactly 0."""
+    rng = np.random.default_rng(7)
+    logits = rng.normal(0.0, 1.0, (2, V)).astype(np.float32)
+    logits[0, 5] = 40.0                  # near-point-mass on token 5
+    temp = np.array([0.9, 0.9], np.float32)
+    top_k = np.array([0, 4], np.int32)   # row 1: truncate to top-4
+    top_p = np.ones(2, np.float32)
+    bids = -np.ones((2, MAX_BIAS), np.int32)
+    bvals = np.zeros((2, MAX_BIAS), np.float32)
+    u = np.array([0.5, 0.5], np.float32)
+    # row 0 drafts the point-mass token; row 1 drafts the smallest logit
+    worst = int(np.argmin(logits[1]))
+    draft = np.array([5, worst], np.int32)
+
+    tok, p_d, alt = fused_sample(logits, temp, top_k, top_p, bids,
+                                 bvals, u, draft, interpret=True)
+    assert float(p_d[0]) > 0.999
+    assert float(p_d[1]) == 0.0          # truncated out by top-k
+    assert int(alt[0]) != 5              # residual excludes the draft
+    sp = SamplingParams(temperature=0.9, top_k=4)
+    assert int(tok[1]) == sample_from_probs(
+        filtered_probs(logits[1], sp), 0.5)

@@ -203,3 +203,55 @@ def test_percentile_nearest_rank():
 
 def test_percentile_unsorted_input():
     assert percentile([5.0, 1.0, 9.0, 3.0, 7.0], 0.5) == 5.0
+
+
+# ------------------------------------------- multi-token TPOT accounting
+def test_tpot_credits_one_interval_per_committed_token(smoke):
+    """PR 8 regression: a speculative tick commits m tokens in ONE
+    dispatch.  The pre-fix accounting appended a single tpot sample
+    equal to the whole inter-dispatch gap — inflating reported TPOT by
+    ~m x and poisoning the SLO percentiles.  A tick committing m tokens
+    must credit m intervals of gap/m each."""
+    cfg, params = smoke
+    loop = _loop(cfg, params)
+    loop._start_decoding(0, 5, budget=6, now=0.0)
+    loop._record_decoded(0, [1, 2, 3], 3.0)     # 3 tokens over 3 s
+    assert loop.tpot_samples == [1.0, 1.0, 1.0]
+    loop._record_decoded(0, [4], 4.0)           # plain single-token tick
+    loop._record_decoded(0, [7, 8], 6.0)        # 2 tokens over 2 s
+    assert loop.tpot_samples == [1.0] * 6
+    assert loop.generated[0] == [5, 1, 2, 3, 4, 7, 8]
+    assert 0 not in loop.active_decodes         # budget of 6 drained
+
+
+def test_loop_spec_stream_lossless_and_tpot_count(smoke):
+    """End to end through the serve loop: arming speculation changes
+    neither the generated streams (greedy acceptance is exact-match)
+    nor the NUMBER of tpot samples — one interval per decoded token,
+    however many tokens each verify dispatch commits.  The tracker's
+    merged spec counters mirror the engine's."""
+    from repro.serving.draft import NGramDraft
+
+    cfg, params = smoke
+    rng = np.random.default_rng(5)
+    prompts = {0: rng.integers(1, cfg.vocab_size, 9),
+               1: rng.integers(1, cfg.vocab_size, 12)}
+    budget = 8
+
+    def run(spec):
+        loop = _loop(cfg, params)
+        if spec:
+            loop.engine.enable_spec(NGramDraft(n=3), k=4)
+        for s, p in prompts.items():
+            loop.submit(s, p, decode_tokens=budget)
+        loop.run_until_idle(max_wall=240.0)
+        return {s: list(loop.generated[s]) for s in prompts}, loop
+
+    base, _ = run(False)
+    spec, loop = run(True)
+    assert spec == base
+    assert len(loop.tpot_samples) == 2 * budget
+    rep = loop.tracker.report()
+    assert rep.spec_dispatches == loop.engine.spec_dispatches > 0
+    assert rep.tokens_drafted == loop.engine.tokens_drafted
+    assert rep.tokens_accepted == loop.engine.tokens_accepted

@@ -1,0 +1,174 @@
+"""Speculative decoding on the packed mixed stream (DESIGN.md §10).
+
+The §10 contract, asserted end to end:
+
+* **Lossless**: greedy acceptance is exact-match, so the speculative
+  stream is BIT-IDENTICAL to the plain decode — at every draft quality
+  (perfect, adversarial, n-gram) and on BOTH arena layouts (slot and
+  paged).  Rejected tails roll back via ``arena.truncate`` and leave the
+  paged refcount/free-list invariants intact (``audit``).
+* **Distribution-preserving sampling**: non-greedy sessions commit by
+  rejection sampling against the same filtered distribution the host
+  sampler uses; the host-logits verify path and the fused on-device
+  kernel path consume the same per-session uniform stream and must emit
+  identical tokens — with the fused path shipping ZERO full-vocab
+  logits rows.
+* **Capability-gated**: rolling sliding-window slots cannot roll back
+  (the tail already overwrote window history), so ``enable_spec``
+  refuses exactly where ``can_handoff`` does.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as tr
+from repro.serving import Engine, EngineConfig
+from repro.serving.draft import NGramDraft, ScriptedDraft
+from repro.serving.sampling import SamplingParams
+
+KEY = jax.random.key(7)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _engine(cfg, params, paged=False, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("chunk_tokens", 16)
+    kw.setdefault("keep_last_logits", False)
+    return Engine(cfg, params, EngineConfig(paged_kv=paged, **kw))
+
+
+def _spec_run(eng, prompt, n, sampling=None):
+    eng.open_session(0)
+    if sampling is not None:
+        eng.set_sampling(0, sampling)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    out, cur = [t0], t0
+    while len(out) < n:
+        got = eng.spec_step([(0, cur)], max_new={0: n - len(out)})[0]
+        assert 1 <= len(got) <= n - len(out)
+        out.extend(got)
+        cur = got[-1]
+    return out[:n]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_greedy_spec_lossless(smoke, paged):
+    """Greedy spec == plain decode, token for token, whatever fraction
+    of the drafts is garbage — on slot AND paged arenas."""
+    cfg, params = smoke
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, 12)
+
+    eng = _engine(cfg, params, paged)
+    eng.open_session(0)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    base = [t0] + eng.decode_batch([0], [t0], steps=14)[0]
+
+    for accept in (1.0, 0.0):
+        eng = _engine(cfg, params, paged)
+        eng.enable_spec(ScriptedDraft({0: base}, accept=accept,
+                                      vocab=cfg.vocab_size, seed=3), k=4)
+        got = _spec_run(eng, prompt, 15)
+        assert got == base, (paged, accept)
+        st = eng.stats()
+        assert st["arena_gathers"] == 0 and st["arena_scatters"] == 0
+        assert st["logits_rows_shipped"] == 0
+        assert st["spec_dispatches"] > 0
+        assert st["tokens_accepted"] <= st["tokens_drafted"]
+        if accept == 1.0:
+            # perfect drafts: every dispatch commits the full k+1 block
+            assert st["spec_tokens_per_dispatch"] > 1.8
+            assert st["spec_acceptance"] == 1.0
+        if paged:
+            eng.arena.audit()   # rollback kept refcounts coherent
+
+
+def test_ngram_spec_lossless(smoke):
+    """A real (oracle-free) proposer must still be lossless — the
+    n-gram draft guesses from the observed stream, acceptance filters."""
+    cfg, params = smoke
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, cfg.vocab_size, 10)
+    eng = _engine(cfg, params)
+    eng.open_session(0)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    base = [t0] + eng.decode_batch([0], [t0], steps=12)[0]
+
+    eng = _engine(cfg, params)
+    eng.enable_spec(NGramDraft(n=3), k=4)
+    assert _spec_run(eng, prompt, 13) == base
+
+
+def test_sampled_spec_host_fused_parity(smoke):
+    """Rejection sampling under temperature/top-k/top-p/bias: the
+    host-logits verify path and the fused kernel path draw from one
+    rng protocol and must produce the SAME stream; only the host path
+    ships logits rows."""
+    cfg, params = smoke
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(1, cfg.vocab_size, 9)
+    sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=7,
+                        logit_bias={3: 2.0})
+    streams, stats = {}, {}
+    for fused in (False, True):
+        eng = _engine(cfg, params, fused_sampling=fused)
+        # an arbitrary (wrong) script: acceptance will be near zero, so
+        # the rejection-resample arm is what parity exercises here
+        script = list(np.random.default_rng(99)
+                      .integers(1, cfg.vocab_size, 40))
+        eng.enable_spec(ScriptedDraft({0: script}, accept=1.0,
+                                      vocab=cfg.vocab_size, seed=0), k=3)
+        streams[fused] = _spec_run(eng, prompt, 12, sampling=sp)
+        stats[fused] = eng.stats()
+    assert streams[False] == streams[True]
+    assert stats[True]["logits_rows_shipped"] == 0
+    assert stats[True]["fused_sample_steps"] > 0
+    assert stats[False]["logits_rows_shipped"] > 0
+
+
+def test_spec_capability_gating(smoke):
+    """Rolling sliding-window arenas cannot truncate (the §7 slot
+    writes modularly) — enable_spec must refuse, exactly like
+    can_handoff."""
+    cfg, params = smoke
+    eng = _engine(cfg, params)
+    assert eng.can_spec
+    wcfg = get_smoke("mixtral-8x7b")        # sliding_window = 32
+    wparams, _ = tr.init_params(wcfg, jax.random.key(1))
+    weng = Engine(wcfg, wparams, EngineConfig(
+        num_slots=4, max_len=96, chunk_tokens=16))
+    assert not weng.can_spec
+    with pytest.raises(AssertionError):
+        weng.enable_spec(NGramDraft(), k=4)
+
+
+def test_spec_counters_and_session_stats(smoke):
+    """Engine.stats() exposes the §10 counters, per-session acceptance
+    included."""
+    cfg, params = smoke
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab_size, 8)
+    eng = _engine(cfg, params)
+    eng.open_session(0)
+    t0 = eng.prefill_packed([0], [prompt])[0]
+    base = [t0] + eng.decode_batch([0], [t0], steps=10)[0]
+
+    eng = _engine(cfg, params)
+    eng.enable_spec(ScriptedDraft({0: base}, accept=1.0,
+                                  vocab=cfg.vocab_size, seed=0), k=4)
+    _spec_run(eng, prompt, 11)
+    st = eng.stats()
+    assert st["tokens_drafted"] > 0
+    assert st["tokens_accepted"] == st["tokens_drafted"]
+    assert st["spec_committed"] == 10
+    by = st["spec_by_session"][0]
+    assert by["drafted"] == st["tokens_drafted"]
+    assert by["acceptance"] == 1.0

@@ -1,0 +1,161 @@
+"""Truncate-then-extend round-trip properties (DESIGN.md §10).
+
+Speculative decoding over-writes k + 1 rows per verify segment and rolls
+the rejected tail back via ``arena.truncate``.  This machine drives both
+arena layouts through random speculate/commit/rollback cycles and
+asserts the §10 rollback invariants:
+
+  * slot arena — truncate is pure length bookkeeping: any
+    speculate-by-k / accept-c cycle lands at exactly h + c, and
+    out-of-range truncates refuse;
+  * paged arena — ``audit()`` holds after every cycle (refcounts equal
+    counted holders, free list exactly the rc==0 pages); a reject-all
+    cycle that triggered no COW restores the ENTIRE bookkeeping state
+    (pages, tokens, refcounts, free list) bit-for-bit;
+  * fork safety — a forked child's rollback (even to zero) never frees
+    a page the parent still holds, and the parent's page table and
+    cached ids survive verbatim.
+
+Runs under hypothesis (shrinking, CI) AND as a seeded random replay
+(no extra deps, always on) — the test_paged_pages pattern.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import KVArena, PagedKVArena
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NUM_PAGES = 12
+PS = 4
+MAX_LEN = 34            # 8 pages per session, usable history = 32
+
+_SLOT_ARENA = None
+
+
+def _slot_arena() -> KVArena:
+    """One real (device-backed) slot arena, shared across examples —
+    truncate only touches bookkeeping, so examples reset via free()."""
+    global _SLOT_ARENA
+    if _SLOT_ARENA is None:
+        from repro.configs import get_smoke
+        _SLOT_ARENA = KVArena(get_smoke("qwen3-4b"), num_slots=2,
+                              max_len=32)
+    return _SLOT_ARENA
+
+
+def _snapshot(ar: PagedKVArena):
+    return (sorted(ar._free), list(ar._refcount),
+            {s: list(p) for s, p in ar._pages.items()},
+            {s: list(t) for s, t in ar._tokens.items()},
+            dict(ar.lengths))
+
+
+def _commit(ar: PagedKVArena, s: int, toks) -> None:
+    if toks:
+        ar.prepare_extend(s, len(toks))
+    ar.commit(s, list(toks))
+
+
+def _drive_slot(rng: np.random.Generator) -> None:
+    ar = _slot_arena()
+    ar.alloc(0)
+    try:
+        h = 0
+        for _ in range(24):
+            k = int(rng.integers(1, 6))
+            if h + k > ar.max_len - 2:
+                ar.truncate(0, 0)
+                h = 0
+                continue
+            ar.set_length(0, h + k)          # the verify write
+            c = int(rng.integers(0, k + 1))  # accepted prefix
+            ar.truncate(0, h + c)            # reject the tail
+            assert ar.length(0) == h + c
+            h += c
+        with pytest.raises(ValueError):
+            ar.truncate(0, h + 1)            # beyond the valid length
+        with pytest.raises(ValueError):
+            ar.truncate(0, -1)
+    finally:
+        ar.free(0)
+
+
+def _drive_paged(rng: np.random.Generator) -> None:
+    ar = PagedKVArena(None, NUM_PAGES, PS, MAX_LEN)
+    ar.open(0)
+    _commit(ar, 0, [int(t) for t in rng.integers(1, 50,
+                                                 int(rng.integers(1, 9)))])
+    ar.audit()
+    forked = False
+    for _ in range(12):
+        op = int(rng.integers(0, 3))
+        s = 1 if forked and rng.integers(0, 2) else 0
+        h = ar.length(s)
+        if op == 0 and not forked and h >= PS:
+            ar.fork(0, 1)
+            forked = True
+            ar.audit()
+        elif op == 1:
+            # speculative cycle: over-extend by k, accept c, roll back
+            k = int(rng.integers(1, 6))
+            if h + k > MAX_LEN - 2 or ar.free_pages < -(-k // PS) + 1:
+                continue
+            before = _snapshot(ar)
+            cow_before = ar.pages_cow_forked
+            ar.prepare_extend(s, k)          # the verify write
+            c = int(rng.integers(0, k + 1))
+            ar.commit(s, [int(t) for t in rng.integers(1, 50, c)])
+            ar.truncate(s, h + c)            # reject the tail
+            ar.audit()
+            assert ar.length(s) == h + c
+            if c == 0 and ar.pages_cow_forked == cow_before:
+                # reject-all with no COW: a perfect bookkeeping no-op —
+                # over-allocated pages returned, refcounts restored
+                assert _snapshot(ar) == before
+        else:
+            if h + 1 <= MAX_LEN - 2 and ar.free_pages > 1:
+                _commit(ar, s, [int(rng.integers(1, 50))])
+                ar.audit()
+    if forked:
+        # fork safety: the child's full rollback must not free pages
+        # the parent still holds, nor disturb the parent's table
+        parent_pages = list(ar._pages[0])
+        parent_toks = list(ar._tokens[0])
+        ar.truncate(1, 0)
+        ar.audit()
+        for p in parent_pages:
+            assert ar._refcount[p] >= 1, f"shared page {p} freed"
+        assert ar._pages[0] == parent_pages
+        assert ar._tokens[0] == parent_toks
+        ar.free(1)
+    ar.free(0)
+    ar.audit()
+
+
+# ------------------------------------------------------------ hypothesis
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_slot_truncate_roundtrip_hypothesis(seed):
+        _drive_slot(np.random.default_rng(seed))
+
+    @given(seed=st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_paged_truncate_roundtrip_hypothesis(seed):
+        _drive_paged(np.random.default_rng(seed))
+
+
+# ------------------------------------------------------- seeded replay
+def test_slot_truncate_roundtrip_replay():
+    for seed in range(30):
+        _drive_slot(np.random.default_rng(seed))
+
+
+def test_paged_truncate_roundtrip_replay():
+    for seed in range(40):
+        _drive_paged(np.random.default_rng(seed))
