@@ -8,6 +8,7 @@ queues   — §3.2 dual-queue LP/SP classification
 scheduler— §3.2 temporal/spatial policies + serving modes + ablations
 controller — Algorithm 2 instance-pressure controller
 slo      — TTFT/violation metrics
+faults   — §11 deterministic chaos injection (FaultPlan/FaultInjector)
 """
 from repro.core.boundary import LatencyModel, fit, roofline_boundary, H200_QWEN32B  # noqa: F401
 from repro.core.buckets import Bucket, BucketGrid  # noqa: F401
@@ -23,4 +24,6 @@ from repro.core.routing import (EngineView, LeastLoadedRouter,  # noqa: F401
                                 LengthAwareRouter, RoundRobinRouter,
                                 RouteRequest, Router, make_router)
 from repro.core.slo import SLOTracker, SLOReport, percentile  # noqa: F401
+from repro.core.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                               FaultPlan)
 from repro.core import queueing  # noqa: F401

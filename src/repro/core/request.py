@@ -28,6 +28,13 @@ class Request:
     reusable_prefix: int = 0
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
+    # fault tolerance (DESIGN.md §11): a recovery request is the synthetic
+    # re-prefill that reconstructs a crashed engine's session on a
+    # survivor — trackers count it as `recovered`, not as client traffic;
+    # `rejected` marks a submit shed by the admission gate (never queued)
+    recovery: bool = False
+    rejected: bool = False
+
     # runtime bookkeeping (filled by scheduler/engine/sim)
     dispatch_time: Optional[float] = None
     finish_time: Optional[float] = None

@@ -34,6 +34,10 @@ class EngineView:
     engine_id: int
     role: str = "general"          # "prefill" | "decode" | "general"
     alive: bool = True
+    # §11 failure model: "healthy" | "degraded" | "dead".  Dead engines
+    # are never routed to; degraded ones (recent transient faults) are
+    # eligible only when no healthy engine is.
+    health: str = "healthy"
     queue_len: int = 0             # queued requests (policy backlog)
     backlog_tokens: int = 0        # queued prefill tokens
     active_decodes: int = 0        # sessions mid-generation
@@ -74,12 +78,16 @@ class Router:
     @staticmethod
     def _eligible(views: Sequence[EngineView],
                   exclude: FrozenSet[int]) -> List[EngineView]:
-        out = [v for v in views if v.alive and v.engine_id not in exclude]
+        live = [v for v in views if v.alive and v.health != "dead"]
+        out = [v for v in live if v.engine_id not in exclude]
         if not out:
-            out = [v for v in views if v.alive]
+            out = live
         if not out:
             raise RuntimeError("no alive engines to route to")
-        return out
+        # prefer fully-healthy engines; degraded ones (recent transient
+        # faults, §11) only take traffic when nothing healthy is eligible
+        healthy = [v for v in out if v.health == "healthy"]
+        return healthy or out
 
 
 class RoundRobinRouter(Router):

@@ -39,6 +39,12 @@ class SLOReport:
     spec_dispatches: int = 0
     spec_acceptance: float = 0.0        # accepted / drafted
     spec_tokens_per_dispatch: float = 0.0
+    # fault tolerance + admission control (DESIGN.md §11) — zeros on a
+    # fault-free, accept-everything run
+    rejected: int = 0                   # shed by the admission gate
+    retried: int = 0                    # re-enqueued / re-routed attempts
+    recovered_sessions: int = 0         # re-prefill-reconstructed sessions
+    abandoned: int = 0                  # dropped at max_wall expiry
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -77,6 +83,35 @@ class SLOTracker:
         self.tokens_accepted = 0
         self.spec_dispatches = 0
         self.spec_committed = 0
+        # fault tolerance + admission control (DESIGN.md §11)
+        self.rejected = 0
+        self.retried = 0
+        self.recovered = 0
+        self.abandoned = 0
+
+    def note_rejected(self, n: int = 1) -> None:
+        """Admission gate shed ``n`` submits (fail-fast, never queued)."""
+        self.rejected += n
+
+    def note_retried(self, n: int = 1) -> None:
+        """``n`` dispatch/handoff/submit attempts were re-tried."""
+        self.retried += n
+
+    def note_recovered(self, n: int = 1) -> None:
+        """``n`` sessions were re-prefill-reconstructed after a crash."""
+        self.recovered += n
+
+    def note_abandoned(self, r: Optional[Request] = None) -> None:
+        """A still-queued request was dropped (max_wall expiry).  It
+        never finished, so a deadline it carried counts as violated —
+        abandoning must not flatter the violation rate."""
+        self.abandoned += 1
+        if r is not None:
+            ddl = r.deadline if r.deadline is not None else (
+                None if self.slo is None else r.arrival + self.slo)
+            if ddl is not None:
+                self._denom += 1
+                self._viol += 1
 
     def note_spec(self, drafted: int, accepted: int, dispatches: int,
                   committed: int = 0) -> None:
@@ -89,6 +124,12 @@ class SLOTracker:
         self.spec_committed = int(committed)
 
     def record(self, r: Request) -> None:
+        if getattr(r, "recovery", False):
+            # a synthetic re-prefill reconstructing a crashed session:
+            # count the recovery, but keep it out of TTFT/violation
+            # stats — its "arrival" is the crash time, not a client's
+            self.recovered += 1
+            return
         self.n_recorded += 1
         t = r.ttft()
         if t is not None:
@@ -131,6 +172,10 @@ class SLOTracker:
             out.tokens_accepted += t.tokens_accepted
             out.spec_dispatches += t.spec_dispatches
             out.spec_committed += t.spec_committed
+            out.rejected += t.rejected
+            out.retried += t.retried
+            out.recovered += t.recovered
+            out.abandoned += t.abandoned
             out.finished.extend(t.finished)
         if len(out.finished) > 2 * out.max_finished:
             out.finished.sort(key=lambda r: r.finish_time or 0.0)
@@ -160,4 +205,8 @@ class SLOTracker:
                              / max(1, self.tokens_drafted)),
             spec_tokens_per_dispatch=(self.spec_committed
                                       / max(1, self.spec_dispatches)),
+            rejected=self.rejected,
+            retried=self.retried,
+            recovered_sessions=self.recovered,
+            abandoned=self.abandoned,
         )

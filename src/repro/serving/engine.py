@@ -233,6 +233,19 @@ class Engine:
         # non-greedy steps served by the fused sampling kernel (no
         # full-vocab logits transfer)
         self.fused_sample_steps = 0
+        # §11 failure model: a crashed engine must never be dispatched
+        # to again — the cluster marks it dead after evacuation and
+        # every compute entry point refuses (host-side bookkeeping like
+        # history()/sampling reads stays readable: that state survives
+        # a device loss in the serving process).
+        self.dead = False
+
+    def mark_dead(self) -> None:
+        self.dead = True
+
+    def _check_alive(self) -> None:
+        if self.dead:
+            raise RuntimeError("engine is dead: dispatch refused (§11)")
 
     # ------------------------------------------------------------ session
     def open_session(self, session: int) -> None:
@@ -297,6 +310,7 @@ class Engine:
         the destination needs (params, the replayable rng, last
         logits).  The source keeps the session; the cluster closes it
         after a successful import."""
+        self._check_alive()
         assert self.can_handoff, \
             "KV handoff requires a pure-attention, non-rolling arena"
         h = self.history(session)
@@ -318,6 +332,7 @@ class Engine:
         restore the sampling state.  Any host array among the KV leaves
         is counted into ``handoff_host_bytes`` — benches assert it
         stays 0."""
+        self._check_alive()
         assert self.can_handoff, \
             "KV handoff requires a pure-attention, non-rolling arena"
         assert payload.paged == self._paged, \
@@ -548,6 +563,7 @@ class Engine:
         for off-ladder totals or over-depth batches).  An explicit
         ``bucket`` pins the dense (L, B) graph path.
         Returns {session: first_sampled_token}."""
+        self._check_alive()
         if self.packed_executor is not None and (
                 bucket is None or not self._dense_ok):
             # a pinned (L, B) graph bucket has no meaning on paged /
@@ -664,6 +680,7 @@ class Engine:
         absent, the mix overflows ``max_seqs``, or the total is
         off-ladder.  Returns a :class:`MixedStepResult`."""
         prefills, decodes = list(prefills), list(decodes)
+        self._check_alive()
         n_p, n_d = len(prefills), len(decodes)
         assert n_p + n_d > 0, "empty mixed step"
         sess_all = [s for s, _ in prefills] + [s for s, _ in decodes]
@@ -1276,6 +1293,7 @@ class Engine:
         in place — no whole-slot gather/scatter.  Falls back to the
         dense gather path for non-attention architectures or ticks that
         overflow the ladder."""
+        self._check_alive()
         dx = self.decode_executor
         bucket = dx.bucket_for(len(sessions)) if dx is not None else None
         if bucket is None:

@@ -48,12 +48,28 @@ class ServeLoop:
     def __init__(self, engine: Engine, policy: BasePolicy,
                  slo_ttft: Optional[float] = 0.4,
                  clock: Callable[[], float] = time.monotonic,
-                 refit_every: int = 16):
+                 refit_every: int = 16,
+                 max_queue: Optional[int] = None,
+                 admission=None):
         self.engine = engine
         self.policy = policy
         self.clock = clock
         self.tracker = SLOTracker(slo_ttft)
         self.slo = slo_ttft
+        # §11 admission control: a bounded intake queue plus an optional
+        # CostModel-shaped estimator (anything with predicted_ttft(l, h,
+        # queue_len, backlog_tokens, active_decodes)); a submit whose
+        # predicted completion already violates its deadline is rejected
+        # at the door.  Both default OFF — accept-everything.
+        self.max_queue = max_queue
+        self.admission = admission
+        # §11 fault seams, wired by ServeCluster: a FaultInjector whose
+        # dispatch_fails(engine_id, tick) is consulted before every
+        # dispatch, plus this loop's id and a monotone tick counter
+        self.faults = None
+        self.engine_id = 0
+        self.ticks = 0
+        self.dispatch_faults = 0
         self._tokens: Dict[int, PendingRequest] = {}
         self._outstanding = 0
         self.refit_every = refit_every
@@ -71,6 +87,15 @@ class ServeLoop:
         # estimate for a turn enqueued behind another turn of the same
         # session is engine.history + this
         self._session_pending: Dict[int, int] = {}
+        # §11 recovery transcript: the EXACT token sequence the engine
+        # cache holds per session (committed turn prompts + generated
+        # tokens whose KV has been written), plus the one sampled-but-
+        # unwritten "pending" token (its KV lands when it is fed as the
+        # next decode input).  Re-prefilling _cache_tokens on a survivor
+        # reproduces the crashed cache bit-for-bit; feeding the recorded
+        # pending token resumes generation exactly where it stopped.
+        self._cache_tokens: Dict[int, List[int]] = {}
+        self._cache_pending: Dict[int, int] = {}
 
     def _dec_pending(self, session: int, n: int) -> None:
         if n <= 0 or session not in self._session_pending:
@@ -97,6 +122,8 @@ class ServeLoop:
         self.first_tokens.pop(session, None)
         self._last_emit.pop(session, None)
         self._session_pending.pop(session, None)
+        self._cache_tokens.pop(session, None)
+        self._cache_pending.pop(session, None)
 
     # ------------------------------------------------------------ intake
     def submit(self, session: int, tokens: np.ndarray,
@@ -110,11 +137,21 @@ class ServeLoop:
         the bucketed decode path alike — every path ends in the same
         logits gather."""
         now = self.clock()
+        ddl = deadline if deadline is not None else \
+            (now + self.slo if self.slo else None)
+        if self.max_queue is not None or self.admission is not None:
+            r = self._admission_gate(session, tokens, now, ddl)
+            if r is not None:
+                return r
         # a new turn preempts any generation still running on the session
         # — including decode budgets of EARLIER turns still queued: those
         # tokens will never be generated, so the pending-token estimate
         # must forget them too
         preempted = self.active_decodes.pop(session, 0)
+        # the preempted turn's sampled-but-unwritten token never reaches
+        # the cache — the new turn prefills right after the committed
+        # history, so the recovery transcript must forget it too
+        self._cache_pending.pop(session, None)
         for p in self._tokens.values():
             if p.req.session == session and p.decode_tokens:
                 preempted += p.decode_tokens
@@ -144,9 +181,7 @@ class ServeLoop:
         tokens = prompt[reusable:]
         r = Request(new_tokens=len(tokens),
                     history_tokens=hist + reusable,
-                    arrival=now,
-                    deadline=deadline if deadline is not None else
-                    (now + self.slo if self.slo else None),
+                    arrival=now, deadline=ddl,
                     session=session, reusable_prefix=reusable)
         self._tokens[r.rid] = PendingRequest(r, tokens, decode_tokens,
                                              prompt=prompt,
@@ -155,6 +190,35 @@ class ServeLoop:
             pending + len(tokens) + decode_tokens
         self.policy.enqueue(r, now)
         self._outstanding += 1
+        return r
+
+    def _admission_gate(self, session: int, tokens: np.ndarray,
+                        now: float, ddl: Optional[float]
+                        ) -> Optional[Request]:
+        """§11 admission control, checked BEFORE any submit side effect
+        (no session opened, no prefix adopted, nothing queued).  Returns
+        the rejected Request (``rejected=True``, never enqueued) when the
+        submit should be shed, else None.  Two triggers: a full bounded
+        queue, and a predicted TTFT that already violates the deadline —
+        serving a guaranteed violation only delays everyone behind it."""
+        reject = False
+        if self.max_queue is not None and \
+                self.policy.queue_len() >= self.max_queue:
+            reject = True
+        elif self.admission is not None and ddl is not None:
+            hist = self.engine.history(session) + \
+                self._session_pending.get(session, 0)
+            eta = now + self.admission.predicted_ttft(
+                len(tokens), hist, self.policy.queue_len(),
+                self.policy.backlog_tokens(), len(self.active_decodes))
+            reject = eta > ddl
+        if not reject:
+            return None
+        r = Request(new_tokens=len(np.asarray(tokens)),
+                    history_tokens=self.engine.history(session),
+                    arrival=now, deadline=ddl, session=session,
+                    rejected=True)
+        self.tracker.note_rejected()
         return r
 
     def withdraw(self, rid: int) -> Optional[PendingRequest]:
@@ -189,6 +253,9 @@ class ServeLoop:
         self.generated.setdefault(session, []).append(first_token)
         self.last_token[session] = first_token
         self._last_emit[session] = now
+        # the freshly sampled TTFT token: emitted, but its KV is written
+        # only when it is fed as the next decode input
+        self._cache_pending[session] = first_token
         if budget > 0:
             self.active_decodes[session] = budget
 
@@ -205,6 +272,16 @@ class ServeLoop:
             return
         self.generated.setdefault(session, []).extend(tokens)
         self.last_token[session] = tokens[-1]
+        # recovery transcript (§11): committing m tokens means the old
+        # pending token plus the first m-1 new ones had their KV written
+        # (each as a dispatch input row); the last new token becomes the
+        # next pending.  Holds for plain 1-token ticks and speculative
+        # multi-commits alike.
+        pend = self._cache_pending.get(session)
+        if pend is not None:
+            seq = [pend] + tokens
+            self._cache_tokens.setdefault(session, []).extend(seq[:-1])
+            self._cache_pending[session] = seq[-1]
         gap = (now - self._last_emit.get(session, now)) / m
         self.tpot_samples.extend([gap] * m)
         if len(self.tpot_samples) > 2 * self.max_tpot_samples:
@@ -216,6 +293,16 @@ class ServeLoop:
             self.active_decodes[session] = left
         else:
             self.active_decodes.pop(session, None)
+
+    def _commit_turn(self, session: int, pr: PendingRequest) -> None:
+        """Recovery transcript (§11): a turn's prompt enters the cache
+        atomically when its prefill COMPLETES (last chunk included) —
+        adopted prefix plus suffix, i.e. the full original prompt.
+        Mid-turn partial chunks are deliberately not tracked: a crash
+        mid-prefill restarts the turn from its full prompt."""
+        full = pr.prompt if pr.prompt is not None else pr.tokens
+        self._cache_tokens.setdefault(session, []).extend(
+            int(t) for t in np.asarray(full).tolist())
 
     def _fusable_decodes(self, exclude: Tuple[int, ...] = ()
                          ) -> List[Tuple[int, int]]:
@@ -284,6 +371,7 @@ class ServeLoop:
             self.tracker.record(r)
             pr = self._tokens.pop(r.rid)     # prefill served: drop prompt
             self._dec_pending(r.session, len(pr.tokens))
+            self._commit_turn(r.session, pr)
             self._start_decoding(r.session, firsts[r.session],
                                  pr.decode_tokens, done)
             self._outstanding -= 1
@@ -324,6 +412,7 @@ class ServeLoop:
             r.finish_time = done
             self.tracker.record(r)
             self._tokens.pop(r.rid, None)    # all chunks served
+            self._commit_turn(r.session, pr)
             self._start_decoding(r.session, firsts[r.session],
                                  pr.decode_tokens, done)
             self._outstanding -= 1
@@ -363,10 +452,27 @@ class ServeLoop:
         wake_time)`` so multi-engine drivers (ServeCluster) can
         interleave many loops without nesting their drain loops."""
         now = self.clock()
+        self.ticks += 1
         self.policy.note_decode_backlog(
             len(self.active_decodes),
             tokens_per_decode=self._tokens_per_decode())
         work, wake = self.policy.next_work(now)
+        if work is not None and self.faults is not None and \
+                self.faults.dispatch_fails(self.engine_id, self.ticks):
+            # §11 injected dispatch exception: the engine never ran, so
+            # the work re-enters the queue untouched.  A Batch was popped
+            # by next_work — push its requests back (state intact: they
+            # are still in _tokens, never dispatched).  A ChunkWork
+            # retries for free: skipping on_complete leaves the chunk
+            # progress unadvanced, so the same chunk is offered again.
+            self.dispatch_faults += 1
+            if isinstance(work, Batch) and work.requests:
+                for r in work.requests:
+                    self.policy.enqueue(r, now)
+                self.tracker.note_retried(len(work.requests))
+            else:
+                self.tracker.note_retried(1)
+            return True, wake
         did = True
         if isinstance(work, Batch) and work.requests:
             self._run_batch(work)
@@ -399,7 +505,10 @@ class ServeLoop:
 
     def run_until_idle(self, max_wall: float = 60.0) -> None:
         """Drive the unified tick until every prefill AND every session's
-        decode budget is drained (or max_wall elapses)."""
+        decode budget is drained.  If ``max_wall`` expires first, the
+        still-queued prefills are ABANDONED — drained and recorded in the
+        tracker (counter + violation accounting) instead of silently
+        left behind as they used to be."""
         start = self.clock()
         while self.has_work and self.clock() - start < max_wall:
             did, wake = self.tick()
@@ -409,6 +518,65 @@ class ServeLoop:
                     time.sleep(max(0.0, min(wake - now, 0.01)))
                 else:
                     time.sleep(0.0005)
+        if self._outstanding > 0:
+            self.abandon_pending()
+
+    def abandon_pending(self) -> int:
+        """Drop every still-queued prefill, recording each as abandoned
+        (§11: a timeout must never LOSE requests untracked).  In-flight
+        decode budgets stay — their requests already produced a first
+        token and were recorded; a later drive can resume them."""
+        n = 0
+        for r in self.policy.drain():
+            pr = self._tokens.pop(r.rid, None)
+            self._outstanding -= 1
+            if pr is not None:
+                self._dec_pending(r.session,
+                                  len(pr.tokens) + pr.decode_tokens)
+            self.tracker.note_abandoned(r)
+            n += 1
+        return n
+
+    # --------------------------------------------------------- recovery
+    def restore_session(self, session: int, cache_tokens: List[int],
+                        pending: Optional[int], generated: List[int],
+                        budget: int, sampling=None,
+                        first_token: Optional[int] = None) -> None:
+        """Rebuild a crashed engine's session on THIS loop by re-prefill
+        reconstruction (§11): replay the exact cache token sequence the
+        dead arena held, then resume decoding from the recorded pending
+        token.  On a paged engine the radix prefix index absorbs any
+        indexed prefix, so recovery costs only the uncached suffix (§8).
+        Greedy sessions continue bit-identically to a fault-free run:
+        the cache contents and the pending input token are both exact.
+        The reconstruction dispatches synchronously — bypassing the
+        policy queue — so no queued turn can prefill against a
+        half-rebuilt cache."""
+        now = self.clock()
+        arr = np.asarray(cache_tokens, dtype=np.int64)
+        self.engine.open_session(session)
+        self.engine.set_sampling(session, sampling)
+        if len(arr):
+            reusable = self.engine.adopt_prefix(session, arr)
+            suffix = arr[reusable:]
+            if len(suffix):
+                # chunked re-prefill through the normal packed path; the
+                # recomputed final sample is discarded — the recorded
+                # pending token is the ground truth (it was already
+                # emitted to the client before the crash)
+                self.engine.prefill_long(session, suffix)
+        self._cache_tokens[session] = list(cache_tokens)
+        if generated:
+            self.generated[session] = list(generated)
+        if first_token is not None:
+            self.first_tokens[session] = first_token
+        if pending is not None:
+            self.last_token[session] = pending
+            self._cache_pending[session] = pending
+        self._last_emit[session] = now
+        if budget > 0 and pending is not None:
+            self.active_decodes[session] = budget
+        self.tracker.note_recovered()
 
     def decode(self, session: int, steps: int) -> List[int]:
         """Manual greedy continuation (legacy API).  Keeps the loop's
@@ -424,4 +592,9 @@ class ServeLoop:
             self.generated.setdefault(session, []).extend(toks)
             self.last_token[session] = toks[-1]
             self._last_emit[session] = now
+            pend = self._cache_pending.get(session)
+            if pend is not None and toks:
+                self._cache_tokens.setdefault(session, []).extend(
+                    [pend] + toks[:-1])
+                self._cache_pending[session] = toks[-1]
         return [first] + toks

@@ -75,6 +75,36 @@ class CostModel:
         """Migrate ``ctx`` cached tokens engine→engine (§9)."""
         return self.handoff_launch + self.handoff_per_token * max(ctx, 0)
 
+    def predicted_wait(self, queue_len: int, backlog_tokens: int,
+                       active_decodes: int = 0,
+                       batch_hint: int = 8) -> float:
+        """Admission-control queue-wait estimate (§11): how long the
+        work already queued ahead keeps the engine busy.  The backlog
+        drains as packed steps of roughly ``batch_hint`` requests each —
+        one weight read + launch per step (the AWD amortization), linear
+        compute / KV writes per queued token under the roofline max, and
+        the resident decode backlog stealing decode_per_seq per step.
+        Deliberately coarse: the gate needs a monotone, conservative
+        ordering of "how doomed is this submit", not a simulation."""
+        if queue_len <= 0 and backlog_tokens <= 0:
+            return 0.0
+        steps = -(-max(queue_len, 1) // max(batch_hint, 1))
+        comp = self.beta * backlog_tokens
+        mem = steps * self.weight_read + self.w_tok * backlog_tokens
+        return (steps * self.graph_launch + max(comp, mem)
+                + steps * self.decode_per_seq * max(active_decodes, 0))
+
+    def predicted_ttft(self, l: int, h: int, queue_len: int,
+                       backlog_tokens: int,
+                       active_decodes: int = 0) -> float:
+        """Predicted TTFT for a submit arriving NOW: queue wait ahead of
+        it plus its own single-request service time.  The §11 admission
+        gate rejects when ``now + predicted_ttft > deadline`` — a
+        guaranteed violation is cheaper refused than served late."""
+        return (self.predicted_wait(queue_len, backlog_tokens,
+                                    active_decodes)
+                + self.single(l, h))
+
     @property
     def tail_coef(self) -> float:
         """Linear cost of one tail/pad row (β_tail, falling back to β)."""

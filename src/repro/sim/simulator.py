@@ -78,6 +78,16 @@ class SimConfig:
     speculative: bool = False
     spec_k: int = 4
     spec_accept: float = 0.7
+    # §11 fault tolerance: when an instance fails, its in-flight decode
+    # sessions are recovered by PRICED re-prefill reconstruction on a
+    # survivor (a synthetic recovery request of the session's full
+    # cached context — mirroring ServeCluster's recovery path) instead
+    # of being silently dropped as they used to be.
+    recovery: bool = True
+    # §11 SLO-aware admission control: reject an arrival whose
+    # CostModel-predicted TTFT already violates its deadline (fail-fast
+    # beats a guaranteed violation).  Off = accept everything.
+    admission: bool = False
 
 
 class _Instance:
@@ -145,6 +155,10 @@ class ClusterSim:
         self.pools = pools or {}
         self.handoffs = 0
         self.handoff_tokens = 0
+        # §11: optional FaultInjector (set by apply_faults) + counters
+        self.faults = None
+        self.handoff_retries = 0
+        self.recovered_sessions = 0
         self._decode_ladder = DecodeBucketLadder(self.cfg.decode_buckets)
         self.tracker = SLOTracker(self.cfg.slo_ttft)
         self._events: List[Tuple[float, int, str, object]] = []
@@ -185,6 +199,20 @@ class ClusterSim:
     def inject_failure(self, t: float, instance: int) -> None:
         self._push(t, "fail", instance)
 
+    def apply_faults(self, plan) -> None:
+        """Map a core.faults.FaultPlan onto the simulator: crash events
+        schedule instance failures at their ``at`` time (seconds here,
+        ticks on the real cluster); transient handoff events are served
+        by an injector consulted on the §9 handoff path (retried with
+        backoff).  Dispatch/stall faults are engine-loop seams with no
+        sim analogue — the sim's "dispatch" IS the priced service — so
+        they are ignored."""
+        from repro.core.faults import CRASH, FaultInjector
+        for ev in plan.events:
+            if ev.kind == CRASH and 0 <= ev.engine < len(self.instances):
+                self.inject_failure(ev.at, ev.engine)
+        self.faults = FaultInjector(plan)
+
     def inject_join(self, t: float, instance_speed: Tuple[int, float]) -> None:
         self._push(t, "join", instance_speed)
 
@@ -221,6 +249,30 @@ class ClusterSim:
                 members = alive
             return min(members, key=lambda i: i.policy.backlog_tokens())
         return None  # shared
+
+    # ---------------------------------------------------------- admission
+    def _admit(self, r: Request, policy: BasePolicy,
+               inst: Optional[_Instance] = None) -> bool:
+        """§11 SLO-aware admission gate (mirrors ServeLoop's): reject
+        when the predicted TTFT — queue wait ahead plus own service —
+        already violates the deadline.  Recovery re-prefills are never
+        rejected (shedding one loses a session, not just a turn)."""
+        if not self.cfg.admission or r.recovery:
+            return True
+        ddl = r.deadline if r.deadline is not None else (
+            None if self.cfg.slo_ttft is None
+            else r.arrival + self.cfg.slo_ttft)
+        if ddl is None:
+            return True
+        eta = self.now + self.cost.predicted_ttft(
+            r.new_tokens, r.history_tokens, policy.queue_len(),
+            policy.backlog_tokens(),
+            len(inst.decode_sessions) if inst is not None else 0)
+        if eta <= ddl:
+            return True
+        r.rejected = True
+        self.tracker.note_rejected()
+        return False
 
     # ------------------------------------------------------------- engine
     def _decode_tick_time(self, ctx_lens: List[int],
@@ -376,7 +428,8 @@ class ClusterSim:
                 self.handoffs += 1
                 self.handoff_tokens += r.total_context
                 self._push(self.now + delay, "handoff",
-                           (r.decode_tokens, r.total_context))
+                           (r.decode_tokens, r.total_context,
+                            inst.idx, 0))
             else:
                 inst.decode_sessions.append((r.decode_tokens,
                                              r.total_context))
@@ -430,12 +483,14 @@ class ClusterSim:
             if kind == "arrival":
                 r: Request = data
                 if self.shared is not None:
-                    self.shared.enqueue(r, t)
-                    for inst in self.instances:
-                        self._try(inst)
+                    if self._admit(r, self.shared):
+                        self.shared.enqueue(r, t)
+                        for inst in self.instances:
+                            self._try(inst)
                 else:
                     inst = self._route(r)
-                    if inst is not None:
+                    if inst is not None and \
+                            self._admit(r, inst.policy, inst):
                         inst.policy.enqueue(r, t)
                         self._try(inst)
             elif kind == "client":
@@ -449,21 +504,51 @@ class ClusterSim:
                         r.arrival = t
                         r.session = cid
                         self._client_busy[cid] = True
+                        admitted = False
                         if self.shared is not None:
-                            self.shared.enqueue(r, t)
-                            for inst in self.instances:
-                                self._try(inst)
+                            if self._admit(r, self.shared):
+                                admitted = True
+                                self.shared.enqueue(r, t)
+                                for inst in self.instances:
+                                    self._try(inst)
                         else:
                             inst = self._route(r)
-                            if inst is not None:
+                            if inst is not None and \
+                                    self._admit(r, inst.policy, inst):
+                                admitted = True
                                 inst.policy.enqueue(r, t)
                                 self._try(inst)
+                        if not admitted:
+                            # rejected/unroutable: the closed-loop client
+                            # thinks and moves on instead of hanging
+                            self._client_busy[cid] = False
+                            self._push(self.now + self.think, "client",
+                                       cid)
             elif kind == "try":
                 self._try(self.instances[data])
             elif kind == "handoff":
                 # the migrated session's KV has landed: attach its decode
                 # to the least decode-loaded non-prefill instance
-                budget, ctx = data
+                budget, ctx, src, attempt = data
+                if self.faults is not None and \
+                        self.faults.handoff_fails(src, self.now):
+                    # §11 transient handoff failure: retry with
+                    # exponential backoff, or keep the session on the
+                    # source after max attempts (it decodes in place)
+                    self.handoff_retries += 1
+                    self.tracker.note_retried()
+                    if attempt + 1 >= 3:
+                        if 0 <= src < len(self.instances) and \
+                                self.instances[src].alive:
+                            self.instances[src].decode_sessions.append(
+                                (budget, ctx))
+                            self._try(self.instances[src])
+                    else:
+                        backoff = self.cost.handoff_launch * \
+                            (2 ** (attempt + 1))
+                        self._push(self.now + backoff, "handoff",
+                                   (budget, ctx, src, attempt + 1))
+                    continue
                 cands = [i for i in self.instances
                          if i.alive and self._role(i) != "prefill"]
                 dst = min(cands, key=lambda i: (len(i.decode_sessions),
@@ -484,20 +569,48 @@ class ClusterSim:
                 inst = self.instances[data]
                 inst.alive = False
                 # in-flight work dies with the node: the request is
-                # re-submitted (re-prefill from cached/replicated state)
+                # re-submitted (re-prefill from cached/replicated state).
+                # A ChunkWork's request ALSO still sits in the policy
+                # queue (it only leaves at the last chunk's on_complete),
+                # so the drain below must skip anything re-pushed here —
+                # a double arrival dispatches the request twice and
+                # double-records it.
+                repushed = set()
                 if isinstance(inst.current, Batch):
                     for r in inst.current.requests:
                         r.dispatch_time = None
+                        repushed.add(r.rid)
                         self._push(self.now, "arrival", r)
                 elif isinstance(inst.current, ChunkWork):
                     inst.current.req.dispatch_time = None
+                    repushed.add(inst.current.req.rid)
                     self._push(self.now, "arrival", inst.current.req)
                 inst.current, inst.busy = None, False
                 # queued requests are re-routed to surviving instances
                 if inst.policy is not None:
                     for r in inst.policy.drain():
+                        if r.rid in repushed:
+                            continue
                         r.dispatch_time = None
+                        self.tracker.note_retried()
                         self._push(self.now, "arrival", r)
+                # §11: in-flight decode sessions are recovered by PRICED
+                # re-prefill reconstruction — a synthetic recovery
+                # request replays the session's full cached context on a
+                # survivor (billed as a normal prefill of ctx tokens),
+                # then its remaining decode budget re-attaches there.
+                # Mirrors ServeCluster._recover_session; previously the
+                # sessions were silently dropped.
+                if self.cfg.recovery and \
+                        any(i.alive for i in self.instances):
+                    for budget, ctx in inst.decode_sessions:
+                        rr = Request(new_tokens=max(ctx, 1),
+                                     arrival=self.now, deadline=None,
+                                     session=-1, decode_tokens=budget,
+                                     recovery=True)
+                        self.recovered_sessions += 1
+                        self._push(self.now, "arrival", rr)
+                inst.decode_sessions = []
             elif kind == "join":
                 idx, speed = data
                 while len(self.instances) <= idx:

@@ -226,8 +226,9 @@ def test_cluster_end_to_end_with_migration(smoke, paged):
     cluster = ServeCluster(
         [_mk_loop(cfg, params, "long", paged),
          _mk_loop(cfg, params, "short", paged)],
-        LengthAwareRouter(threshold=24), roles=["prefill", "decode"])
-    assert cluster.migrate
+        LengthAwareRouter(threshold=24), roles=["prefill", "decode"],
+        migrate_decodes=True)       # force-migrate: budget 3 is below the
+    assert cluster.migrate          # §11 cost/benefit gate's breakeven
     rng = np.random.default_rng(9)
     n_tok = {0: 40, 1: 7, 2: 11, 3: 33}     # two longs, two shorts
     for s, n in n_tok.items():
