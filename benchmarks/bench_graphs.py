@@ -18,7 +18,9 @@ from repro.serving import Engine, EngineConfig
 def run() -> List[Dict]:
     cfg = get_smoke("qwen3-4b")
     params, _ = tr.init_params(cfg, jax.random.key(0))
-    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    # dense (L, B) grid capture cost is a slot/dense-baseline measurement
+    eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                           paged_kv=False))
     rows: List[Dict] = []
 
     cap = eng.executor.precapture(params, eng.arena.gather,

@@ -31,7 +31,9 @@ def _packed_vs_padded() -> List[Dict]:
     params, _ = tr.init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
 
+    # the grid arm measures the dense (L, B) baseline — pin the slot arena
     dense = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                             paged_kv=False,
                                              grid_lengths=(8, 16, 32, 64),
                                              grid_depths=(1, 2, 4)))
     packed = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,

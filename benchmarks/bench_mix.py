@@ -30,6 +30,8 @@ BENCH_WINDOW_JSON = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_window.json")
 BENCH_MULTITURN_JSON = os.path.join(os.path.dirname(__file__), "..",
                                     "BENCH_multiturn.json")
+BENCH_PAGED_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_paged.json")
 
 
 def _run(mode: str, n_inst: int, conc: int) -> float:
@@ -187,9 +189,11 @@ def _drive_decode_heavy(arena: bool, cfg, params, n_sessions: int = 6,
     from repro.sim.costmodel import decode_hbm_bytes_per_token
 
     rng = np.random.default_rng(5)
+    # slot-arena scenario by design (paged_kv pinned off): the bench
+    # contrasts the bucketed SLOT decode path against the dense gather
     eng = Engine(cfg, params, EngineConfig(
         num_slots=16, max_len=max_len, packed=arena, arena_decode=arena,
-        packed_max_seqs=8, token_buckets=(16, 32, 64),
+        paged_kv=False, packed_max_seqs=8, token_buckets=(16, 32, 64),
         decode_buckets=(1, 2, 4, 8)))
     kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
                     * np.dtype(cfg.np_dtype).itemsize)
@@ -309,9 +313,12 @@ def _drive_prefill_flood(arena: bool, cfg, params, rounds: int = 8,
     from repro.sim.costmodel import packed_hbm_bytes_per_step
 
     rng = np.random.default_rng(7)
+    # slot-arena scenario by design (paged_kv pinned off): the bench
+    # contrasts slot-map prefill against the whole-slot gather baseline
     eng = Engine(cfg, params, EngineConfig(
         num_slots=16, max_len=max_len, chunk_tokens=16, packed=True,
-        arena_prefill=arena, packed_max_seqs=8, token_buckets=(32, 64)))
+        arena_prefill=arena, paged_kv=False, packed_max_seqs=8,
+        token_buckets=(32, 64)))
     px = eng.packed_executor
     kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
                     * np.dtype(cfg.np_dtype).itemsize)
@@ -410,13 +417,15 @@ def _drive_window(windowed: bool, cfg, params, n_sessions: int = 3,
     from repro.sim.costmodel import decode_hbm_bytes_per_token
 
     rng = np.random.default_rng(11)
+    # slot-arena scenario by design (paged_kv pinned off): the bench
+    # contrasts rolling window-deep SLOTS against dense full-depth ones
     if windowed:
         ecfg = EngineConfig(num_slots=8, max_len=max_len, chunk_tokens=16,
-                            packed_max_seqs=4, token_buckets=(16, 32),
-                            decode_buckets=(1, 2, 4))
+                            paged_kv=False, packed_max_seqs=4,
+                            token_buckets=(16, 32), decode_buckets=(1, 2, 4))
     else:
         ecfg = EngineConfig(num_slots=8, max_len=max_len, packed=False,
-                            arena_decode=False)
+                            arena_decode=False, paged_kv=False)
     eng = Engine(cfg, params, ecfg)
     depth = eng.arena.arena[0]["k"].shape[2]   # actual slot depth
     kv_row_bytes = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.hdim
@@ -602,6 +611,170 @@ def multiturn_scenario(write: bool = True) -> List[Dict]:
     return rows
 
 
+def _paged_loop(cfg, params, host_pool_bytes: int = 0):
+    """Default-config PAGED serve loop (chunked long path + radix index
+    + wait-for-fill) for the §12 scenarios."""
+    from repro.core import H200_QWEN32B, Variant, make_policy
+    from repro.serving import Engine, EngineConfig
+    from repro.serving.loop import ServeLoop
+
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=6, max_len=128, page_size=8, chunk_tokens=16,
+        token_buckets=(16, 32), decode_buckets=(1, 2, 4),
+        host_pool_bytes=host_pool_bytes))
+    pol = make_policy(Variant("pla_full"), H200_QWEN32B, threshold=32,
+                      chunk_tokens=16)
+    return eng, ServeLoop(eng, pol, slo_ttft=30.0)
+
+
+def _drive_paged_chunk(chunk_matching: bool, cfg, params) -> Dict:
+    """Long-prompt multi-turn trace for chunk-level matching (§12).
+
+    Round 1: two long prompts share a 48-token prefix with different
+    tails, submitted TOGETHER — the second is cold at submit (the first
+    has not dispatched a single chunk yet), so only chunk-boundary
+    re-probes can adopt the shared pages the first request indexes
+    mid-trace.  Round 2: each conversation returns with 16 more tokens
+    under a fresh session (stateless API style) — those hit at submit
+    in both arms.  chunk_matching=False is the old submit-only probe."""
+    import numpy as np
+
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, 48)
+    tails = [rng.integers(0, cfg.vocab_size, 16) for _ in range(2)]
+    eng, loop = _paged_loop(cfg, params)
+    loop.chunk_matching = chunk_matching
+    t0 = time.perf_counter()
+    for s in range(2):
+        loop.submit(s, np.concatenate([shared, tails[s]]), decode_tokens=1)
+    loop.run_until_idle(max_wall=120.0)
+    for s in range(2):
+        loop.close_session(s)
+    for s in range(2):                       # round 2: the turn comes back
+        turn2 = np.concatenate([shared, tails[s],
+                                rng.integers(0, cfg.vocab_size, 16)])
+        loop.submit(10 + s, turn2, decode_tokens=1)
+        loop.run_until_idle(max_wall=120.0)
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "chunk_hit_tokens": st["chunk_hit_tokens"],
+        "coalesced_prefills": loop.coalesced_prefills,
+        "arena_gathers": st["arena_gathers"],
+        "arena_scatters": st["arena_scatters"],
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def _drive_paged_spill(spill: bool, cfg, params, n_convos: int = 5) -> Dict:
+    """Eviction-pressure trace at a MATCHED device pool size: stateless
+    turns over more distinct conversations than the device pool holds,
+    then every conversation returns.  spill=True demotes evicted prefix
+    pages to the host pool and promotes them back on the return hit;
+    spill=False is drop-on-evict — the return turns re-prefill."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+
+    rng = np.random.default_rng(23)
+    # num_pages pinned BELOW the trace's working set (5 convos × 3
+    # pages) so LRU eviction actually fires — the matched pool size both
+    # arms share
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=2, max_len=64, num_pages=8, page_size=8, chunk_tokens=16,
+        token_buckets=(16, 32), decode_buckets=(1, 2),
+        host_pool_bytes=(64 << 20) if spill else 0))
+    prompts = [rng.integers(0, cfg.vocab_size, 24) for _ in range(n_convos)]
+    sid, prompt_tokens = 100, 0
+    t0 = time.perf_counter()
+    for _ in range(2):                       # round 2 = the returns
+        for p in prompts:
+            eng.open_session(sid)
+            matched = eng.adopt_prefix(sid, p)
+            eng.step_mixed([(sid, p[matched:])], [])
+            eng.close_session(sid)
+            prompt_tokens += len(p)
+            sid += 1
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "hit_rate": round(st["prefix_hit_tokens"] / prompt_tokens, 3),
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "pages_evicted": st["pages_evicted"],
+        "pages_spilled": st["pages_spilled"],
+        "pages_promoted": st["pages_promoted"],
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def _drive_paged_coalesce(cfg, params, n: int = 5) -> Dict:
+    """Cold-miss coalescing: N identical COLD submits arrive together;
+    the wait-for-fill table parks N−1 behind the first filler, so the
+    shared full-page prefix is prefilled exactly once."""
+    import numpy as np
+
+    rng = np.random.default_rng(29)
+    eng, loop = _paged_loop(cfg, params)
+    prompt = rng.integers(0, cfg.vocab_size, 24)
+    t0 = time.perf_counter()
+    for s in range(n):
+        loop.submit(s, prompt, decode_tokens=1)
+    loop.run_until_idle(max_wall=120.0)
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    shared = (len(prompt) - 1) // 8 * 8      # the full-page prefix
+    return {
+        "submits": n,
+        "coalesced_prefills": loop.coalesced_prefills,
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "shared_prefix_tokens": shared,
+        # prefill rows actually written for the flood (decode rows that
+        # fused into packed steps are not prefill work)
+        "prefilled_tokens": st["packed_useful_tokens"]
+        - st["decode_tokens_fused"],
+        "wall_ms": round(1e3 * wall, 1),
+    }
+
+
+def paged_scenario(write: bool = True) -> List[Dict]:
+    """The BENCH_paged.json rows (§12): chunk-level matching vs the
+    submit-only probe, host spill tier vs drop-on-evict at a matched
+    pool size, and the coalesced cold flood."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import transformer as tr
+
+    cfg = get_smoke("qwen3-4b")
+    params, _ = tr.init_params(cfg, jax.random.key(0))
+    chunk = _drive_paged_chunk(True, cfg, params)
+    submit_only = _drive_paged_chunk(False, cfg, params)
+    spill = _drive_paged_spill(True, cfg, params)
+    drop = _drive_paged_spill(False, cfg, params)
+    coal = _drive_paged_coalesce(cfg, params)
+    rows = [
+        {"bench": "paged_default", "tag": "chunk_matching", "mean_ms": 0.0,
+         **chunk},
+        {"bench": "paged_default", "tag": "submit_only", "mean_ms": 0.0,
+         **submit_only},
+        {"bench": "paged_default", "tag": "spill", "mean_ms": 0.0, **spill},
+        {"bench": "paged_default", "tag": "drop_on_evict", "mean_ms": 0.0,
+         **drop},
+        {"bench": "paged_default", "tag": "coalesce", "mean_ms": 0.0,
+         **coal},
+        {"bench": "paged_default", "tag": "gain", "mean_ms": 0.0,
+         "chunk_extra_hit_tokens": chunk["prefix_hit_tokens"]
+         - submit_only["prefix_hit_tokens"],
+         "spill_hit_rate_gain": round(spill["hit_rate"] - drop["hit_rate"],
+                                      3)},
+    ]
+    if write:
+        with open(BENCH_PAGED_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def run() -> List[Dict]:
     rows = []
     for n_inst in (1, 2):
@@ -617,6 +790,7 @@ def run() -> List[Dict]:
     rows.extend(prefill_scenario())
     rows.extend(window_scenario())
     rows.extend(multiturn_scenario())
+    rows.extend(paged_scenario())
     return rows
 
 
@@ -692,11 +866,39 @@ def _window_smoke() -> None:
     print("windowed-arena smoke OK")
 
 
+def _paged_smoke() -> None:
+    """CI smoke: the §12 paged-by-default acceptance criteria —
+    chunk-level matching strictly increases prefix hits over the
+    submit-only probe on the long-prompt trace, the spill tier strictly
+    beats drop-on-evict hit rate at the same device pool size, and a
+    coalesced cold flood prefills the shared prefix exactly once."""
+    rows = paged_scenario()
+    for r in rows:
+        print(r)
+    chunk, submit_only, spill, drop, coal, gain = rows
+    assert chunk["prefix_hit_tokens"] > submit_only["prefix_hit_tokens"], \
+        (chunk, submit_only)
+    assert chunk["chunk_hit_tokens"] > 0, chunk
+    assert chunk["arena_gathers"] == 0 and chunk["arena_scatters"] == 0, \
+        chunk
+    assert spill["hit_rate"] > drop["hit_rate"], (spill, drop)
+    assert spill["pages_spilled"] > 0 and spill["pages_promoted"] > 0, spill
+    assert drop["pages_spilled"] == 0 and drop["pages_promoted"] == 0, drop
+    assert coal["coalesced_prefills"] == coal["submits"] - 1, coal
+    # every waiter adopted the filler's pages: the shared prefix was
+    # prefilled once, each of the N−1 waiters inherited it page-for-page
+    assert coal["prefix_hit_tokens"] == \
+        (coal["submits"] - 1) * coal["shared_prefix_tokens"], coal
+    assert coal["prefilled_tokens"] == \
+        coal["submits"] * 24 - coal["prefix_hit_tokens"], coal
+    print("paged-default smoke OK")
+
+
 if __name__ == "__main__":
     # CI smoke entries (invoke with PYTHONPATH=src:.): `prefill` runs
     # the short-prefill-flood scenario, `window` the sliding-window
-    # scenario, anything else the decode-heavy one — each asserting its
-    # acceptance criteria
+    # scenario, `paged` the §12 paged-by-default one, anything else the
+    # decode-heavy one — each asserting its acceptance criteria
     import sys
     if "prefill" in sys.argv[1:]:
         _prefill_smoke()
@@ -704,5 +906,7 @@ if __name__ == "__main__":
         _window_smoke()
     elif "multiturn" in sys.argv[1:]:
         _multiturn_smoke()
+    elif "paged" in sys.argv[1:]:
+        _paged_smoke()
     else:
         _decode_smoke()

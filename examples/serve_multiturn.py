@@ -24,8 +24,10 @@ from repro.serving.loop import ServeLoop      # noqa: E402
 def run_variant(variant: str, cfg, params, trace):
     engine = Engine(cfg, params, EngineConfig(num_slots=16, max_len=192,
                                               chunk_tokens=24))
-    engine.executor.precapture(params, engine.arena.gather,
-                               lengths=(8, 16, 32), depths=(1, 2, 4))
+    if not engine._paged:
+        # dense (L, B) grid warmup — only the slot baseline dispatches it
+        engine.executor.precapture(params, engine.arena.gather,
+                                   lengths=(8, 16, 32), depths=(1, 2, 4))
     policy = make_policy(Variant(variant), H200_QWEN32B, threshold=32,
                          chunk_tokens=24)
     loop = ServeLoop(engine, policy, slo_ttft=5.0)

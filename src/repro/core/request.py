@@ -26,6 +26,12 @@ class Request:
     # prefix index (shared system prompt / earlier turn) instead of
     # prefilling — the scheduler and sim bill only the suffix past it
     reusable_prefix: int = 0
+    # §12 host spill tier: how many of those reusable tokens live in the
+    # HOST page pool (demoted by eviction) rather than on device.  Sims
+    # with host_pool_pages > 0 bill their promotion (swap_in_time);
+    # without a host tier they were dropped at eviction and are not
+    # adoptable at all
+    host_prefix: int = 0
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     # fault tolerance (DESIGN.md §11): a recovery request is the synthetic
@@ -36,6 +42,7 @@ class Request:
     rejected: bool = False
 
     # runtime bookkeeping (filled by scheduler/engine/sim)
+    swap_time: float = 0.0               # host→device promotion delay billed
     dispatch_time: Optional[float] = None
     finish_time: Optional[float] = None
     instance: Optional[int] = None

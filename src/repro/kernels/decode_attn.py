@@ -211,9 +211,10 @@ def _arena_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
                       page_table: jax.Array, lengths: jax.Array, *,
+                      window: Optional[int] = None,
                       interpret: bool = True) -> jax.Array:
     """Paged flash decode.
 
@@ -234,6 +235,14 @@ def decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     ``ceil(lengths/ps)`` clamp to the last valid page (a repeated page
     index skips the DMA), so a tick streams only ``lengths[b]`` cache
     rows per sequence.
+
+    ``window``: sliding-window width.  The page table is then a RING
+    over its P_max entries (§7's rolling arena at page granularity):
+    position p lives on ring page (p // ps) % P_max at offset p % ps.
+    The kv grid axis shrinks to the pages the window can touch — the
+    walk starts at the oldest in-window position's page and wraps
+    modularly, exactly :func:`decode_attn_arena`'s windowed form with
+    the page-id lookup replacing the slot-id lookup.
     """
     b, hq, d = q.shape
     ps, hkv = k.shape[1], k.shape[2]
@@ -241,18 +250,30 @@ def decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     rep = hq // hkv
     block_k = ps                   # the page IS the kv block
     nk = p_max
+    nk_iter = nk if window is None else min(nk, (window - 1) // block_k + 2)
+    depth = ps * p_max
     qg = q.reshape(b, hkv, rep, d)
 
     def kv_map(bb, g, ki, pt_ref, len_ref):
-        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
-        return (pt_ref[bb, jnp.minimum(ki, last)], 0, g, 0)
+        if window is None:
+            last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+            return (pt_ref[bb, jnp.minimum(ki, last)], 0, g, 0)
+        kvl = len_ref[bb]
+        n_valid = jnp.minimum(kvl, depth)
+        w_eff = jnp.minimum(window, kvl)
+        s0 = (kvl - w_eff) % depth      # oldest in-window ring slot
+        phys = (s0 // block_k + ki) % nk
+        # pre-wraparound (kvl < depth) the walk cannot wrap, so clamping
+        # to the last valid page only retargets pages the kernel skips
+        last = jnp.maximum(n_valid - 1, 0) // block_k
+        return (pt_ref[bb, jnp.minimum(phys, last)], 0, g, 0)
 
-    kern = functools.partial(_arena_kernel, scale=d ** -0.5, window=None,
-                             depth=ps * p_max, block_k=block_k,
-                             n_kv_blocks=nk, n_phys_blocks=nk)
+    kern = functools.partial(_arena_kernel, scale=d ** -0.5, window=window,
+                             depth=depth, block_k=block_k,
+                             n_kv_blocks=nk_iter, n_phys_blocks=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, nk),
+        grid=(b, hkv, nk_iter),
         in_specs=[
             pl.BlockSpec((1, 1, rep, d), lambda bb, g, ki, *_: (bb, g, 0, 0)),
             pl.BlockSpec((1, block_k, 1, d), kv_map),

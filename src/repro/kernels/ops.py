@@ -96,21 +96,23 @@ def ragged_mha_arena(q, k, v, slot_map, cu_seqlens, q_offsets=None,
 
 
 def ragged_mha_paged(q, k, v, page_table, cu_seqlens, q_offsets=None,
-                     kv_lengths=None, *, causal=True, block_q=128):
+                     kv_lengths=None, *, causal=True, window=None,
+                     block_q=128):
     """Paged packed prefill attention.  q: (T, Hq, D) flat stream;
     k, v: (N_pages, page_size, Hkv, D) full page pools; page_table:
     (B, P_max) physical page per logical kv block — pages may be shared
-    between segments (prefix reuse, COW forks).  See
+    between segments (prefix reuse, COW forks).  ``window`` selects the
+    ring-table (rolling at page granularity) form.  See
     kernels.ragged_prefill.ragged_prefill_paged."""
     if _use_pallas():
         return _ragged_paged_pallas(q, k, v, page_table, cu_seqlens,
                                     q_offsets, kv_lengths, causal=causal,
-                                    block_q=block_q,
+                                    window=window, block_q=block_q,
                                     interpret=not _on_tpu())
     return ref_mod.ref_ragged_prefill_paged(q, k, v, page_table, cu_seqlens,
                                             q_offsets=q_offsets,
                                             kv_lengths=kv_lengths,
-                                            causal=causal)
+                                            causal=causal, window=window)
 
 
 def decode(q, k, v, lengths, *, block_k=512):
@@ -134,14 +136,16 @@ def decode_arena(q, k, v, slot_map, lengths, *, window=None, block_k=512):
                                          window=window)
 
 
-def decode_paged(q, k, v, page_table, lengths):
+def decode_paged(q, k, v, page_table, lengths, *, window=None):
     """Paged single-token flash decode.  q: (B, Hq, D); k, v:
     (N_pages, page_size, Hkv, D) full page pools; page_table: (B, P_max);
-    lengths: (B,).  See kernels.decode_attn.decode_attn_paged."""
+    lengths: (B,).  ``window`` selects the ring-table (rolling at page
+    granularity) form.  See kernels.decode_attn.decode_attn_paged."""
     if _use_pallas():
         return _decode_paged_pallas(q, k, v, page_table, lengths,
-                                    interpret=not _on_tpu())
-    return ref_mod.ref_decode_attn_paged(q, k, v, page_table, lengths)
+                                    window=window, interpret=not _on_tpu())
+    return ref_mod.ref_decode_attn_paged(q, k, v, page_table, lengths,
+                                         window=window)
 
 
 def fused_sample(logits, temp, top_k, top_p, bias_ids, bias_vals, u, draft):

@@ -305,12 +305,13 @@ def _arena_kernel(slot_ref, cu_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "block_q", "interpret"))
+    static_argnames=("causal", "window", "block_q", "interpret"))
 def ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
                          page_table: jax.Array, cu_seqlens: jax.Array,
                          q_offsets: Optional[jax.Array] = None,
                          kv_lengths: Optional[jax.Array] = None, *,
-                         causal: bool = True, block_q: int = 128,
+                         causal: bool = True, window: Optional[int] = None,
+                         block_q: int = 128,
                          interpret: bool = True) -> jax.Array:
     """Paged ragged prefill flash attention.
 
@@ -339,6 +340,16 @@ def ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     ``ceil(kv_lengths[b]/ps)`` clamp to the last valid page (a repeated
     block index skips the DMA), so a step streams only the valid pages
     of the segments it serves.
+
+    ``window``: sliding-window width.  The page table is then a RING
+    over its P_max entries (§7's rolling arena at page granularity):
+    position p lives on logical ring page (p // ps) % P_max at offset
+    p % ps, so the ring holds the last min(kv_lengths, ps·P_max)
+    positions.  The shared ``_arena_kernel`` rolling math reconstructs
+    each slot's absolute position modularly with depth = ps·P_max and
+    masks to (qpos − window, qpos] — identical to
+    :func:`ragged_prefill_arena`'s windowed form with the page-id
+    lookup replacing the slot-id lookup.
     """
     t, hq, d = q.shape
     ps, hkv = k.shape[1], k.shape[2]
@@ -360,12 +371,15 @@ def ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     def kv_map(h, qi, bb, ki, pt_ref, cu_ref, off_ref, len_ref):
         # clamp past-the-length logical pages to the last valid one: a
         # repeated physical page is not re-fetched, so invalid pages
-        # cost no DMA.
-        last = jnp.maximum(len_ref[bb] - 1, 0) // block_k
+        # cost no DMA.  Ring tables have every page valid once
+        # kv_len ≥ ps·P_max.
+        n_valid = jnp.minimum(len_ref[bb], ps * p_max) \
+            if window is not None else len_ref[bb]
+        last = jnp.maximum(n_valid - 1, 0) // block_k
         return (pt_ref[bb, jnp.minimum(ki, last)], 0, h // rep, 0)
 
     kern = functools.partial(
-        _arena_kernel, scale=d ** -0.5, causal=causal, window=None,
+        _arena_kernel, scale=d ** -0.5, causal=causal, window=window,
         depth=ps * p_max, block_q=block_q, block_k=block_k, n_seqs=b,
         n_kv_blocks=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(

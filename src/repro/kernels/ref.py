@@ -176,7 +176,8 @@ def ref_ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
                              page_table: jax.Array, cu_seqlens: jax.Array,
                              q_offsets: Optional[jax.Array] = None,
                              kv_lengths: Optional[jax.Array] = None, *,
-                             causal: bool = True) -> jax.Array:
+                             causal: bool = True,
+                             window: Optional[int] = None) -> jax.Array:
     """Oracle for kernels.ragged_prefill_paged (paged packed prefill).
 
     q: (T, Hq, D) flat packed stream; k, v: (N_pages, page_size, Hkv, D)
@@ -184,29 +185,43 @@ def ref_ragged_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     page.  The gather here — materializing each segment's logical
     (P_max·ps)-deep cache from its pages — is the ORACLE's convenience;
     the kernel reads pages in place through the table.  Doubles as the
-    XLA fallback off-TPU.
+    XLA fallback off-TPU.  ``window`` selects the ring-table form: the
+    gathered pages form a depth-(P_max·ps) rolling cache (position p on
+    ring page (p // ps) % P_max at offset p % ps), so the rolling
+    oracle applies verbatim.
     """
     b, p_max = page_table.shape
     ps, hkv, d = k.shape[1], k.shape[2], k.shape[3]
     kg = k[page_table].reshape(b, p_max * ps, hkv, d)
     vg = v[page_table].reshape(b, p_max * ps, hkv, d)
+    if window is not None:
+        if q_offsets is None:
+            q_offsets = jnp.zeros((b,), jnp.int32)
+        if kv_lengths is None:
+            kv_lengths = jnp.full((b,), p_max * ps, jnp.int32)
+        return ref_ragged_prefill_rolling(
+            q, kg, vg, cu_seqlens, q_offsets, kv_lengths,
+            window=window, causal=causal)
     return ref_ragged_prefill(q, kg, vg, cu_seqlens, q_offsets=q_offsets,
                               kv_lengths=kv_lengths, causal=causal)
 
 
 def ref_decode_attn_paged(q: jax.Array, k: jax.Array, v: jax.Array,
-                          page_table: jax.Array,
-                          lengths: jax.Array) -> jax.Array:
+                          page_table: jax.Array, lengths: jax.Array, *,
+                          window: Optional[int] = None) -> jax.Array:
     """Oracle for kernels.decode_attn_paged (paged flash decode).
 
     q: (B, Hq, D); k, v: (N_pages, page_size, Hkv, D) full page pools;
     page_table: (B, P_max); lengths: (B,) valid KV entries.  Gathers
-    each row's pages into a contiguous logical cache and delegates.
+    each row's pages into a contiguous logical cache and delegates —
+    to the rolling oracle when ``window`` selects the ring-table form.
     """
     b, p_max = page_table.shape
     ps, hkv, d = k.shape[1], k.shape[2], k.shape[3]
     kg = k[page_table].reshape(b, p_max * ps, hkv, d)
     vg = v[page_table].reshape(b, p_max * ps, hkv, d)
+    if window is not None:
+        return ref_decode_attn_rolling(q, kg, vg, lengths, window=window)
     return ref_decode_attn(q, kg, vg, lengths)
 
 

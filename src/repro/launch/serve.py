@@ -40,9 +40,11 @@ def main():
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params, _ = tr.init_params(cfg, jax.random.key(args.seed))
+    # --packed rides the full default stack (packed + paged pool, §12);
+    # the plain run keeps the explicit slot/dense baseline
     engine = Engine(cfg, params, EngineConfig(
         num_slots=max(8, args.sessions), max_len=192, chunk_tokens=32,
-        packed=args.packed))
+        packed=args.packed, paged_kv=args.packed))
     awd_cfg = None
     if args.packed and engine.packed_executor is not None:
         from repro.core.awd import AWDConfig
@@ -61,13 +63,15 @@ def main():
             depths=(1, 2, 4))
         print(f"[serve] captured {len(engine.executor.compile_times)} "
               f"shapes in {cap:.1f}s at init")
-    if engine.decode_executor is not None:
+    if engine.decode_executor is not None and not engine._paged:
         # §5: compile every decode-ladder rung up front too, so no live
-        # decode tick pays a first-rung compile
+        # decode tick pays a first-rung compile.  The paged engine's
+        # rungs key on bucket × P_max and compile lazily on first tick.
         dcap = engine.decode_executor.precapture(params, engine.arena.arena)
         print(f"[serve] captured {len(engine.decode_executor.compile_times)}"
               f" decode rungs in {dcap:.1f}s at init")
-    if engine.packed_executor is not None and engine.ecfg.arena_prefill:
+    if engine.packed_executor is not None and engine.ecfg.arena_prefill \
+            and not engine._paged:
         # §6: compile every token bucket's arena-resident packed step —
         # the hot path for every prefill/mixed/chunk tick
         pcap = engine.packed_executor.precapture_arena(params,

@@ -386,6 +386,7 @@ def packed_paged_attention_layer(p: Dict, x: jax.Array, *, cfg,
                                  cu_seqlens: jax.Array, q_offsets: jax.Array,
                                  kv_lengths: jax.Array,
                                  kv: Tuple[jax.Array, jax.Array],
+                                 window: Optional[int] = None,
                                  ) -> Tuple[jax.Array, Tuple]:
     """Attention over a packed flat stream, PAGED (DESIGN.md §8).
 
@@ -398,6 +399,12 @@ def packed_paged_attention_layer(p: Dict, x: jax.Array, *, cfg,
     token_pages/token_offs: (T,) physical (page, offset) each token's
     new KV is scatter-written to — pad/tail rows target the reserved
     scratch page at offset page_size − 1, never a live page.
+
+    ``window``: sliding-window width (DESIGN.md §12).  The page table
+    is then a RING over its P_max entries: position p lives on ring
+    page (p // ps) % P_max — the engine computes token_pages through
+    that ring, so the write below is already modular and only the
+    kernel mask changes here.
 
     The write is O(T) rows in place under donation; the paged ragged
     kernel then attends each stream row through its segment's page
@@ -428,7 +435,7 @@ def packed_paged_attention_layer(p: Dict, x: jax.Array, *, cfg,
 
     out = kernel_ops.ragged_mha_paged(q, ck, cv, page_table, cu_seqlens,
                                       q_offsets, kv_lengths,
-                                      causal=cfg.causal)
+                                      causal=cfg.causal, window=window)
     out = out.reshape(t, cfg.num_heads * hd) @ p["wo"]
     return out, (ck, cv)
 
@@ -438,6 +445,7 @@ def paged_decode_layer(p: Dict, x: jax.Array, *, cfg,
                        write_pages: jax.Array, write_offs: jax.Array,
                        page_table: jax.Array, kv_lengths: jax.Array,
                        kv: Tuple[jax.Array, jax.Array],
+                       window: Optional[int] = None,
                        ) -> Tuple[jax.Array, Tuple]:
     """Attention for one PAGED decode tick (DESIGN.md §8).
 
@@ -447,7 +455,9 @@ def paged_decode_layer(p: Dict, x: jax.Array, *, cfg,
     position of the new token (rope); write_pages/write_offs: (B,)
     physical (page, offset) its KV lands in — pad rows target the
     scratch page at offset page_size − 1; kv_lengths: (B,) valid cache
-    entries including the new row.  Returns (out (B, d), updated pools).
+    entries including the new row.  ``window`` selects the ring-table
+    form (DESIGN.md §12) — write_pages already walk the ring, computed
+    by the engine.  Returns (out (B, d), updated pools).
     """
     from repro.kernels import ops as kernel_ops
 
@@ -472,7 +482,8 @@ def paged_decode_layer(p: Dict, x: jax.Array, *, cfg,
     ck = kv[0].at[write_pages, write_offs].set(k.astype(kv[0].dtype))
     cv = kv[1].at[write_pages, write_offs].set(v.astype(kv[1].dtype))
 
-    out = kernel_ops.decode_paged(q, ck, cv, page_table, kv_lengths)
+    out = kernel_ops.decode_paged(q, ck, cv, page_table, kv_lengths,
+                                  window=window)
     out = out.reshape(b, cfg.num_heads * hd) @ p["wo"]
     return out, (ck, cv)
 

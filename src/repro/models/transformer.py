@@ -626,6 +626,7 @@ def forward_packed_paged(params: Dict, cfg: ModelConfig, *,
                          kv_lengths: jax.Array,
                          arena: List[Any],
                          last_idx: jax.Array,
+                         state_map: Optional[jax.Array] = None,
                          ) -> Tuple[jax.Array, List[Any]]:
     """Paged packed forward: :func:`forward_packed_arena` with the
     per-segment arena SLOT generalized to a per-block PAGE TABLE
@@ -640,19 +641,45 @@ def forward_packed_paged(params: Dict, cfg: ModelConfig, *,
     read-only by construction — writes land via ``token_pages`` /
     ``token_offs (T,)``, which the PagedKVArena only ever points at
     exclusively-owned pages (pad/tail rows park on the reserved scratch
-    page at offset page_size − 1).  Pure-attention stacks only: SSM
-    state is per-session, not per-token, so it cannot ride a shared
-    page pool.  Returns (last_logits (B, V), new_pool).
+    page at offset page_size − 1).
+
+    Heterogeneous stacks ride the same scan (DESIGN.md §12): windowed
+    positions treat ``page_table`` as a RING (the engine computes
+    token_pages through it, the kernel masks to the window); SSM
+    positions hold their per-session recurrent state on a STATE PAGE —
+    the pool's page axis doubles as the state-slot axis (per ssm
+    position {"ssm": (G, N_pages + 1, NH, HD, DS), "conv": ...}) and
+    ``state_map (B,)`` names each segment's state page (pads point at
+    the scratch page).  Returns (last_logits (B, V), new_pool).
     """
     cap = arena_capability(cfg)
-    assert cap.packed_ok and cap.pure_attn, cfg.name
+    assert cap.packed_ok, cfg.name
+    b = page_table.shape[0]
+    if cap.has_ssm:
+        assert state_map is not None, "paged SSM needs a state_map"
+        # flat → (segment row, local index) bridge for the SSM scan;
+        # computed once, shared by every ssm pattern position
+        t = tokens.shape[0]
+        rows = jnp.arange(t)
+        seg = jnp.sum(rows[:, None] >= cu_seqlens[None, 1:], axis=1)
+        valid_row = rows < cu_seqlens[-1]
+        seg_rows = jnp.clip(seg, 0, b - 1)
+        seg_pos = rows - cu_seqlens[seg_rows]
+        seg_lens = cu_seqlens[1:] - cu_seqlens[:-1]
 
     def mix_fn(j, lp, h, cache_j):
+        kind = cap.layers[j].kind
+        if kind == "ssm":
+            return mamba_mod.packed_arena_mamba_layer(
+                lp, h, cfg=cfg, slot_map=state_map, cache=cache_j,
+                seg_rows=seg_rows, seg_pos=seg_pos, valid_row=valid_row,
+                seg_lens=seg_lens)
         mix, upd = packed_paged_attention_layer(
             lp, h, cfg=cfg, positions=positions, token_pages=token_pages,
             token_offs=token_offs, page_table=page_table,
             cu_seqlens=cu_seqlens, q_offsets=q_offsets,
-            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]),
+            window=cap.layers[j].window)
         return mix, {"k": upd[0], "v": upd[1]}
 
     x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)
@@ -705,10 +732,11 @@ def forward_packed_verify_paged(params: Dict, cfg: ModelConfig, *,
                                 kv_lengths: jax.Array,
                                 arena: List[Any],
                                 gather_idx: jax.Array,
+                                state_map: Optional[jax.Array] = None,
                                 ) -> Tuple[jax.Array, List[Any]]:
     """Paged speculative verification: :func:`forward_packed_paged`
     gathering L logits per segment via ``gather_idx (B, L)`` (see
-    :func:`forward_packed_verify_arena`).  Pure-attention stacks only.
+    :func:`forward_packed_verify_arena`).
     Returns (logits (B, L, V), new_pool)."""
     b, l = gather_idx.shape
     logits, new_arena = forward_packed_paged(
@@ -716,7 +744,7 @@ def forward_packed_verify_paged(params: Dict, cfg: ModelConfig, *,
         token_pages=token_pages, token_offs=token_offs,
         page_table=page_table, cu_seqlens=cu_seqlens,
         q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
-        last_idx=gather_idx.reshape(-1))
+        last_idx=gather_idx.reshape(-1), state_map=state_map)
     return logits.reshape(b, l, -1), new_arena
 
 
@@ -728,6 +756,7 @@ def forward_decode_paged(params: Dict, cfg: ModelConfig, *,
                          page_table: jax.Array,
                          kv_lengths: jax.Array,
                          arena: List[Any],
+                         state_map: Optional[jax.Array] = None,
                          ) -> Tuple[jax.Array, List[Any]]:
     """One PAGED decode tick: :func:`forward_decode_arena` with the
     per-row slot generalized to a page table (DESIGN.md §8).
@@ -737,16 +766,24 @@ def forward_decode_paged(params: Dict, cfg: ModelConfig, *,
     write_pages/write_offs: (B,) physical (page, offset) its KV lands in
     (pad rows park on the scratch page at offset page_size − 1);
     page_table: (B, P_max); kv_lengths: (B,) valid entries INCLUDING the
-    new row.  Pure-attention stacks only.  Returns (logits, new_pool).
+    new row.  Heterogeneous stacks route per layer (DESIGN.md §12):
+    windowed positions walk the ring table, SSM positions step the
+    per-session state page named by ``state_map (B,)`` in place (pads
+    point at the scratch page).  Returns (logits, new_pool).
     """
     cap = arena_capability(cfg)
-    assert cap.packed_ok and cap.pure_attn, cfg.name
+    assert cap.packed_ok, cfg.name
 
     def mix_fn(j, lp, h, cache_j):
+        kind = cap.layers[j].kind
+        if kind == "ssm":
+            return mamba_mod.arena_decode_mamba_layer(
+                lp, h, cfg=cfg, slot_map=state_map, cache=cache_j)
         mix, upd = paged_decode_layer(
             lp, h, cfg=cfg, positions=positions, write_pages=write_pages,
             write_offs=write_offs, page_table=page_table,
-            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]))
+            kv_lengths=kv_lengths, kv=(cache_j["k"], cache_j["v"]),
+            window=cap.layers[j].window)
         return mix, {"k": upd[0], "v": upd[1]}
 
     x, new_arena = _scan_serving_stack(params, cfg, tokens, arena, mix_fn)

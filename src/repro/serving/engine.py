@@ -99,17 +99,25 @@ class EngineConfig:
     # steps take their token from the executor's on-device argmax and
     # skip the full-vocab logits transfer entirely (fused greedy slice)
     keep_last_logits: bool = True
-    # ---- paged KV arena (DESIGN.md §8) --------------------------------
+    # ---- paged KV arena (DESIGN.md §8/§12) ----------------------------
     # paged_kv replaces the per-session slot arena with a shared page
     # pool + per-session page tables: radix-tree prefix reuse maps a
     # repeated prompt prefix onto existing pages (only the new suffix is
-    # prefilled) and COW forks share pages between branches.  Pure-
-    # attention causal architectures only; requires the packed + arena
-    # paths (a paged pool has no dense gather fallback, like §7 rolling)
-    paged_kv: bool = False
+    # prefilled) and COW forks share pages between branches.  The
+    # DEFAULT for every packed_ok config: sliding-window layers walk a
+    # ring page table (§7 rolling at page granularity), hybrid SSM
+    # layers step per-session state pages from the same pool.  Requires
+    # the packed + arena paths (a paged pool has no dense gather
+    # fallback, like §7 rolling); paged_kv=False keeps the slot arena
+    # as the explicit measurement baseline
+    paged_kv: bool = True
     page_size: int = 16
     num_pages: Optional[int] = None  # None → num_slots·max_len/page_size
     prefix_cache: bool = True        # radix prefix index on/off
+    # host spill tier (§12): >0 demotes LRU index-only pages to a
+    # bounded host-side pool instead of dropping them on eviction;
+    # prefix matches promote spilled pages back to device.  0 = off
+    host_pool_bytes: int = 0
     # ---- fused on-device sampling (DESIGN.md §10) ---------------------
     # route non-greedy rows through the fused sampling kernel (bias +
     # temperature + top-k/top-p + the inverse-CDF draw on device, host
@@ -157,17 +165,35 @@ class Engine:
                        and (self.ecfg.packed or self.ecfg.arena_decode))
         self._paged = bool(self.ecfg.paged_kv)
         if self._paged:
-            assert cap.packed_ok and cap.pure_attn, \
-                "paged_kv requires a pure-attention causal architecture"
-            assert (self.ecfg.packed and self.ecfg.arena_prefill
-                    and self.ecfg.arena_decode), \
-                "paged_kv requires the packed + arena execution paths"
+            if not cap.packed_ok:
+                raise ValueError(
+                    f"{cfg.name}: paged_kv needs a causal decoder stack "
+                    "(encoder-only models have no serving cache) — set "
+                    "paged_kv=False for the dense baseline")
+            if not (self.ecfg.packed and self.ecfg.arena_prefill
+                    and self.ecfg.arena_decode):
+                raise ValueError(
+                    "paged_kv requires the packed + arena execution paths "
+                    "(packed=True, arena_prefill=True, arena_decode=True): "
+                    "a paged pool has no dense gather fallback — set "
+                    "paged_kv=False to pin the slot/dense baseline")
             num_pages = self.ecfg.num_pages or (
                 self.ecfg.num_slots * self.ecfg.max_len
                 // self.ecfg.page_size)
-            self.arena = PagedKVArena(cfg, num_pages, self.ecfg.page_size,
-                                      self.ecfg.max_len,
-                                      prefix_cache=self.ecfg.prefix_cache)
+            # sliding-window configs get a RING page table (§12): the §7
+            # rolling arena at page granularity, ⌈(window + margin)/ps⌉
+            # logical blocks with margin = chunk_tokens so one step's
+            # writes never wrap onto rows still inside any query window
+            ring_pages = None
+            if cap.has_window:
+                depth = min(self.ecfg.max_len,
+                            cap.window + self._seg_margin)
+                ring_pages = -(-depth // self.ecfg.page_size)
+            self.arena = PagedKVArena(
+                cfg, num_pages, self.ecfg.page_size, self.ecfg.max_len,
+                prefix_cache=self.ecfg.prefix_cache,
+                ring_pages=ring_pages, state_slots=cap.has_ssm,
+                host_pool_bytes=self.ecfg.host_pool_bytes)
         else:
             self.arena = KVArena(cfg, self.ecfg.num_slots, self.ecfg.max_len,
                                  swa_depth=swa_depth, scratch_slot=scratch)
@@ -345,8 +371,15 @@ class Engine:
                     self.handoff_host_bytes += int(
                         getattr(leaf, "nbytes", 0))
         if self._paged:
-            self.arena.import_session(session, payload.token_ids or [],
-                                      payload.kv, payload.length)
+            # handoff dedupe (§12): probe the DESTINATION's radix index
+            # first — prefix pages this pool already holds are adopted
+            # in place and only the suffix of the exported payload is
+            # copied in (import_session slices past the matched pages)
+            toks = payload.token_ids or []
+            if toks and self.ecfg.prefix_cache:
+                self.arena.match_prefix(session, toks)
+            self.arena.import_session(session, toks, payload.kv,
+                                      payload.length)
         else:
             if session in self.arena._session_slot:
                 self.arena.free(session)
@@ -934,18 +967,26 @@ class Engine:
             pad_token=self.ecfg.pad_token)
         sessions = [seg.session for seg in segments]
 
+        ring = ar.ring_pages
         page_table = np.full((b_max, ar.max_pages_per_seq), ar.scratch,
                              np.int32)
         token_pages = np.full(bucket, ar.scratch, np.int32)
         token_offs = np.full(bucket, ps - 1, np.int32)
+        state_map = np.full(b_max, ar.scratch, np.int32)
         cu = stream.cu_seqlens
         for i, seg in enumerate(segments):
             pages = ar.prepare_extend(seg.session, seg.length)
             page_table[i, :len(pages)] = pages
             pos = stream.positions[cu[i]:cu[i + 1]]
             pt = np.asarray(pages, np.int32)
-            token_pages[cu[i]:cu[i + 1]] = pt[pos // ps]
+            # ring tables (§12): position p lives on ring page
+            # (p // ps) % n_ring — the host-side half of the §7 rolling
+            # reconstruction; the kernel recovers kpos from the slot
+            pidx = pos // ps if ring is None else (pos // ps) % ring
+            token_pages[cu[i]:cu[i + 1]] = pt[pidx]
             token_offs[cu[i]:cu[i + 1]] = pos % ps
+            if ar.state_slots:
+                state_map[i] = ar.state_pages[seg.session]
 
         t0 = time.perf_counter()
         last, ids, new_arena = px.mixed_step_paged(
@@ -954,7 +995,8 @@ class Engine:
             jnp.asarray(token_offs), jnp.asarray(page_table),
             jnp.asarray(stream.cu_seqlens), jnp.asarray(stream.q_offsets),
             jnp.asarray(stream.kv_lengths), ar.arena,
-            jnp.asarray(stream.last_idx), n_decode=stream.decode_tokens)
+            jnp.asarray(stream.last_idx), jnp.asarray(state_map),
+            n_decode=stream.decode_tokens)
         toks, last_np = self._tokens_from_step(sessions, last, ids)
         elapsed = time.perf_counter() - t0
         px.note_padding(stream.total_tokens, bucket)
@@ -1020,17 +1062,22 @@ class Engine:
         if self._paged:
             ar = self.arena
             ps = ar.page_size
+            ring = ar.ring_pages
             page_table = np.full((b_max, ar.max_pages_per_seq), ar.scratch,
                                  np.int32)
             token_pages = np.full(bucket, ar.scratch, np.int32)
             token_offs = np.full(bucket, ps - 1, np.int32)
+            state_map = np.full(b_max, ar.scratch, np.int32)
             for i, seg in enumerate(segments):
                 pages = ar.prepare_extend(seg.session, seg.length)
                 page_table[i, :len(pages)] = pages
                 pos = stream.positions[cu[i]:cu[i + 1]]
                 pt = np.asarray(pages, np.int32)
-                token_pages[cu[i]:cu[i + 1]] = pt[pos // ps]
+                pidx = pos // ps if ring is None else (pos // ps) % ring
+                token_pages[cu[i]:cu[i + 1]] = pt[pidx]
                 token_offs[cu[i]:cu[i + 1]] = pos % ps
+                if ar.state_slots:
+                    state_map[i] = ar.state_pages[seg.session]
             t0 = time.perf_counter()
             logits, ids, new_arena = px.verify_step_paged(
                 self.params, jnp.asarray(stream.tokens),
@@ -1039,7 +1086,7 @@ class Engine:
                 jnp.asarray(stream.cu_seqlens),
                 jnp.asarray(stream.q_offsets),
                 jnp.asarray(stream.kv_lengths), ar.arena,
-                jnp.asarray(gather))
+                jnp.asarray(gather), jnp.asarray(state_map))
         else:
             slots = [self.arena.alloc(seg.session) for seg in segments]
             pad_slot = self.arena.scratch if self.arena.scratch is not None \
@@ -1271,13 +1318,26 @@ class Engine:
         (a re-prefill segment whose history is the tokens already done),
         so a chunk can share a step with short requests and decode rows
         instead of running the dense path solo; off-ladder chunks fall
-        back to the dense path inside ``prefill_packed``."""
+        back to the dense path inside ``prefill_packed``.
+
+        CHUNK-LEVEL prefix matching (§12): on paged arenas the radix
+        index is re-probed at every chunk boundary — a long prompt whose
+        cached prefix extends past the first chunk adopts the already-
+        indexed pages mid-request and only prefills the truly-cold
+        tail, instead of re-prefilling tokens the pool already holds."""
         c = self.ecfg.chunk_tokens
+        arr = np.asarray(token_list)
         tok = None
-        for start in range(0, len(token_list), c):
-            chunk = token_list[start:start + c]
+        i = 0
+        while i < len(arr):
+            if self._paged and self.arena.index is not None:
+                adopted = self.arena.match_extend(
+                    session, [int(t) for t in arr[i:]])
+                i += adopted
+            chunk = arr[i:i + c]
             res = self.prefill_packed([session], [np.asarray(chunk)])
             tok = res[session]
+            i += len(chunk)
         return tok
 
     # ------------------------------------------------------------- decode
@@ -1364,23 +1424,29 @@ class Engine:
                 f"paged decode on an empty session: {list(sessions)}"
             tok = np.full(bucket, self.ecfg.pad_token, np.int32)
             tok[:n] = cur
+            ring = ar.ring_pages
             positions = np.full(bucket, ar.max_len - 1, np.int32)
             write_pages = np.full(bucket, ar.scratch, np.int32)
             write_offs = np.full(bucket, ps - 1, np.int32)
             page_table = np.full((bucket, ar.max_pages_per_seq),
                                  ar.scratch, np.int32)
             kv_lengths = np.ones(bucket, np.int32)
+            state_map = np.full(bucket, ar.scratch, np.int32)
             for i, (s, h) in enumerate(zip(sessions, hists)):
                 pages = ar.prepare_extend(s, 1)
                 page_table[i, :len(pages)] = pages
                 positions[i] = h
-                write_pages[i] = pages[h // ps]
+                pidx = h // ps if ring is None else (h // ps) % ring
+                write_pages[i] = pages[pidx]
                 write_offs[i] = h % ps
                 kv_lengths[i] = h + 1
+                if ar.state_slots:
+                    state_map[i] = ar.state_pages[s]
             logits, ids, new_arena = dx.decode_paged(
                 self.params, jnp.asarray(tok), jnp.asarray(positions),
                 jnp.asarray(write_pages), jnp.asarray(write_offs),
-                jnp.asarray(page_table), jnp.asarray(kv_lengths), ar.arena)
+                jnp.asarray(page_table), jnp.asarray(kv_lengths), ar.arena,
+                jnp.asarray(state_map))
             ar.replace(new_arena)
             dx.note_padding(n, bucket)
             # the KV written this tick belongs to the INPUT token — the
@@ -1459,10 +1525,21 @@ class Engine:
             # whole-slot copy proof: the §5/§6 arena paths keep both at 0
             "arena_gathers": self.arena.gather_calls,
             "arena_scatters": self.arena.scatter_calls,
-            # §8 paged-arena proof counters (0 on slot arenas)
+            # §8/§12 paged-arena proof counters (0 on slot arenas)
             "prefix_hit_tokens": getattr(self.arena, "prefix_hit_tokens", 0),
+            "chunk_hit_tokens": getattr(self.arena, "chunk_hit_tokens", 0),
             "pages_cow_forked": getattr(self.arena, "pages_cow_forked", 0),
             "pages_evicted": getattr(self.arena, "pages_evicted", 0),
+            # §12 host spill tier
+            "pages_spilled": getattr(self.arena, "pages_spilled", 0),
+            "pages_promoted": getattr(self.arena, "pages_promoted", 0),
+            "host_pool_pages": getattr(self.arena, "host_pool_pages", 0),
+            "host_pages_dropped": getattr(self.arena, "host_pages_dropped",
+                                          0),
+            # §12 hybrid boundary-state checkpoints + handoff dedupe
+            "state_checkpoints": getattr(self.arena, "state_checkpoints", 0),
+            "handoff_pages_deduped": getattr(self.arena,
+                                             "handoff_pages_deduped", 0),
             # §9 arena→arena handoff proof counters
             "handoff_sessions": self.handoff_sessions,
             "handoff_tokens": self.handoff_tokens,

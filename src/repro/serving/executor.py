@@ -89,20 +89,21 @@ def make_packed_arena_fn(cfg: ModelConfig) -> Callable:
 def make_packed_paged_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(T,), positions(T,), token_pages(T,), token_offs(T,),
     page_table(B,P_max), cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,),
-    arena, last_idx(B,)) → (last_logits(B,V), greedy_ids(B,), new_arena).
-    Paged packed prefill (DESIGN.md §8): the page pool is read in place
-    through a per-block page table, so segments can SHARE pages (radix
-    prefix reuse, COW forks) inside one step."""
+    arena, last_idx(B,), state_map(B,)) → (last_logits(B,V),
+    greedy_ids(B,), new_arena).  Paged packed prefill (DESIGN.md §8/§12):
+    the page pool is read in place through a per-block page table, so
+    segments can SHARE pages (radix prefix reuse, COW forks) inside one
+    step; SSM positions step the state page named by ``state_map``."""
 
     def packed_step(params, tokens, positions, token_pages, token_offs,
                     page_table, cu_seqlens, q_offsets, kv_lengths, arena,
-                    last_idx):
+                    last_idx, state_map):
         last, new_arena = tr.forward_packed_paged(
             params, cfg, tokens=tokens, positions=positions,
             token_pages=token_pages, token_offs=token_offs,
             page_table=page_table, cu_seqlens=cu_seqlens,
             q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
-            last_idx=last_idx)
+            last_idx=last_idx, state_map=state_map)
         return last, jnp.argmax(last, axis=-1).astype(jnp.int32), new_arena
 
     return packed_step
@@ -133,18 +134,19 @@ def make_packed_verify_arena_fn(cfg: ModelConfig) -> Callable:
 def make_packed_verify_paged_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(T,), positions(T,), token_pages(T,), token_offs(T,),
     page_table(B,P_max), cu_seqlens(B+1,), q_offsets(B,), kv_lengths(B,),
-    arena, gather_idx(B,L)) → (logits(B,L,V), greedy_ids(B,L), new_pool).
-    Paged speculative verification (DESIGN.md §10)."""
+    arena, gather_idx(B,L), state_map(B,)) → (logits(B,L,V),
+    greedy_ids(B,L), new_pool).  Paged speculative verification
+    (DESIGN.md §10)."""
 
     def verify_step(params, tokens, positions, token_pages, token_offs,
                     page_table, cu_seqlens, q_offsets, kv_lengths, arena,
-                    gather_idx):
+                    gather_idx, state_map):
         logits, new_arena = tr.forward_packed_verify_paged(
             params, cfg, tokens=tokens, positions=positions,
             token_pages=token_pages, token_offs=token_offs,
             page_table=page_table, cu_seqlens=cu_seqlens,
             q_offsets=q_offsets, kv_lengths=kv_lengths, arena=arena,
-            gather_idx=gather_idx)
+            gather_idx=gather_idx, state_map=state_map)
         return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
                 new_arena)
 
@@ -153,15 +155,17 @@ def make_packed_verify_paged_fn(cfg: ModelConfig) -> Callable:
 
 def make_paged_decode_fn(cfg: ModelConfig) -> Callable:
     """(params, tokens(B,), positions(B,), write_pages(B,), write_offs(B,),
-    page_table(B,P_max), kv_lengths(B,), arena) → (logits(B,V),
-    greedy_ids(B,), new_arena).  Paged decode (DESIGN.md §8)."""
+    page_table(B,P_max), kv_lengths(B,), arena, state_map(B,)) →
+    (logits(B,V), greedy_ids(B,), new_arena).  Paged decode
+    (DESIGN.md §8/§12)."""
 
     def decode_step(params, tokens, positions, write_pages, write_offs,
-                    page_table, kv_lengths, arena):
+                    page_table, kv_lengths, arena, state_map):
         logits, new_arena = tr.forward_decode_paged(
             params, cfg, tokens=tokens, positions=positions,
             write_pages=write_pages, write_offs=write_offs,
-            page_table=page_table, kv_lengths=kv_lengths, arena=arena)
+            page_table=page_table, kv_lengths=kv_lengths, arena=arena,
+            state_map=state_map)
         return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32),
                 new_arena)
 
@@ -392,15 +396,13 @@ class PackedBucketExecutor(_ExecutorBase):
         self._jit_packed_arena = jax.jit(
             self._packed_arena,
             donate_argnums=(8,) if self.donate_cache else ())
-        # paged form (DESIGN.md §8): per-block page table instead of a
-        # per-segment slot — pure-attention only (SSM state is
-        # per-session, not per-token, so it cannot ride a shared pool)
-        self._jit_packed_paged = None
-        if self.capability.pure_attn:
-            self._packed_paged = make_packed_paged_fn(cfg)
-            self._jit_packed_paged = jax.jit(
-                self._packed_paged,
-                donate_argnums=(9,) if self.donate_cache else ())
+        # paged form (DESIGN.md §8/§12): per-block page table instead of
+        # a per-segment slot — every packed_ok config (windowed layers
+        # walk a ring table, SSM layers step per-session state pages)
+        self._packed_paged = make_packed_paged_fn(cfg)
+        self._jit_packed_paged = jax.jit(
+            self._packed_paged,
+            donate_argnums=(9,) if self.donate_cache else ())
         # speculative verification forms (DESIGN.md §10): the SAME
         # packed dispatch with an L-per-segment logits gather.  Their
         # compile cache is keyed on (token bucket, L) via the
@@ -409,12 +411,10 @@ class PackedBucketExecutor(_ExecutorBase):
         self._jit_verify_arena = jax.jit(
             self._verify_arena,
             donate_argnums=(8,) if self.donate_cache else ())
-        self._jit_verify_paged = None
-        if self.capability.pure_attn:
-            self._verify_paged = make_packed_verify_paged_fn(cfg)
-            self._jit_verify_paged = jax.jit(
-                self._verify_paged,
-                donate_argnums=(9,) if self.donate_cache else ())
+        self._verify_paged = make_packed_verify_paged_fn(cfg)
+        self._jit_verify_paged = jax.jit(
+            self._verify_paged,
+            donate_argnums=(9,) if self.donate_cache else ())
         # continuous-batching counters: a mixed step fuses decode rows
         # into the same packed stream (and the SAME compiled executable —
         # the shape key is (token bucket, max_seqs), not the segment mix)
@@ -503,23 +503,23 @@ class PackedBucketExecutor(_ExecutorBase):
 
     def mixed_step_paged(self, params, tokens, positions, token_pages,
                          token_offs, page_table, cu_seqlens, q_offsets,
-                         kv_lengths, arena, last_idx, *, n_decode: int = 0):
+                         kv_lengths, arena, last_idx, state_map, *,
+                         n_decode: int = 0):
         """One PAGED continuous-batching step (DESIGN.md §8): same flat
         stream and fusion semantics as :meth:`mixed_step_arena`, but the
         cache argument is the shared page POOL and each segment's KV is
         routed through its row of ``page_table`` — so segments can share
         prefix pages and a prefix-hit turn streams its full logical
-        context while having prefilled only its suffix.  The compile
-        cache is keyed on (token bucket, P_max); the pool shape is a
-        constant."""
-        assert self._jit_packed_paged is not None, \
-            f"{self.cfg.name}: paged serving is attention-only"
+        context while having prefilled only its suffix.  ``state_map``
+        (B,) names each segment's SSM state page (scratch for pads /
+        pure-attn configs).  The compile cache is keyed on (token
+        bucket, P_max); the pool shape is a constant."""
         if n_decode:
             self.mixed_steps += 1
             self.decode_tokens_fused += int(n_decode)
         args = (params, tokens, positions, token_pages, token_offs,
                 page_table, cu_seqlens, q_offsets, kv_lengths, arena,
-                last_idx)
+                last_idx, state_map)
         exe = self._get("packed_paged", self._jit_packed_paged, args)
         return exe(*args)
 
@@ -540,16 +540,14 @@ class PackedBucketExecutor(_ExecutorBase):
 
     def verify_step_paged(self, params, tokens, positions, token_pages,
                           token_offs, page_table, cu_seqlens, q_offsets,
-                          kv_lengths, arena, gather_idx):
+                          kv_lengths, arena, gather_idx, state_map):
         """Paged speculative verification dispatch (DESIGN.md §10) —
         :meth:`verify_step_arena` over the shared page pool."""
-        assert self._jit_verify_paged is not None, \
-            f"{self.cfg.name}: paged serving is attention-only"
         self.verify_steps += 1
         self.verify_rows += int(gather_idx.shape[0] * gather_idx.shape[1])
         args = (params, tokens, positions, token_pages, token_offs,
                 page_table, cu_seqlens, q_offsets, kv_lengths, arena,
-                gather_idx)
+                gather_idx, state_map)
         exe = self._get("verify_paged", self._jit_verify_paged, args)
         return exe(*args)
 
@@ -627,13 +625,13 @@ class DecodeBucketExecutor(_ExecutorBase):
         self._decode = make_arena_decode_fn(cfg)
         self._jit_decode = jax.jit(
             self._decode, donate_argnums=(5,) if self.donate_cache else ())
-        # paged form (DESIGN.md §8) — pure-attention only
-        self._jit_decode_paged = None
-        if self.capability.pure_attn:
-            self._decode_paged = make_paged_decode_fn(cfg)
-            self._jit_decode_paged = jax.jit(
-                self._decode_paged,
-                donate_argnums=(7,) if self.donate_cache else ())
+        # paged form (DESIGN.md §8/§12): every packed_ok config —
+        # windowed layers walk a ring table, SSM layers step their
+        # per-session state page through state_map
+        self._decode_paged = make_paged_decode_fn(cfg)
+        self._jit_decode_paged = jax.jit(
+            self._decode_paged,
+            donate_argnums=(7,) if self.donate_cache else ())
 
     # ------------------------------------------------------------ lookup
     @property
@@ -652,15 +650,14 @@ class DecodeBucketExecutor(_ExecutorBase):
         return exe(*args)
 
     def decode_paged(self, params, tokens, positions, write_pages,
-                     write_offs, page_table, kv_lengths, arena):
-        """One PAGED decode tick (DESIGN.md §8): the page pool rides in
-        place and each row's KV is routed through its page-table row —
-        rows may share prefix pages.  Compile cache keyed on the decode
-        bucket × P_max."""
-        assert self._jit_decode_paged is not None, \
-            f"{self.cfg.name}: paged decode is attention-only"
+                     write_offs, page_table, kv_lengths, arena, state_map):
+        """One PAGED decode tick (DESIGN.md §8/§12): the page pool rides
+        in place and each row's KV is routed through its page-table row —
+        rows may share prefix pages.  ``state_map`` (B,) names each row's
+        SSM state page (scratch for pads / pure-attn configs).  Compile
+        cache keyed on the decode bucket × P_max."""
         args = (params, tokens, positions, write_pages, write_offs,
-                page_table, kv_lengths, arena)
+                page_table, kv_lengths, arena, state_map)
         exe = self._get("paged_decode", self._jit_decode_paged, args)
         return exe(*args)
 

@@ -96,6 +96,19 @@ class ServeLoop:
         # pending token resumes generation exactly where it stopped.
         self._cache_tokens: Dict[int, List[int]] = {}
         self._cache_pending: Dict[int, int] = {}
+        # §12 cold-miss coalescing (wait-for-fill): concurrent COLD
+        # submits of an identical full-page prompt prefix park behind
+        # the first submit (the "filler") instead of each prefilling the
+        # same pages; when the filler's prefill completes, the waiters
+        # re-enter intake and adopt the freshly indexed pages.  Keyed by
+        # the prompt's full-page chunk prefix.
+        self._active_fills: Dict[Tuple[int, ...], int] = {}  # key → rid
+        self._fill_waiters: Dict[Tuple[int, ...], List[Tuple]] = {}
+        self.coalesced_prefills = 0
+        # §12 chunk-level matching: re-probe the radix index at every
+        # chunk boundary of a long prefill (False = the old submit-only
+        # probe — kept as the measurement baseline for benches/tests)
+        self.chunk_matching = True
 
     def _dec_pending(self, session: int, n: int) -> None:
         if n <= 0 or session not in self._session_pending:
@@ -115,6 +128,12 @@ class ServeLoop:
         for r in self.policy.purge(lambda q: q.session == session):
             self._tokens.pop(r.rid, None)
             self._outstanding -= 1
+            self._finish_fill(r.rid)
+        # parked waiters of the closing session vanish with it
+        for key, ws in list(self._fill_waiters.items()):
+            keep = [w for w in ws if w[0].session != session]
+            self._outstanding -= len(ws) - len(keep)
+            self._fill_waiters[key] = keep
         self.engine.close_session(session)
         self.active_decodes.pop(session, None)
         self.last_token.pop(session, None)
@@ -176,6 +195,21 @@ class ServeLoop:
         # queued prior turn would bump the arena length and corrupt the
         # queued turn's write offset.
         prompt = np.asarray(tokens)
+        # §12 wait-for-fill: a COLD submit whose full-page prefix is
+        # already being filled by an in-flight request parks behind that
+        # filler — it re-enters intake on fill completion and adopts the
+        # indexed pages instead of prefilling them a second time
+        key = self._fill_key(prompt) if hist == 0 else None
+        if key is not None and key in self._active_fills:
+            r = Request(new_tokens=len(prompt), history_tokens=0,
+                        arrival=now, deadline=ddl, session=session)
+            self._fill_waiters[key].append(
+                (r, prompt, decode_tokens, sampling))
+            self._session_pending[session] = \
+                pending + len(prompt) + decode_tokens
+            self._outstanding += 1
+            self.coalesced_prefills += 1
+            return r
         reusable = self.engine.adopt_prefix(session, prompt) if hist == 0 \
             else 0
         tokens = prompt[reusable:]
@@ -190,7 +224,58 @@ class ServeLoop:
             pending + len(tokens) + decode_tokens
         self.policy.enqueue(r, now)
         self._outstanding += 1
+        # this request will index new full pages: register it as the
+        # filler so identical cold submits park instead of duplicating
+        if key is not None and key not in self._active_fills and \
+                reusable < len(key):
+            self._active_fills[key] = r.rid
+            self._fill_waiters[key] = []
         return r
+
+    def _fill_key(self, prompt: np.ndarray) -> Optional[Tuple[int, ...]]:
+        """Coalescing key: the prompt's full-page chunk prefix (≥ 1 full
+        page, keeping 1 token of true suffix).  None when the engine has
+        no radix index or the prompt spans no full page."""
+        eng = self.engine
+        if not getattr(eng, "_paged", False) or eng.arena.index is None:
+            return None
+        ps = eng.arena.page_size
+        n_full = max(len(prompt) - 1, 0) // ps
+        if n_full == 0:
+            return None
+        return tuple(int(t) for t in prompt[:n_full * ps])
+
+    def _finish_fill(self, rid: int) -> None:
+        """Filler completion (or cancellation): release its parked
+        waiters back through normal intake — they adopt whatever the
+        radix index now holds (the full filled prefix on success, less
+        on a withdrawn/abandoned filler) and queue only their true
+        suffix."""
+        key = next((k for k, v in self._active_fills.items() if v == rid),
+                   None)
+        if key is None:
+            return
+        del self._active_fills[key]
+        waiters = self._fill_waiters.pop(key, [])
+        now = self.clock()
+        for r, prompt, decode_tokens, sampling in waiters:
+            s = r.session
+            self._dec_pending(s, len(prompt) + decode_tokens)
+            self._outstanding -= 1
+            pending = self._session_pending.get(s, 0)
+            hist = self.engine.history(s) + pending
+            reusable = self.engine.adopt_prefix(s, prompt) if hist == 0 \
+                else 0
+            suffix = prompt[reusable:]
+            r.new_tokens = len(suffix)
+            r.history_tokens = hist + reusable
+            r.reusable_prefix = reusable
+            self._tokens[r.rid] = PendingRequest(
+                r, suffix, decode_tokens, prompt=prompt, sampling=sampling)
+            self._session_pending[s] = \
+                pending + len(suffix) + decode_tokens
+            self.policy.enqueue(r, now)
+            self._outstanding += 1
 
     def _admission_gate(self, session: int, tokens: np.ndarray,
                         now: float, ddl: Optional[float]
@@ -244,6 +329,9 @@ class ServeLoop:
         if not others and session not in self.active_decodes and \
                 self.engine.history(session) <= pr.req.reusable_prefix:
             self.engine.close_session(session)
+        # a withdrawn filler releases its waiters (they adopt whatever
+        # the index holds and prefill the rest themselves)
+        self._finish_fill(rid)
         return pr
 
     # ------------------------------------------------- decode bookkeeping
@@ -375,6 +463,7 @@ class ServeLoop:
             self._start_decoding(r.session, firsts[r.session],
                                  pr.decode_tokens, done)
             self._outstanding -= 1
+            self._finish_fill(r.rid)         # release parked waiters
 
     def _run_chunk(self, work: ChunkWork) -> None:
         now = self.clock()
@@ -386,8 +475,35 @@ class ServeLoop:
             # are accounted by ChunkWork.done_tokens)
             r.history_tokens = self.engine.history(r.session)
         pr = self._tokens[r.rid]
+        # §12 chunk-level matching: re-probe the radix index at this
+        # chunk boundary — pages indexed since submit (another request's
+        # fill that was still in flight back then) are adopted instead
+        # of re-prefilled.  match_extend self-gates on page alignment
+        # and keeps ≥ 1 token of true suffix, so the final chunk always
+        # dispatches and produces the first-token logits.
+        adopt = 0
+        if self.chunk_matching and getattr(self.engine, "_paged", False) \
+                and self.engine.arena.index is not None:
+            rem = pr.tokens[work.done_tokens:]
+            if len(rem) > 1:
+                if self.engine.history(r.session) == 0:
+                    # cold at submit, warm now: the first chunk gets the
+                    # full-prompt match the submit-time probe missed
+                    adopt = self.engine.adopt_prefix(r.session, rem)
+                    # count it with the chunk-boundary hits: the submit
+                    # probe missed these pages, the re-probe found them
+                    self.engine.arena.chunk_hit_tokens += adopt
+                else:
+                    adopt = self.engine.arena.match_extend(
+                        r.session, [int(t) for t in rem[:-1]])
+        if adopt:
+            self._dec_pending(r.session, adopt)
+            work.chunk_tokens += adopt   # on_complete advances past them
+            work.is_last = work.is_last or \
+                (work.done_tokens + work.chunk_tokens >= len(pr.tokens))
         chunk = np.asarray(
-            pr.tokens[work.done_tokens:work.done_tokens + work.chunk_tokens])
+            pr.tokens[work.done_tokens + adopt:
+                      work.done_tokens + work.chunk_tokens])
         px = self.engine.packed_executor
         if px is not None:
             # a long-prefill chunk shares the packed stream with the
@@ -416,6 +532,7 @@ class ServeLoop:
             self._start_decoding(r.session, firsts[r.session],
                                  pr.decode_tokens, done)
             self._outstanding -= 1
+            self._finish_fill(r.rid)         # release parked waiters
 
     def _run_decode_only(self) -> None:
         """No prefill work this tick: advance every in-flight session in
@@ -535,6 +652,16 @@ class ServeLoop:
                                   len(pr.tokens) + pr.decode_tokens)
             self.tracker.note_abandoned(r)
             n += 1
+        # parked wait-for-fill requests never reached the policy queue —
+        # a timeout must not lose them untracked either
+        for ws in self._fill_waiters.values():
+            for r, prompt, decode_tokens, _ in ws:
+                self._dec_pending(r.session, len(prompt) + decode_tokens)
+                self._outstanding -= 1
+                self.tracker.note_abandoned(r)
+                n += 1
+        self._fill_waiters.clear()
+        self._active_fills.clear()
         return n
 
     # --------------------------------------------------------- recovery

@@ -65,6 +65,13 @@ class CostModel:
     # decode_handoff moves a prefilled session to a decode instance.
     handoff_per_token: float = 2.9e-7
     handoff_launch: float = 5.0e-4
+    # §12 host-tier page spill: promoting an evicted prefix page back
+    # from the host pool is a host→device copy over PCIe-class
+    # bandwidth — roughly an order of magnitude slower per token than
+    # the NVLink handoff path, but still far cheaper than re-prefilling
+    # the page (α·l² compute + writes).  Billed per token restored.
+    swap_beta: float = 3.0e-6
+    swap_launch: float = 1.5e-4
     # §10 speculative decoding: host-side draft proposal cost per draft
     # token (n-gram table lookups — tiny next to a dispatch; a
     # small-model draft would calibrate this much higher)
@@ -74,6 +81,14 @@ class CostModel:
     def handoff_time(self, ctx: int) -> float:
         """Migrate ``ctx`` cached tokens engine→engine (§9)."""
         return self.handoff_launch + self.handoff_per_token * max(ctx, 0)
+
+    def swap_in_time(self, tokens: int) -> float:
+        """Promote ``tokens`` spilled KV tokens host→device (§12).
+        Zero when nothing is promoted — the launch is only paid when a
+        copy actually crosses PCIe."""
+        if tokens <= 0:
+            return 0.0
+        return self.swap_launch + self.swap_beta * tokens
 
     def predicted_wait(self, queue_len: int, backlog_tokens: int,
                        active_decodes: int = 0,

@@ -63,6 +63,13 @@ class SimConfig:
     # (CostModel.page_size separately prices the page-table walk.)
     page_size: Optional[int] = None
     prefix_reuse: bool = False
+    # §12 host-tier page spill: capacity (in pages) of the host pool
+    # that catches device-evicted prefix pages.  Requests annotate the
+    # host-resident part of their reusable prefix (Request.host_prefix);
+    # with a pool those tokens stay adoptable but bill
+    # CostModel.swap_in_time for the PCIe promotion, without one they
+    # were dropped at eviction and fall out of the adoptable prefix.
+    host_pool_pages: int = 0
     # §9 spatial disaggregation: when a prefill-role instance finishes a
     # request with decode budget, the session's KV hands off (device-to-
     # device, priced by CostModel.handoff_time) to the least-decode-
@@ -155,6 +162,7 @@ class ClusterSim:
         self.pools = pools or {}
         self.handoffs = 0
         self.handoff_tokens = 0
+        self.swapped_pages = 0        # §12 host→device prefix promotions
         # §11: optional FaultInjector (set by apply_faults) + counters
         self.faults = None
         self.handoff_retries = 0
@@ -179,15 +187,34 @@ class ClusterSim:
 
     def _admit_prefix(self, r: Request) -> None:
         """§8 prefix-reuse admission: shift the page-aligned part of the
-        request's reusable prefix from new tokens into history."""
+        request's reusable prefix from new tokens into history.
+
+        §12 host tier: the part of the prefix annotated host-resident
+        (``host_prefix``) only survives eviction when the sim has a
+        host pool — it is then billed one PCIe promotion
+        (:meth:`CostModel.swap_in_time`) before the suffix prefill can
+        start; without a pool those pages were dropped at eviction, so
+        they fall out of the adoptable prefix and get re-prefilled."""
         if not (self.cfg.prefix_reuse and self.cfg.page_size
                 and r.reusable_prefix > 0):
             return
         ps = self.cfg.page_size
+        host = max(0, min(r.host_prefix, r.reusable_prefix))
+        if self.cfg.host_pool_pages <= 0:
+            r.reusable_prefix -= host
+            host = 0
+        else:
+            kept = min(host, self.cfg.host_pool_pages * ps)
+            r.reusable_prefix -= host - kept   # aged out of the pool too
+            host = kept
         shift = min(r.reusable_prefix // ps * ps,
                     max(r.new_tokens - 1, 0))
         r.new_tokens -= shift
         r.history_tokens += shift
+        if host > 0 and shift > 0:
+            pages = -(-min(host, shift) // ps)
+            r.swap_time = self.cost.swap_in_time(pages * ps)
+            self.swapped_pages += pages
 
     def add_clients(self, clients, start: float = 0.0,
                     think_time: float = 0.0) -> None:
@@ -362,6 +389,13 @@ class ClusterSim:
             gather_rows = 2 * self.cfg.packed_seqs * self.cfg.arena_s_max
         service = self.cost.work_time(work, gather_rows=gather_rows) \
             * inst.speed
+        # §12: host→device page promotion gates the suffix prefill —
+        # billed once, on the request's first dispatch
+        if isinstance(work, Batch):
+            service += sum(r.swap_time for r in work.requests
+                           if r.dispatch_time is None) * inst.speed
+        elif isinstance(work, ChunkWork) and work.req.dispatch_time is None:
+            service += work.req.swap_time * inst.speed
         if self.cfg.mode == "mix" and inst.decode_sessions:
             # decode tokens fused into a packed step already paid inside
             # the work's pricing (they share the weight read); sessions

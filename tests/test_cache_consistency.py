@@ -95,9 +95,10 @@ def test_interleaved_mixed_steps_match_dense_oracle():
     params, _ = tr.init_params(cfg, KEY)
     rng = np.random.default_rng(31)
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
-                                           packed=True,
+                                           packed=True, paged_kv=False,
                                            token_buckets=(64, 128, 256)))
-    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                           paged_kv=False))
 
     turn1 = rng.integers(0, cfg.vocab_size, 11)
     turn2 = rng.integers(0, cfg.vocab_size, 8)

@@ -76,9 +76,11 @@ def pair(cfg):
     """(bucketed-decode engine, dense-gather oracle) on shared params."""
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                           decode_buckets=(1, 2, 4)))
+                                           decode_buckets=(1, 2, 4),
+                                           paged_kv=False))
     ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                           arena_decode=False))
+                                           arena_decode=False,
+                                           paged_kv=False))
     return eng, ora
 
 
@@ -131,9 +133,11 @@ def test_decode_bucket_deep_cache_parity():
     rng = np.random.default_rng(37)
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=32,
-                                           decode_buckets=(1, 2)))
+                                           decode_buckets=(1, 2),
+                                           paged_kv=False))
     ora = Engine(cfg, params, EngineConfig(num_slots=4, max_len=32,
-                                           arena_decode=False))
+                                           arena_decode=False,
+                                           paged_kv=False))
     toks = rng.integers(0, cfg.vocab_size, 29)
     f1 = eng.prefill_batch([0], [toks])
     f2 = ora.prefill_batch([0], [toks])
@@ -173,7 +177,8 @@ def test_decode_ladder_tops_out_at_arena_depth_in_engine():
     rng = np.random.default_rng(43)
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                           decode_buckets=(1, 2)))
+                                           decode_buckets=(1, 2),
+                                           paged_kv=False))
     assert eng.decode_executor.decode_buckets == (1, 2, 8)
     prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(3)]
     f = eng.prefill_batch([0, 1, 2], prompts)
@@ -207,7 +212,7 @@ def test_decode_pad_rows_counters():
     # packed=False pins prefill to the dense executor so its per-kind
     # hit rates stay observable next to the bucketed decode counters
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                           packed=False,
+                                           packed=False, paged_kv=False,
                                            decode_buckets=(1, 2, 4)))
     f = eng.prefill_batch([0, 1, 2], [rng.integers(0, cfg.vocab_size, 4)
                                       for _ in range(3)])

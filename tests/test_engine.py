@@ -52,7 +52,9 @@ def test_engine_matches_pure_forward(arch):
 
 def test_arena_slots(qwen):
     cfg, params = qwen
-    eng = Engine(cfg, params, EngineConfig(num_slots=2, max_len=32))
+    # slot-occupancy semantics are the slot-arena baseline's (§12)
+    eng = Engine(cfg, params, EngineConfig(num_slots=2, max_len=32,
+                                           paged_kv=False))
     eng.open_session(0)
     eng.open_session(1)
     assert eng.arena.free_slots == 0
@@ -74,7 +76,9 @@ def test_session_overflow_guard(qwen):
 
 def test_executor_capture_and_reuse(qwen):
     cfg, params = qwen
-    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64))
+    # dense (L, B) grid capture path — a slot/dense-baseline concern (§12)
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64,
+                                           paged_kv=False))
     rng = np.random.default_rng(2)
     for s in range(3):
         eng.prefill_batch([s], [rng.integers(0, cfg.vocab_size, 6)],
@@ -94,7 +98,8 @@ def test_decode_bucket_compile_cache(qwen):
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
                                            decode_buckets=(1, 2, 4, 8)))
     base = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                            arena_decode=False))
+                                            arena_decode=False,
+                                            paged_kv=False))
     rng = np.random.default_rng(7)
     n = 5
     prompts = [rng.integers(0, cfg.vocab_size, 4) for _ in range(n)]

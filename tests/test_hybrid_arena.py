@@ -38,7 +38,8 @@ def _engines(arch, **kw):
     defaults.update(kw)
     eng = Engine(cfg, params, EngineConfig(**defaults))
     ora = Engine(cfg, params, EngineConfig(
-        num_slots=4, max_len=64, packed=False, arena_decode=False))
+        num_slots=4, max_len=64, packed=False, arena_decode=False,
+        paged_kv=False))
     return cfg, params, eng, ora
 
 
@@ -189,9 +190,12 @@ def test_dense_cause_accounting_hybrid():
     params, _ = tr.init_params(cfg, KEY)
     rng = np.random.default_rng(6)
     # forced: off-ladder total on a packed engine falls to dense
+    # dense-cause accounting is a slot/dense-baseline concern: the paged
+    # pool has no dense gather fallback, so pin the slot arena here
     eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=128,
                                            token_buckets=(16,),
-                                           decode_buckets=(1, 2)))
+                                           decode_buckets=(1, 2),
+                                           paged_kv=False))
     eng.step_mixed([(0, rng.integers(0, cfg.vocab_size, 30))], [])
     causes = eng.stats()["dense_dispatches_by_cause"]
     assert causes["prefill"] == {"forced": 1}
@@ -202,7 +206,8 @@ def test_dense_cause_accounting_hybrid():
     # requested: arena decode off → every decode tick is baseline-dense
     half = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64,
                                             token_buckets=(16, 32),
-                                            arena_decode=False))
+                                            arena_decode=False,
+                                            paged_kv=False))
     half.prefill_batch([0], [rng.integers(0, cfg.vocab_size, 4)])
     half.decode_batch([0], [1], steps=2)
     causes = half.stats()["dense_dispatches_by_cause"]
@@ -210,7 +215,8 @@ def test_dense_cause_accounting_hybrid():
     # requested: pinned (L, B) bucket and packed=False engines
     base = Engine(cfg, params, EngineConfig(num_slots=4, max_len=64,
                                             packed=False,
-                                            arena_decode=False))
+                                            arena_decode=False,
+                                            paged_kv=False))
     base.prefill_batch([0], [rng.integers(0, cfg.vocab_size, 6)])
     base.decode_batch([0], [1])
     causes = base.stats()["dense_dispatches_by_cause"]

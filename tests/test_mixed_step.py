@@ -30,14 +30,15 @@ def build(cfg, packed: bool):
     params, _ = tr.init_params(cfg, KEY)
     return params, Engine(cfg, params, EngineConfig(
         num_slots=8, max_len=128, chunk_tokens=32, packed=packed,
-        token_buckets=(64, 128, 256)))
+        token_buckets=(64, 128, 256), paged_kv=False))
 
 
 def pair(cfg):
     """(mixed engine, dense oracle engine) sharing one param set."""
     params, mixed = build(cfg, packed=True)
     oracle = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
-                                              chunk_tokens=32))
+                                              chunk_tokens=32,
+                                              paged_kv=False))
     return mixed, oracle
 
 
@@ -163,7 +164,8 @@ def test_mixed_step_fallback_paths():
     cfg = CONFIGS["qwen3-4b"]()
     rng = np.random.default_rng(19)
     params, eng = build(cfg, packed=True)
-    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                           paged_kv=False))
     firsts, _ = stage_histories((eng, ora), cfg, rng)
     # 3 × 90 prefill tokens bust the (64, 128, 256) ladder
     bigs = [rng.integers(0, cfg.vocab_size, 90) for _ in range(3)]
@@ -194,7 +196,8 @@ def test_long_chunks_ride_token_buckets():
     rng = np.random.default_rng(29)
     params, eng = build(cfg, packed=True)
     ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
-                                           chunk_tokens=32))
+                                           chunk_tokens=32,
+                                           paged_kv=False))
     long_toks = rng.integers(0, cfg.vocab_size, 80)
     tok = eng.prefill_long(0, long_toks)
     assert eng.packed_executor.dispatches == 3          # ceil(80 / 32)

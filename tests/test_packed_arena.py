@@ -114,7 +114,7 @@ def build_pair(cfg):
     """(arena engine, gathered-cache packed engine) on shared params."""
     params, _ = tr.init_params(cfg, KEY)
     kw = dict(num_slots=8, max_len=128, chunk_tokens=32, packed=True,
-              token_buckets=(64, 128, 256))
+              token_buckets=(64, 128, 256), paged_kv=False)
     eng = Engine(cfg, params, EngineConfig(**kw, arena_prefill=True))
     ora = Engine(cfg, params, EngineConfig(**kw, arena_prefill=False))
     return params, eng, ora
@@ -177,8 +177,9 @@ def test_packed_arena_parity_interpret_mode():
     try:
         eng = Engine(cfg, params, EngineConfig(
             num_slots=8, max_len=128, chunk_tokens=32, packed=True,
-            token_buckets=(64, 128, 256)))
-        ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+            token_buckets=(64, 128, 256), paged_kv=False))
+        ora = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                               paged_kv=False))
         seqs = [rng.integers(0, cfg.vocab_size, l) for l in (7, 18)]
         f1 = eng.prefill_batch([0, 1], seqs)
         f2 = ora.prefill_batch([0, 1], seqs)
@@ -207,7 +208,7 @@ def test_packed_ticks_run_zero_slot_copies():
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(
         num_slots=8, max_len=128, chunk_tokens=32, packed=True,
-        token_buckets=(64, 128, 256)))
+        token_buckets=(64, 128, 256), paged_kv=False))
     f = eng.prefill_batch([0, 1], [rng.integers(0, cfg.vocab_size, 6)
                                    for _ in range(2)])
     eng.prefill_long(2, rng.integers(0, cfg.vocab_size, 80))
@@ -228,7 +229,7 @@ def test_dense_fallbacks_still_gather():
     cfg = CONFIGS["qwen3-4b"]()
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=64,
-                                           packed=True,
+                                           packed=True, paged_kv=False,
                                            token_buckets=(16,)))
     eng.prefill_packed([0], [rng.integers(0, cfg.vocab_size, 30)])
     assert eng.packed_executor.total_tokens == 0     # off-ladder
@@ -241,14 +242,14 @@ def test_dense_fallbacks_still_gather():
     mcfg = get_smoke("mamba2-2.7b")
     mparams, _ = tr.init_params(mcfg, KEY)
     meng = Engine(mcfg, mparams, EngineConfig(num_slots=4, max_len=64,
-                                              packed=True))
+                                              packed=True, paged_kv=False))
     assert meng.packed_executor is not None
     out = meng.prefill_batch([0], [rng.integers(0, mcfg.vocab_size, 6)])
     assert 0 in out
     assert meng.arena.gather_calls == 0
     # the dense baseline survives behind an explicit request
     base = Engine(mcfg, mparams, EngineConfig(num_slots=4, max_len=64,
-                                              packed=False))
+                                              packed=False, paged_kv=False))
     assert base.packed_executor is None
     out = base.prefill_batch([0], [rng.integers(0, mcfg.vocab_size, 6)])
     assert 0 in out
@@ -284,7 +285,7 @@ def test_pad_segments_confined_to_scratch_row(path):
     rng = np.random.default_rng(23)
     params, _ = tr.init_params(cfg, KEY)
     eng = Engine(cfg, params, EngineConfig(
-        num_slots=8, max_len=64, packed=(path != "grid"),
+        num_slots=8, max_len=64, packed=(path != "grid"), paged_kv=False,
         arena_prefill=(path == "arena"), token_buckets=(64, 128)))
     # a live victim session with cached history, NOT in the batch
     victim_toks = rng.integers(0, cfg.vocab_size, 10)

@@ -95,7 +95,8 @@ def test_packed_beats_grid_padding(qwen):
     packed_pad = eng.packed_executor.padded_tokens
 
     grid_bucket = eng.grid.nearest_graph(lens)
-    eng2 = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128))
+    eng2 = Engine(cfg, params, EngineConfig(num_slots=8, max_len=128,
+                                            paged_kv=False))
     eng2.prefill_batch([0, 1, 2, 3], seqs, bucket=grid_bucket.key)
     dense_pad = eng2.executor.padded_tokens
 
@@ -121,7 +122,9 @@ def test_packed_fallback_paths(qwen):
     with pytest.raises(ValueError):
         PackedBucketExecutor(get_smoke("hubert-xlarge"))
     # off-ladder total → dense fallback, counters stay on the dense side
-    eng = packed_engine(cfg, params, token_buckets=(16,), max_len=64)
+    # (a slot-arena concern: the paged pool splits instead, §12)
+    eng = packed_engine(cfg, params, token_buckets=(16,), max_len=64,
+                        paged_kv=False)
     eng.prefill_packed([0], [rng.integers(0, cfg.vocab_size, 30)])
     assert eng.packed_executor.total_tokens == 0
     assert eng.executor.total_tokens == 30

@@ -38,7 +38,7 @@ def engines():
     for arena in (True, False):
         eng = Engine(cfg, params, EngineConfig(
             num_slots=8, max_len=64, packed=True, arena_prefill=arena,
-            token_buckets=(64, 128)))
+            token_buckets=(64, 128), paged_kv=False))
         eng.prefill_batch([9], [rng.integers(0, cfg.vocab_size, 10)])
         out["arena" if arena else "gather"] = (cfg, eng)
     return out

@@ -176,7 +176,7 @@ def build_pair(cfg, params, **paged_kw):
               token_buckets=(64, 128, 256))
     eng = Engine(cfg, params, EngineConfig(**kw, paged_kv=True,
                                            page_size=16, **paged_kw))
-    ora = Engine(cfg, params, EngineConfig(**kw))
+    ora = Engine(cfg, params, EngineConfig(**kw, paged_kv=False))
     return eng, ora
 
 
@@ -317,9 +317,27 @@ def test_paged_interpret_backend_parity(stack):
 
 
 def test_paged_engine_guards():
-    """paged_kv demands a pure-attention causal architecture and the
-    packed + arena execution paths."""
-    cfg = get_smoke("mamba2-2.7b")
+    """§12: paged_kv now covers every packed_ok config (windowed rings,
+    SSM state pages) but still demands a causal decoder stack AND the
+    packed + arena execution paths — collisions raise a clear
+    ValueError at construction, not a deep kernel assert."""
+    cfg = get_smoke("qwen3-4b")
     params, _ = tr.init_params(cfg, KEY)
-    with pytest.raises(AssertionError):
-        Engine(cfg, params, EngineConfig(paged_kv=True))
+    with pytest.raises(ValueError, match="dense gather fallback"):
+        Engine(cfg, params, EngineConfig(paged_kv=True, packed=False))
+    with pytest.raises(ValueError, match="dense gather fallback"):
+        Engine(cfg, params, EngineConfig(paged_kv=True,
+                                         arena_decode=False))
+    with pytest.raises(ValueError, match="dense gather fallback"):
+        Engine(cfg, params, EngineConfig(paged_kv=True,
+                                         arena_prefill=False))
+    ecfg = get_smoke("hubert-xlarge")            # encoder-only
+    eparams, _ = tr.init_params(ecfg, KEY)
+    with pytest.raises(ValueError, match="causal decoder stack"):
+        Engine(ecfg, eparams, EngineConfig(paged_kv=True))
+    # formerly-excluded architectures now construct paged by default
+    for arch in ("mamba2-2.7b", "mixtral-8x7b"):
+        acfg = get_smoke(arch)
+        aparams, _ = tr.init_params(acfg, KEY)
+        aeng = Engine(acfg, aparams, EngineConfig(num_slots=4, max_len=64))
+        assert aeng._paged

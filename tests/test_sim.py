@@ -272,6 +272,42 @@ def test_sim_prefix_admission_converts_new_to_history():
         assert (r.new_tokens, r.history_tokens) == (100, 0)
 
 
+def test_sim_host_spill_admission_and_swap_pricing():
+    """§12: host_prefix marks the host-resident part of a reusable
+    prefix.  With host_pool_pages == 0 that part is dropped (modeled
+    drop-on-evict: it gets re-prefilled); with a pool it stays
+    reusable, capped to the pool size, and the promotion is priced via
+    CostModel.swap_in_time on the request's first dispatch."""
+    def sim_with(**kw):
+        return ClusterSim(1, lambda i: make_policy(
+            Variant("pla_full"), H200_QWEN32B, threshold=256),
+            H200_32B, SimConfig(page_size=16, prefix_reuse=True, **kw))
+
+    # drop-on-evict: the 32 host-resident tokens are re-prefilled
+    r = Request(new_tokens=100, reusable_prefix=70, host_prefix=32,
+                arrival=0.0)
+    sim = sim_with()
+    sim.add_requests([r])
+    assert (r.new_tokens, r.history_tokens) == (68, 32)   # 38 left → 2 pages
+    assert r.swap_time == 0.0 and sim.swapped_pages == 0
+    # host pool: the spilled part stays reusable, one swap billed
+    r = Request(new_tokens=100, reusable_prefix=70, host_prefix=32,
+                arrival=0.0)
+    sim = sim_with(host_pool_pages=8)
+    sim.add_requests([r])
+    assert (r.new_tokens, r.history_tokens) == (36, 64)   # full 70 → 4 pages
+    assert sim.swapped_pages == 2                         # 32 host tokens
+    assert r.swap_time == pytest.approx(sim.cost.swap_in_time(2 * 16))
+    # pool cap: only host_pool_pages·page_size of the host part survives
+    r = Request(new_tokens=100, reusable_prefix=70, host_prefix=32,
+                arrival=0.0)
+    sim_with(host_pool_pages=1).add_requests([r])
+    assert (r.new_tokens, r.history_tokens) == (52, 48)
+    # pricing shape: zero at zero, monotone in promoted tokens
+    assert H200_32B.swap_in_time(0) == 0.0
+    assert H200_32B.swap_in_time(32) > H200_32B.swap_in_time(16) > 0.0
+
+
 def test_sim_multiturn_prefix_reuse_cuts_prefill():
     """Multi-turn trace through the simulator: prefix reuse on a paged
     arena bills strictly fewer prefill tokens and finishes the same

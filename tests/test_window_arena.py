@@ -207,20 +207,21 @@ def _greedy(params, cfg, seq):
 
 
 def test_windowed_engine_arena_resident_default_config():
-    """Acceptance: with default EngineConfig flags, the SWA config runs
-    mixed prefill + chunk + decode schedules fully arena-resident —
-    zero whole-slot gather/scatter, rolling window-deep slots, greedy
-    tokens identical to the full-forward dense oracle even with
-    cached_len ≫ window."""
+    """Acceptance (§12): with default EngineConfig flags, the SWA config
+    runs mixed prefill + chunk + decode schedules on the PAGED arena
+    with a RING page table — zero whole-slot gather/scatter, a
+    window-deep logical footprint per session, greedy tokens identical
+    to the full-forward dense oracle even with cached_len ≫ window."""
     cfg = get_smoke("mixtral-8x7b")            # sliding_window = 32
     params, _ = tr.init_params(cfg, KEY)
     rng = np.random.default_rng(5)
     eng = Engine(cfg, params, EngineConfig(
         num_slots=4, max_len=128, chunk_tokens=16,
         token_buckets=(16, 32), decode_buckets=(1, 2, 4)))
-    assert eng._rolling and eng.arena.scratch is not None
-    depth = eng.arena.arena[0]["k"].shape[2]
-    assert depth < 128, "slots must be window-deep, not S_max-deep"
+    assert eng._paged and eng._rolling
+    assert eng.arena.ring_pages is not None
+    depth = eng.arena.ring_pages * eng.arena.page_size
+    assert depth < 128, "ring table must be window-deep, not S_max-deep"
 
     ctx = {}
     t1 = rng.integers(0, cfg.vocab_size, 10)
@@ -271,7 +272,8 @@ def test_windowed_dense_baseline_stays_available():
     rng = np.random.default_rng(9)
     eng = Engine(cfg, params, EngineConfig(num_slots=4, max_len=128,
                                            packed=False,
-                                           arena_decode=False))
+                                           arena_decode=False,
+                                           paged_kv=False))
     assert not eng._rolling and eng.packed_executor is None
     assert eng.arena.arena[0]["k"].shape[2] == 128
     t1 = rng.integers(0, cfg.vocab_size, 10)
